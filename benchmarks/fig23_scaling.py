@@ -1,0 +1,83 @@
+"""Figs. 2 & 3 — scalability across features (n sweeps, m/node fixed) and
+across data points (m sweeps, n fixed), for N in {2, 4, 8} nodes.
+
+The paper compares CPU vs GPU backends; this container has one CPU, so we
+report (a) wall-clock of the full Bi-cADMM solve (reference engine, jitted)
+and (b) the *modelled* per-iteration device work + collective bytes of the
+distributed engine (feature blocks M = 4), which is what moves between
+hardware backends. s_l = 0.8 as in the paper.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax.numpy as jnp
+
+from repro.core.bicadmm import BiCADMM, BiCADMMConfig
+from repro.data.synthetic import SyntheticSpec, make_sparse_regression
+
+from .common import emit, save_json
+
+
+def solve_time(n, m_per_node, n_nodes, iters=60):
+    spec = SyntheticSpec(n_nodes=n_nodes, m_per_node=m_per_node,
+                         n_features=n, sparsity_level=0.8)
+    As, bs, _ = make_sparse_regression(0, spec)
+    cfg = BiCADMMConfig(kappa=spec.kappa, gamma=10.0, rho_c=4.0,
+                        max_iter=iters, tol=0.0, polish=False)
+    solver = BiCADMM("squared", cfg)
+    res = solver.fit(As, bs)           # includes jit compile on first call
+    jnp.asarray(res.z).block_until_ready()
+    t0 = time.perf_counter()
+    res = solver.fit(As, bs)
+    jnp.asarray(res.z).block_until_ready()
+    dt = time.perf_counter() - t0
+    # modelled per-iteration comms of the hierarchical engine (M=4 GPUs):
+    # inner AllReduce of partial predictions (m_i, ) per inner iter +
+    # consensus psum of (n,) per outer iter (DESIGN §5).
+    M = 4
+    bytes_inner = 4 * m_per_node * cfg.inner_iters
+    bytes_outer = 4 * n
+    return dt, bytes_inner + bytes_outer
+
+
+def run(feature_ns, sample_ms, n_fixed, m_fixed):
+    out = {"feature_scaling": [], "sample_scaling": []}
+    for N in (2, 4, 8):
+        for n in feature_ns:
+            dt, wire = solve_time(n, m_fixed, N)
+            out["feature_scaling"].append(
+                {"N": N, "n": n, "m_per_node": m_fixed, "seconds": dt,
+                 "modelled_wire_bytes_per_outer_iter": wire})
+        for m in sample_ms:
+            dt, wire = solve_time(n_fixed, m, N)
+            out["sample_scaling"].append(
+                {"N": N, "n": n_fixed, "m_per_node": m, "seconds": dt,
+                 "modelled_wire_bytes_per_outer_iter": wire})
+    return out
+
+
+def main(full: bool = False):
+    if full:   # paper sizes
+        kw = dict(feature_ns=(1000, 2500, 5000, 10000),
+                  sample_ms=(25_000, 100_000, 300_000),
+                  n_fixed=4000, m_fixed=800)
+    else:
+        kw = dict(feature_ns=(200, 400, 800),
+                  sample_ms=(500, 1000, 2000),
+                  n_fixed=400, m_fixed=200)
+    out = run(**kw)
+    save_json("fig23_scaling.json", out)
+    for row in out["feature_scaling"]:
+        emit(f"fig2/N={row['N']}/n={row['n']}", row["seconds"],
+             f"wire={row['modelled_wire_bytes_per_outer_iter']}")
+    for row in out["sample_scaling"]:
+        emit(f"fig3/N={row['N']}/m={row['m_per_node']}", row["seconds"],
+             f"wire={row['modelled_wire_bytes_per_outer_iter']}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(**vars(ap.parse_args()))

@@ -1,0 +1,62 @@
+"""Fig. 4 — data-movement accounting.
+
+The paper measures CPU<->GPU PCIe transfer time during Algorithm 2. A TPU
+mesh has no PCIe staging inside the hot loop, so we reproduce the
+*measurement* as (a) a host->device transfer microbenchmark (the ingest
+path that does exist) and (b) the modelled ICI bytes per Bi-cADMM
+iteration for the production mesh — the quantity that replaces PCIe
+traffic in the TPU-native design (DESIGN §3.5).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit, save_json
+
+
+def host_to_device(nbytes: int, reps: int = 5) -> float:
+    arr = np.random.default_rng(0).standard_normal(nbytes // 4) \
+        .astype(np.float32)
+    jax.device_put(arr).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.device_put(arr).block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def modelled_ici(n: int, m_per_node: int, inner_iters: int = 15,
+                 M: int = 16, link_gbps: float = 50e9) -> dict:
+    """Per-outer-iteration wire bytes of the sharded engine (DESIGN §5)."""
+    inner = 4 * m_per_node * inner_iters          # psum of (m_i,) f32
+    consensus = 4 * (n // M)                       # psum of the z shard
+    scalars = 4 * 64 * 3                           # batched-ladder psums
+    total = inner + consensus + scalars
+    return {"inner_allreduce": inner, "consensus": consensus,
+            "projection_scalars": scalars, "total": total,
+            "seconds_at_link": total / link_gbps}
+
+
+def main(full: bool = False):
+    out = {"host_to_device": [], "ici_model": []}
+    sizes = [2**20, 2**24, 2**27] if not full else [2**20, 2**24, 2**28,
+                                                    2**30]
+    for nb in sizes:
+        dt = host_to_device(nb)
+        out["host_to_device"].append(
+            {"bytes": nb, "seconds": dt, "GBps": nb / dt / 1e9})
+        emit(f"fig4/h2d/{nb}", dt, f"{nb / dt / 1e9:.2f}GB/s")
+    for n, m in [(1000, 800), (4000, 800), (10000, 800), (4000, 25000),
+                 (4000, 300000)]:
+        mod = modelled_ici(n, m)
+        out["ici_model"].append({"n": n, "m_per_node": m, **mod})
+        emit(f"fig4/ici/n={n}/m={m}", mod["seconds_at_link"],
+             f"total={mod['total']}B")
+    save_json("fig4_transfer.json", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""Roofline analysis (§Roofline): the three terms per (arch x shape x mesh)
+from the dry-run records.
+
+    compute    = HLO_FLOPs_per_dev / peak_FLOPs            [s]
+    memory     = HLO_bytes_per_dev / HBM_bw                [s]
+    collective = collective_bytes_per_dev / ICI_link_bw    [s]
+
+The dry-run walker already reports *per-device* quantities (the compiled
+module is the per-device partition), so no extra division by chip count.
+MODEL_FLOPS uses 6·N·D for training, 2·N·D for prefill and 2·N_active·B
+for decode; ratio = MODEL_FLOPS / (HLO_FLOPs x devices) shows how much of
+the compiled compute is "useful" (remat / masked-attention waste shows up
+here).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES, TPU_V5E
+
+from .common import RESULTS_DIR, save_json
+
+HW = TPU_V5E
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    tokens = shape.seq_len * shape.global_batch
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch          # decode: 1 token/seq
+
+
+def advice(dom: str, rec: dict) -> str:
+    kinds = rec["hlo_walk"].get("collective_by_kind", {})
+    biggest = max(kinds, key=kinds.get) if kinds else "none"
+    return {
+        "compute": "reduce recompute (remat policy) and masked-attention "
+                   "waste; the MXU is the wall",
+        "memory": "fuse / re-tile the dominant streaming op and keep "
+                  "activations sequence-sharded to cut HBM traffic",
+        "collective": f"re-shard to shrink {biggest} volume (move work "
+                      "from TP activations to FSDP weights, or overlap "
+                      "with compute)",
+    }[dom]
+
+
+def analyze(records: list[dict]) -> list[dict]:
+    rows = []
+    for rec in records:
+        if rec.get("status") != "ok":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "status": rec.get("status"),
+                         "reason": rec.get("reason", rec.get("error"))})
+            continue
+        w = rec["hlo_walk"]
+        dev = rec["n_devices"]
+        t_c = w["flops"] / HW.peak_bf16_flops
+        t_m = w["hbm_bytes"] / HW.hbm_bandwidth
+        t_x = w["collective_bytes"] / HW.ici_link_bandwidth
+        terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+        dom = max(terms, key=terms.get)
+        mf = model_flops(rec["arch"], rec["shape"])
+        hlo_global = w["flops"] * dev
+        step = max(terms.values())
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "status": "ok",
+            "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "dominant": dom,
+            "model_flops": mf,
+            "useful_ratio": mf / max(hlo_global, 1.0),
+            "roofline_fraction": t_c / max(step, 1e-30),
+            "hbm_gb": rec["memory"].get("hbm_per_device", 0) / 1e9,
+            "hbm_gb_tpu_bf16_est": rec["memory"].get(
+                "hbm_per_device_tpu_bf16_est", 0) / 1e9,
+            "advice": advice(dom, rec),
+        })
+    return rows
+
+
+def to_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | MODEL/HLO | roofline frac | HBM GB (TPU est) |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"— skipped: {str(r.get('reason'))[:60]} | | | | | | |\n")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} "
+            f"| {r['hbm_gb']:.1f} ({r['hbm_gb_tpu_bf16_est']:.1f}) |\n")
+    return "".join(out)
+
+
+def main(path: str | None = None) -> None:
+    path = path or os.path.join(RESULTS_DIR, "dryrun_all.json")
+    if not os.path.exists(path):
+        print(f"roofline: no dry-run records at {path}; run "
+              "`python -m repro.launch.dryrun --all --both-meshes --out "
+              f"{path}` first")
+        return
+    with open(path) as f:
+        records = json.load(f)
+    rows = analyze(records)
+    save_json("roofline.json", rows)
+    md = to_markdown(rows)
+    with open(os.path.join(RESULTS_DIR, "roofline.md"), "w") as f:
+        f.write(md)
+    ok = [r for r in rows if r.get("status") == "ok"]
+    for r in ok:
+        print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+              f"{max(r['compute_s'], r['memory_s'], r['collective_s'])*1e6:.0f},"
+              f"dom={r['dominant']};frac={r['roofline_fraction']:.2f}")
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        print(f"# worst roofline fraction: {worst['arch']} x "
+              f"{worst['shape']} ({worst['roofline_fraction']:.2f})")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default=None)
+    main(**vars(ap.parse_args()))

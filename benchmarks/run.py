@@ -1,0 +1,39 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # CPU-scaled sizes
+    PYTHONPATH=src python -m benchmarks.run --full     # paper sizes
+
+Each line is ``name,us_per_call,derived``. The roofline section reads the
+dry-run records (benchmarks/results/dryrun_all.json) if present.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from . import (fig1_convergence, fig23_scaling, fig4_transfer, roofline,
+               table1_compare)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (hours on CPU)")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    print("# Fig 1 — residual convergence vs rho_b")
+    fig1_convergence.main(full=args.full)
+    print("# Table 1 — Bi-cADMM vs exact (B&B) vs Lasso (FISTA)")
+    table1_compare.main(full=args.full)
+    print("# Figs 2-3 — feature / sample scaling")
+    fig23_scaling.main(full=args.full)
+    print("# Fig 4 — transfer / wire-byte accounting")
+    fig4_transfer.main(full=args.full)
+    print("# Roofline — from dry-run records")
+    roofline.main()
+    print(f"# total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Distributed Bi-cADMM on a device mesh via shard_map — the production
+engine with the paper's hierarchical (nodes x feature-blocks) layout.
+
+Run with emulated devices (the launcher does this for you on CPU):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/distributed_sparse_fit.py
+"""
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bicadmm import BiCADMMConfig
+from repro.core.sharded import ShardedBiCADMM
+from repro.data.synthetic import SyntheticSpec, make_sparse_regression
+
+
+def main():
+    mesh = jax.make_mesh((4, 2), ("nodes", "feat"))
+    print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"({mesh.devices.size} devices)")
+
+    spec = SyntheticSpec(n_nodes=4, m_per_node=400, n_features=256,
+                         sparsity_level=0.8)
+    As, bs, x_true = make_sparse_regression(0, spec)
+    A_global = jnp.asarray(np.asarray(As).reshape(-1, spec.n_features))
+    b_global = jnp.asarray(np.asarray(bs).reshape(-1))
+
+    cfg = BiCADMMConfig(kappa=spec.kappa, gamma=1000.0, rho_c=1.0,
+                        max_iter=300, inner_iters=10)
+    solver = ShardedBiCADMM("squared", cfg, mesh=mesh)
+    res = solver.fit(A_global, b_global)
+
+    sup_true = np.abs(np.asarray(x_true)) > 0
+    sup_hat = np.asarray(res.support)
+    f1 = 2 * (sup_hat & sup_true).sum() / (sup_hat.sum() + sup_true.sum())
+    print(f"sharded Bi-cADMM: iters={int(res.iters)} support-F1={f1:.3f} "
+          f"p_r={float(res.p_r):.2e} b_r={float(res.b_r):.2e}")
+    print("collectives per outer iteration: one (m_i,) psum over 'feat' "
+          "per inner step + one z-shard psum over 'nodes' + scalar ladders")
+
+
+if __name__ == "__main__":
+    main()

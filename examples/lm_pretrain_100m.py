@@ -1,0 +1,29 @@
+"""End-to-end driver: pretrain a ~100M-parameter qwen3-family LM for a few
+hundred steps on the synthetic token stream, with checkpointing.
+
+    PYTHONPATH=src python examples/lm_pretrain_100m.py [--steps 300]
+
+This is the same launch.train driver the production mesh uses — only the
+config size differs (the dry-run proves the full configs compile at scale).
+"""
+import argparse
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+    train.main([
+        "--arch", "qwen3-8b", "--reduced",
+        "--d-model", "640", "--layers", "10", "--vocab", "32768",
+        "--steps", str(args.steps), "--batch", "4", "--seq", "256",
+        "--lr", "1e-3", "--ckpt", args.ckpt, "--ckpt-every", "100",
+        "--log-every", "20",
+    ])
+
+
+if __name__ == "__main__":
+    main()

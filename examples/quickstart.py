@@ -1,0 +1,44 @@
+"""Quickstart: fit an exact-ℓ0 sparse linear model with Bi-cADMM (PsFiT API).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import lasso_for_kappa
+from repro.core.bicadmm import fit_sparse_model
+from repro.data.synthetic import SyntheticSpec, make_sparse_regression
+
+
+def main():
+    # the paper's SLS setup: N=4 nodes, planted 80%-sparse ground truth
+    spec = SyntheticSpec(n_nodes=4, m_per_node=500, n_features=400,
+                         sparsity_level=0.8, noise=1e-2)
+    As, bs, x_true = make_sparse_regression(0, spec)
+    print(f"n={spec.n_features} kappa={spec.kappa} "
+          f"m={spec.n_nodes * spec.m_per_node} (4 nodes)")
+
+    res = fit_sparse_model("squared", As, bs, kappa=spec.kappa,
+                           gamma=1000.0, rho_c=1.0, max_iter=400,
+                           over_relax=1.6)
+    sup_true = np.abs(np.asarray(x_true)) > 0
+    sup_hat = np.asarray(res.support)
+    f1 = 2 * (sup_hat & sup_true).sum() / (sup_hat.sum() + sup_true.sum())
+    rmse = float(jnp.linalg.norm(res.x - x_true)
+                 / jnp.linalg.norm(x_true))
+    print(f"Bi-cADMM: iters={int(res.iters)}  support-F1={f1:.3f}  "
+          f"rel-err={rmse:.4f}  residuals p={float(res.p_r):.2e} "
+          f"b={float(res.b_r):.2e}")
+
+    # the l1 relaxation for comparison (paper Table 1)
+    A = jnp.asarray(np.asarray(As).reshape(-1, spec.n_features))
+    b = jnp.asarray(np.asarray(bs).reshape(-1))
+    x_l, lam = lasso_for_kappa(A, b, spec.kappa)
+    sup_l = np.abs(np.asarray(x_l)) > 1e-6
+    f1_l = 2 * (sup_l & sup_true).sum() / max(sup_l.sum() + sup_true.sum(), 1)
+    print(f"Lasso(λ={lam:.4f}): support-F1={f1_l:.3f}  "
+          f"(exact-ℓ0 ≥ ℓ1 relaxation, as in the paper)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""repro — Bi-cADMM distributed sparse ML framework (PsFiT-JAX).
+
+Reproduction + TPU-native extension of "A GPU-Accelerated Bi-linear ADMM
+Algorithm for Distributed Sparse Machine Learning" (Olama et al., 2024).
+"""
+__version__ = "0.1.0"

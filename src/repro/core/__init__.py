@@ -1,0 +1,3 @@
+from .bicadmm import BiCADMM, BiCADMMConfig, BiCADMMResult, fit_sparse_model
+from .losses import get_loss
+from . import bilinear, losses, prox, subsolver

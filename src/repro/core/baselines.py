@@ -1,0 +1,188 @@
+"""Baselines the paper compares against (Table 1).
+
+* ``fista_lasso`` — the ℓ1 relaxation (glmnet-equivalent semantics: FISTA
+  on 0.5||Ax-b||² + λ||x||₁ with a warm-started λ path); λ is bisected so
+  the solution has exactly κ nonzeros, matching how the paper uses Lasso to
+  target a sparsity level.
+* ``best_subset_exact`` — exact ℓ0 solve by branch-and-bound over supports
+  with a convex-relaxation lower bound (stands in for the paper's Gurobi
+  MIP; cross-checked against brute force at small n in tests).
+* ``iht`` — iterative hard thresholding (the projected-gradient family the
+  paper cites as prior distributed ℓ0 work).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def fista_lasso(A: Array, b: Array, lam: float | Array,
+                iters: int = 500, ridge: float = 0.0) -> Array:
+    """min 0.5||Ax-b||^2 + 0.5*ridge*||x||^2 + lam*||x||_1 via FISTA."""
+    n = A.shape[1]
+    L = jnp.linalg.norm(A, 2) ** 2 + ridge
+    step = 1.0 / L
+
+    def soft(x, t):
+        return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
+
+    def body(_, carry):
+        x, y, t = carry
+        g = A.T @ (A @ y - b) + ridge * y
+        x_new = soft(y - step * g, step * lam)
+        t_new = 0.5 * (1 + jnp.sqrt(1 + 4 * t * t))
+        y_new = x_new + ((t - 1) / t_new) * (x_new - x)
+        return x_new, y_new, t_new
+
+    x0 = jnp.zeros((n,), A.dtype)
+    x, _, _ = jax.lax.fori_loop(0, iters, body,
+                                (x0, x0, jnp.asarray(1.0, A.dtype)))
+    return x
+
+
+def lasso_for_kappa(A: Array, b: Array, kappa: int, *, iters: int = 300,
+                    bisect_steps: int = 20, ridge: float = 0.0,
+                    tol_card: int = 0) -> tuple[Array, float]:
+    """Bisect λ to the largest value giving ≥ κ nonzeros (λ-path query)."""
+    lam_max = float(jnp.max(jnp.abs(A.T @ b)))
+    lo, hi = 0.0, lam_max
+    best = None
+    for _ in range(bisect_steps):
+        lam = 0.5 * (lo + hi)
+        x = fista_lasso(A, b, lam, iters, ridge)
+        nnz = int(jnp.sum(jnp.abs(x) > 1e-6))
+        if nnz > kappa + tol_card:
+            lo = lam
+        else:
+            hi = lam
+            best = (x, lam)
+        if nnz == kappa:
+            best = (x, lam)
+            break
+    if best is None:
+        best = (fista_lasso(A, b, hi, iters, ridge), hi)
+    return best
+
+
+def _ridge_obj(A, b, gamma, support) -> float:
+    """min over x_supported of sum ||Ax-b||^2 + 1/(2 gamma) ||x||^2."""
+    As = A[:, support]
+    H = As.T @ As + (0.5 / gamma) * np.eye(As.shape[1])
+    x = np.linalg.solve(H, As.T @ b)
+    r = As @ x - b
+    return float(r @ r + (0.5 / gamma) * (x @ x))
+
+
+def best_subset_exact(A: Array, b: Array, kappa: int, gamma: float = 1e3,
+                      node_limit: int = 200_000) -> tuple[np.ndarray, float]:
+    """Branch-and-bound best-subset (exact for small n; Gurobi stand-in).
+
+    Nodes are (forced-in, forced-out) partial supports; the bound is the
+    unconstrained ridge objective with the forced-out columns removed
+    (a valid relaxation: dropping the cardinality constraint only helps).
+    """
+    A = np.asarray(A, np.float64)
+    b = np.asarray(b, np.float64)
+    n = A.shape[1]
+
+    def relax_bound(allowed):
+        return _ridge_obj(A, b, gamma, allowed)
+
+    best_obj = np.inf
+    best_sup = None
+    # greedy warm start (OMP)
+    res = b.copy()
+    sup: list[int] = []
+    for _ in range(kappa):
+        scores = np.abs(A.T @ res)
+        scores[sup] = -1
+        j = int(np.argmax(scores))
+        sup.append(j)
+        As = A[:, sup]
+        x, *_ = np.linalg.lstsq(As, b, rcond=None)
+        res = b - As @ x
+    sup_mask = np.zeros(n, bool)
+    sup_mask[sup] = True
+    best_obj = _ridge_obj(A, b, gamma, sup_mask)
+    best_sup = sup_mask.copy()
+
+    heap = [(relax_bound(np.ones(n, bool)), 0, frozenset(), frozenset())]
+    visited = 0
+    while heap and visited < node_limit:
+        bound, depth, fin, fout = heapq.heappop(heap)
+        visited += 1
+        if bound >= best_obj - 1e-12:
+            continue
+        allowed = np.ones(n, bool)
+        allowed[list(fout)] = False
+        # candidate: best kappa columns within allowed by |corr|
+        if allowed.sum() <= kappa or depth >= n:
+            sel = np.zeros(n, bool)
+            sel[list(fin)] = True
+            rest = [j for j in range(n) if allowed[j] and j not in fin]
+            for j in rest[: kappa - len(fin)]:
+                sel[j] = True
+            obj = _ridge_obj(A, b, gamma, sel)
+            if obj < best_obj:
+                best_obj, best_sup = obj, sel
+            continue
+        if len(fin) == kappa:
+            sel = np.zeros(n, bool)
+            sel[list(fin)] = True
+            obj = _ridge_obj(A, b, gamma, sel)
+            if obj < best_obj:
+                best_obj, best_sup = obj, sel
+            continue
+        # branch on the strongest not-yet-decided column
+        res = b
+        scores = np.abs(A.T @ res)
+        undecided = [j for j in range(n)
+                     if j not in fin and j not in fout]
+        jstar = undecided[int(np.argmax(scores[undecided]))]
+        for fin2, fout2 in (((*fin, jstar), fout), (fin, (*fout, jstar))):
+            fin2, fout2 = frozenset(fin2), frozenset(fout2)
+            allowed2 = np.ones(n, bool)
+            allowed2[list(fout2)] = False
+            bnd = _ridge_obj(A, b, gamma, allowed2)
+            if bnd < best_obj:
+                heapq.heappush(heap, (bnd, depth + 1, fin2, fout2))
+    return best_sup, best_obj
+
+
+def brute_force_best_subset(A, b, kappa, gamma=1e3):
+    """Exhaustive reference for tests (n choose kappa small)."""
+    A = np.asarray(A, np.float64)
+    b = np.asarray(b, np.float64)
+    n = A.shape[1]
+    best = (np.inf, None)
+    for sup in itertools.combinations(range(n), kappa):
+        mask = np.zeros(n, bool)
+        mask[list(sup)] = True
+        obj = _ridge_obj(A, b, gamma, mask)
+        if obj < best[0]:
+            best = (obj, mask)
+    return best[1], best[0]
+
+
+@partial(jax.jit, static_argnames=("kappa", "iters"))
+def iht(A: Array, b: Array, kappa: int, iters: int = 300,
+        step: float | None = None) -> Array:
+    """Iterative hard thresholding: x <- H_k(x - s A^T(Ax-b))."""
+    n = A.shape[1]
+    s = step if step is not None else 1.0 / (jnp.linalg.norm(A, 2) ** 2)
+
+    def hard(x):
+        thr = -jnp.sort(-jnp.abs(x))[kappa - 1]
+        return jnp.where(jnp.abs(x) >= thr, x, 0.0)
+
+    def body(_, x):
+        return hard(x - s * (A.T @ (A @ x - b)))
+    return jax.lax.fori_loop(0, iters, body, jnp.zeros((n,), A.dtype))

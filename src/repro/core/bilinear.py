@@ -1,0 +1,213 @@
+"""Bi-linear reformulation machinery (Theorem 2.1, Hempel & Goulart 2014).
+
+``||x||_0 <= kappa``  <=>  exists s, t with
+
+    x^T s = t,   ||x||_1 <= t,   ||s||_1 <= kappa,   ||s||_inf <= 1.
+
+This module provides the convex-geometry primitives the Bi-cADMM algorithm
+needs:
+
+* ``support_skappa(z, kappa)`` — the LP value ``max_{s in S^kappa} z^T s``
+  (= sum of the kappa largest ``|z|``; fractional kappa handled exactly) and
+  an argmax ``s*``.
+* ``s_update(z, t, v, kappa)`` — closed-form solution of ADMM step (7c)/(12):
+  ``argmin_{s in S^kappa} (z^T s - t + v)^2``.
+* ``project_l1_epigraph(z0, t0)`` — Euclidean projection onto the cone
+  ``C = {(z, t): ||z||_1 <= t}`` (sort-based, exact).
+* ``project_l1_epigraph_bisect`` — same projection via monotone threshold
+  bisection: only *scalar* reductions per step, so it distributes with
+  scalar-only collectives (beyond-paper; see DESIGN.md §3.3).
+* ``g(z, s, t)`` — the bi-linear residual.
+
+All functions are pure jnp and jit/vmap/shard_map-safe.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def g(z: Array, s: Array, t: Array | float) -> Array:
+    """Bi-linear constraint residual g(z, s, t) = z^T s - t."""
+    return jnp.vdot(z, s) - t
+
+
+def support_skappa(z: Array, kappa: float) -> tuple[Array, Array]:
+    """LP over the unit-box-capped l1 ball S^kappa.
+
+    Returns ``(u_max, s_star)`` with ``u_max = max_{s in S^kappa} z^T s`` and
+    ``s_star`` an attaining vertex: sign(z) on the top-floor(kappa)
+    coordinates of |z| plus a fractional entry on the next one.
+    """
+    az = jnp.abs(z)
+    n = z.shape[0]
+    kf = jnp.floor(jnp.asarray(kappa, az.dtype))
+    frac = jnp.asarray(kappa, az.dtype) - kf
+    order = jnp.argsort(-az)  # descending |z|
+    ranks = jnp.argsort(order)  # rank of each coordinate, 0 = largest
+    ranks_f = ranks.astype(az.dtype)
+    w = jnp.clip(kf - ranks_f, 0.0, 1.0)  # 1 on top-floor(kappa), 0 after
+    w = w + frac * ((ranks_f >= kf) & (ranks_f < kf + 1.0)).astype(az.dtype)
+    s_star = jnp.sign(z) * w
+    u_max = jnp.sum(az * w)
+    return u_max, s_star
+
+
+def s_update(z: Array, t: Array | float, v: Array | float,
+             kappa: float) -> Array:
+    """Closed-form ADMM s-step (12): argmin_{s in S^kappa} (z^T s - (t - v))^2.
+
+    The achievable range of ``z^T s`` over ``S^kappa`` is ``[-u_max, u_max]``.
+    Clamp the target ``c = t - v`` into it; then ``s = (c_cl / u_max) s*`` is
+    feasible (scaling a vertex keeps both norms in bounds) and attains
+    ``z^T s = c_cl`` exactly.
+    """
+    u_max, s_star = support_skappa(z, kappa)
+    c = jnp.asarray(t - v, z.dtype)
+    c_cl = jnp.clip(c, -u_max, u_max)
+    theta = jnp.where(u_max > 0, c_cl / jnp.where(u_max > 0, u_max, 1.0), 0.0)
+    return theta * s_star
+
+
+def _soft(z: Array, thr: Array | float) -> Array:
+    return jnp.sign(z) * jnp.maximum(jnp.abs(z) - thr, 0.0)
+
+
+def project_l1_epigraph(z0: Array, t0: Array | float) -> tuple[Array, Array]:
+    """Exact Euclidean projection onto ``{(z, t): ||z||_1 <= t}`` (sorting).
+
+    KKT: the projection is ``z = soft(z0, theta), t = t0 + theta`` for the
+    smallest ``theta >= 0`` with ``||soft(z0, theta)||_1 <= t0 + theta``.
+    ``h(theta) = ||soft(z0,theta)||_1 - t0 - theta`` is piecewise linear and
+    strictly decreasing until z hits 0, so the root is found from the sorted
+    breakpoints in closed form.
+
+    Handles the apex case (projection = origin) when ``t0`` is so negative
+    that no ``theta`` with ``soft(z0, theta) != 0`` satisfies feasibility.
+    """
+    t0 = jnp.asarray(t0, z0.dtype)
+    az = jnp.sort(jnp.abs(z0))[::-1]  # descending
+    csum = jnp.cumsum(az)
+    n = z0.shape[0]
+    k = jnp.arange(1, n + 1, dtype=z0.dtype)
+    # For theta in [az[j], az[j-1]] exactly j entries survive (az sorted
+    # descending, 1-indexed j):  h(theta) = csum[j-1] - j*theta - t0 - theta.
+    # Root: theta_j = (csum[j-1] - t0) / (j + 1); valid if inside its segment.
+    # With idx = j-1 the segment is [lower, upper] = [az[idx+1], az[idx]]
+    # (lower = 0 for the last segment).
+    theta_j = (csum - t0) / (k + 1.0)
+    lower = jnp.concatenate([az[1:], jnp.zeros((1,), az.dtype)])
+    upper = az
+    valid = (theta_j >= lower) & (theta_j <= upper) & (theta_j >= 0)
+    theta = jnp.min(jnp.where(valid, theta_j, jnp.inf))
+    # apex: all mass thresholded away => z = 0, t = max(t0, 0)
+    apex = ~jnp.isfinite(theta)
+    theta = jnp.where(apex, 0.0, theta)
+    inside = jnp.sum(jnp.abs(z0)) <= t0
+    theta = jnp.where(inside, 0.0, theta)
+    z = jnp.where(apex & ~inside, 0.0, _soft(z0, theta))
+    t = jnp.where(apex & ~inside, jnp.maximum(t0, 0.0), t0 + theta)
+    return z, t
+
+
+def project_l1_epigraph_bisect(
+    z0: Array, t0: Array | float, iters: int = 60,
+    sum_fn=jnp.sum, max_fn=jnp.max,
+) -> tuple[Array, Array]:
+    """Projection onto the l1-epigraph via monotone bisection on theta.
+
+    ``sum_fn`` / ``max_fn`` are injectable reductions so the same code runs
+    inside ``shard_map`` with ``psum`` / ``pmax`` over the feature axis —
+    every bisection step then costs a *scalar* collective instead of an
+    all-gather + sort (DESIGN.md §3.3).
+    """
+    t0 = jnp.asarray(t0, z0.dtype)
+    abs_sum = sum_fn(jnp.abs(z0))
+    inside = abs_sum <= t0
+
+    hi0 = max_fn(jnp.abs(z0))  # h(hi0) = -t0 - hi0 <= 0 unless apex-degenerate
+    lo0 = jnp.zeros_like(hi0)
+
+    def h(theta):
+        return sum_fn(jnp.maximum(jnp.abs(z0) - theta, 0.0)) - t0 - theta
+
+    def body(_, lo_hi):
+        lo, hi = lo_hi
+        mid = 0.5 * (lo + hi)
+        pos = h(mid) > 0
+        return jnp.where(pos, mid, lo), jnp.where(pos, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo0, hi0))
+    theta = 0.5 * (lo + hi)
+    # apex: even theta = max|z0| leaves h>0 (i.e. -t0 - hi0 > 0)
+    apex = (-t0 - hi0) > 0
+    theta = jnp.where(inside, 0.0, theta)
+    z = jnp.where(apex & ~inside, 0.0, _soft(z0, theta))
+    t = jnp.where(apex & ~inside, jnp.maximum(t0, 0.0),
+                  jnp.where(inside, t0, t0 + theta))
+    return z, t
+
+
+def support_skappa_bisect(
+    z: Array, kappa: float, iters: int = 60, sum_fn=jnp.sum, max_fn=jnp.max,
+) -> tuple[Array, Array]:
+    """Distributed-friendly version of :func:`support_skappa`.
+
+    Finds the threshold tau with ``sum_i min(1, relu(|z_i| - tau)/eps...)``
+    — concretely we use the exact LP dual: maximize ``z^T s`` over the box
+    ∩ l1-ball; the optimum is ``s_i = sign(z_i) * min(1, relu(|z_i|-tau)/0+)``
+    i.e. indicator of |z_i| > tau with a fractional coordinate at the
+    boundary. We bisect tau so that ``count(|z| > tau) <= kappa`` and
+    assign the leftover mass ``kappa - count`` to boundary coordinates.
+    Only scalar reductions per step.
+    """
+    az = jnp.abs(z)
+    kap = jnp.asarray(kappa, az.dtype)
+    hi0 = max_fn(az)
+    lo0 = jnp.zeros_like(hi0)
+
+    def body(_, lo_hi):
+        lo, hi = lo_hi
+        mid = 0.5 * (lo + hi)
+        cnt = sum_fn((az > mid).astype(az.dtype))
+        too_many = cnt > kap
+        return jnp.where(too_many, mid, lo), jnp.where(too_many, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo0, hi0))
+    tau = hi  # count(|z| > tau) <= kappa, count(|z| > lo) may exceed
+    above = (az > tau).astype(az.dtype)
+    cnt_above = sum_fn(above)
+    # boundary coordinates in (lo, tau]: give them the fractional leftover
+    boundary = ((az > lo) & (az <= tau)).astype(az.dtype)
+    cnt_bnd = sum_fn(boundary)
+    leftover = jnp.maximum(kap - cnt_above, 0.0)
+    bnd_w = jnp.where(cnt_bnd > 0, leftover / jnp.where(cnt_bnd > 0, cnt_bnd, 1.0), 0.0)
+    w = above + bnd_w * boundary
+    s_star = jnp.sign(z) * w
+    u_max = sum_fn(az * w)
+    return u_max, s_star
+
+
+def hard_threshold(z: Array, kappa: int) -> Array:
+    """Project z onto {||x||_0 <= kappa} (keep top-kappa magnitudes)."""
+    az = jnp.abs(z)
+    ranks = jnp.argsort(jnp.argsort(-az))
+    return jnp.where(ranks < kappa, z, 0.0)
+
+
+def check_theorem_certificate(x: Array, kappa: float, tol: float = 1e-6
+                              ) -> dict[str, Array]:
+    """Construct the (s, t) certificate of Thm 2.1 for a feasible x and
+    report the residuals of all four conditions (used by tests)."""
+    t = jnp.sum(jnp.abs(x))
+    s = jnp.sign(x)  # ||s||_1 = ||x||_0 <= kappa when x is kappa-sparse
+    return {
+        "bilinear": jnp.abs(g(x, s, t)),
+        "l1_x": jnp.maximum(jnp.sum(jnp.abs(x)) - t, 0.0),
+        "l1_s": jnp.maximum(jnp.sum(jnp.abs(s)) - kappa, 0.0),
+        "linf_s": jnp.maximum(jnp.max(jnp.abs(s)) - 1.0, 0.0),
+    }

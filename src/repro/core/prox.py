@@ -1,0 +1,116 @@
+"""Prox engines for the Bi-cADMM x-update (eq 10).
+
+x_i^{k+1} = argmin_x  l(A x, b) + sigma/2 ||x||^2 + rho_c/2 ||x - q||^2
+with q = z^k - u_i^k, sigma = 1/(N gamma).
+
+Two engines:
+
+* ``ridge_prox_factorized`` — closed form for the squared loss via a cached
+  Cholesky of (A^T A + (sigma + rho_c) I). The factorization is constant
+  across *all* ADMM iterations (beyond-paper optimization #3 in DESIGN.md —
+  the penalty coefficients never change), so it is computed once at setup.
+* ``newton_cg_prox`` — matrix-free guarded Newton-CG for any smooth loss
+  (logistic / smoothed hinge / softmax). Strong convexity (sigma + rho_c)
+  makes CG well conditioned; fixed iteration bounds keep it jit-able.
+
+Conventions: A is (m, n); for multiclass, x is (n, C) and prox operates on
+the flattened vector.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .losses import Loss
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RidgeFactors:
+    """Cached Cholesky factors for the squared-loss prox."""
+    chol: Array        # (n, n) lower factor of A^T A + c I
+    Atb: Array         # (n,) A^T b
+    c: float = dataclasses.field(metadata=dict(static=True))  # sigma + rho_c
+
+
+def ridge_setup(A: Array, b: Array, sigma: float, rho_c: float) -> RidgeFactors:
+    n = A.shape[1]
+    c = sigma + rho_c
+    G = A.T @ A + c * jnp.eye(n, dtype=A.dtype)
+    return RidgeFactors(jnp.linalg.cholesky(G), A.T @ b, c)
+
+
+def ridge_prox_factorized(f: RidgeFactors, q: Array, rho_c: float) -> Array:
+    """argmin_x 1/2||Ax-b||^2 + sigma/2||x||^2 + rho_c/2||x-q||^2
+    = (A^T A + (sigma+rho_c) I)^{-1} (A^T b + rho_c q)."""
+    rhs = f.Atb + rho_c * q
+    y = jax.scipy.linalg.solve_triangular(f.chol, rhs, lower=True)
+    return jax.scipy.linalg.solve_triangular(f.chol.T, y, lower=False)
+
+
+def _cg(matvec: Callable[[Array], Array], rhs: Array, iters: int,
+        tol: float = 1e-10) -> Array:
+    """Plain conjugate gradients with fixed max iterations (jit-safe)."""
+    x0 = jnp.zeros_like(rhs)
+
+    def body(state):
+        x, r, p, rs, k = state
+        Ap = matvec(p)
+        alpha = rs / jnp.maximum(jnp.vdot(p, Ap), 1e-30)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        rs_new = jnp.vdot(r, r)
+        p = r + (rs_new / jnp.maximum(rs, 1e-30)) * p
+        return x, r, p, rs_new, k + 1
+
+    def cond(state):
+        _, _, _, rs, k = state
+        return (rs > tol) & (k < iters)
+
+    x, *_ = jax.lax.while_loop(cond, body, (x0, rhs, rhs, jnp.vdot(rhs, rhs),
+                                            jnp.asarray(0)))
+    return x
+
+
+def newton_cg_prox(loss: Loss, A: Array, b: Array, q: Array, sigma: float,
+                   rho_c: float, newton_iters: int = 15,
+                   cg_iters: int = 50) -> Array:
+    """Matrix-free Newton-CG for argmin_x l(Ax,b) + sigma/2|x|^2 + rho_c/2|x-q|^2.
+
+    For multiclass losses x/q are (n, C); pred = A @ x is (m, C).
+    """
+    multiclass = loss.n_classes > 1
+
+    def obj_grad(x):
+        pred = A @ x
+        lg = loss.grad(pred, b)
+        return A.T @ lg + sigma * x + rho_c * (x - q)
+
+    def hvp(x, p):
+        pred = A @ x
+        # Gauss form via jvp of the loss gradient wrt pred
+        _, dlg = jax.jvp(lambda pr: loss.grad(pr, b), (pred,), (A @ p,))
+        return A.T @ dlg + (sigma + rho_c) * p
+
+    x0 = q
+
+    def body(_, x):
+        g = obj_grad(x)
+        step = _cg(lambda p: hvp(x, p), g, cg_iters)
+        return x - step
+
+    return jax.lax.fori_loop(0, newton_iters, body, x0)
+
+
+def direct_prox(loss: Loss, A: Array, b: Array, q: Array, sigma: float,
+                rho_c: float, ridge: RidgeFactors | None = None) -> Array:
+    """Dispatch: closed form for squared loss, Newton-CG otherwise."""
+    if loss.name == "squared":
+        assert ridge is not None, "squared loss requires ridge_setup factors"
+        return ridge_prox_factorized(ridge, q, rho_c)
+    return newton_cg_prox(loss, A, b, q, sigma, rho_c)

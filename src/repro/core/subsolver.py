@@ -1,0 +1,174 @@
+"""Feature-split inner ADMM — the paper's GPU-accelerated sub-solver
+(Algorithm 2 / eqs (20)-(23)).
+
+Evaluates the node prox
+    argmin_x  l(A x, b) + sigma/2 ||x||^2 + rho_c/2 ||x - q||^2
+by splitting x (and the columns of A) into M feature blocks, one per
+accelerator. Per inner iteration:
+
+  x_j-update (23):  ridge LS per block with the *cached* Cholesky of
+                    (rho_l A_j^T A_j + (sigma + rho_c) I)   [constant across
+                    all inner AND outer iterations — DESIGN.md §6.3]
+  AllReduce:        mean of partial predictions  w_j = A_j x_j
+  omega-bar (21):   separable per-sample prox of the loss
+  nu-update (22):   scalar-vector dual ascent
+
+On the production mesh the M blocks live on the `model`/`feat` mesh axis and
+the AllReduce is a ``psum`` (see ``repro.core.sharded``); this module is the
+single-process reference with blocks stacked on a leading axis and vmapped —
+it is also the oracle used by the kernel and sharding tests.
+
+Shapes: A (m, n); x/q (n, K) where K = n_classes (K = 1 for scalar losses);
+blocks: n padded to M * nb, A_blocks (M, m, nb), x_blocks (M, nb, K).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .losses import Loss
+
+Array = jax.Array
+
+
+def pad_features(A: Array, M: int) -> tuple[Array, int]:
+    """Zero-pad columns of A so n is divisible by M. Returns (A_pad, nb)."""
+    m, n = A.shape
+    nb = -(-n // M)
+    pad = M * nb - n
+    if pad:
+        A = jnp.pad(A, ((0, 0), (0, pad)))
+    return A, nb
+
+
+def split_blocks(x: Array, M: int, nb: int) -> Array:
+    """(n, K) -> (M, nb, K), zero-padding the feature dim."""
+    n, K = x.shape
+    pad = M * nb - n
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x.reshape(M, nb, K)
+
+
+def merge_blocks(xb: Array, n: int) -> Array:
+    """(M, nb, K) -> (n, K)."""
+    M, nb, K = xb.shape
+    return xb.reshape(M * nb, K)[:n]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SubsolverState:
+    """Warm-startable inner-ADMM state (beyond-paper optimization #4)."""
+    x_blocks: Array   # (M, nb, K)
+    nu: Array         # (m, K) scaled dual
+    omega_bar: Array  # (m, K)
+
+
+_static = dict(metadata=dict(static=True))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SubsolverFactors:
+    """Setup computed once per node dataset."""
+    A_blocks: Array   # (M, m, nb)
+    chol: Array       # (M, nb, nb) lower Cholesky of rho_l G_j + (sigma+rho_c) I
+    rho_l: float = dataclasses.field(**_static)
+    sigma: float = dataclasses.field(**_static)
+    rho_c: float = dataclasses.field(**_static)
+    M: int = dataclasses.field(**_static)
+    n: int = dataclasses.field(**_static)
+
+
+def subsolver_setup(A: Array, sigma: float, rho_c: float, rho_l: float,
+                    M: int, gram_fn=None) -> SubsolverFactors:
+    """Pad + block A, build per-block Gram matrices and factorize.
+
+    ``gram_fn(Aj) -> Aj^T Aj`` is injectable so the Pallas tiled Gram kernel
+    (repro.kernels.gram) can be swapped in on TPU.
+    """
+    m, n = A.shape
+    A_pad, nb = pad_features(A, M)
+    A_blocks = jnp.moveaxis(A_pad.reshape(m, M, nb), 1, 0)  # (M, m, nb)
+    gram = gram_fn if gram_fn is not None else (lambda Aj: Aj.T @ Aj)
+    G = jax.vmap(gram)(A_blocks)                             # (M, nb, nb)
+    c = sigma + rho_c
+    H = rho_l * G + c * jnp.eye(nb, dtype=A.dtype)[None]
+    chol = jnp.linalg.cholesky(H)
+    return SubsolverFactors(A_blocks, chol, rho_l, sigma, rho_c, M, n)
+
+
+def subsolver_init(f: SubsolverFactors, K: int, m: int) -> SubsolverState:
+    nb = f.A_blocks.shape[2]
+    return SubsolverState(
+        x_blocks=jnp.zeros((f.M, nb, K), f.A_blocks.dtype),
+        nu=jnp.zeros((m, K), f.A_blocks.dtype),
+        omega_bar=jnp.zeros((m, K), f.A_blocks.dtype),
+    )
+
+
+def _block_solve(chol_j: Array, rhs_j: Array) -> Array:
+    y = jax.scipy.linalg.solve_triangular(chol_j, rhs_j, lower=True)
+    return jax.scipy.linalg.solve_triangular(chol_j.T, y, lower=False)
+
+
+def subsolver_run(loss: Loss, f: SubsolverFactors, b: Array, q: Array,
+                  state: SubsolverState, iters: int) -> tuple[Array, SubsolverState]:
+    """Run `iters` inner-ADMM iterations; returns (x (n,K), new state).
+
+    q is the prox center (n, K). b is (m,) targets/labels.
+    """
+    M, n = f.M, f.n
+    nb = f.A_blocks.shape[2]
+    K = q.shape[1]
+    qb = split_blocks(q, M, nb)                      # (M, nb, K)
+    c = f.sigma + f.rho_c
+    Mf = float(M)
+
+    def one_iter(st: SubsolverState, _):
+        # ---- x_j-update (23): target for A_j x_j is
+        #   c_j = A_j x_j^k + omega_bar^k - mean_j(A_j x_j^k) - nu^k
+        w = jnp.einsum("jmn,jnk->jmk", f.A_blocks, st.x_blocks)  # (M, m, K)
+        w_bar = jnp.mean(w, axis=0)                              # AllReduce
+        c_j = w + (st.omega_bar - w_bar - st.nu)[None]
+        rhs = (f.rho_l * jnp.einsum("jmn,jmk->jnk", f.A_blocks, c_j)
+               + f.rho_c * qb)
+        x_new = jax.vmap(_block_solve)(f.chol, rhs)              # (M, nb, K)
+
+        # ---- aggregate partial predictions (the paper's AllReduce of w)
+        w_new = jnp.einsum("jmn,jnk->jmk", f.A_blocks, x_new)
+        w_bar_new = jnp.mean(w_new, axis=0)                      # (m, K)
+
+        # ---- omega-bar update (21): per-sample prox in pred = M*omega coords
+        a = w_bar_new + st.nu
+        pred_q = Mf * a
+        pred = loss.prox_omega(
+            pred_q.squeeze(-1) if loss.n_classes == 1 else pred_q,
+            b, f.rho_l / Mf)
+        if loss.n_classes == 1:
+            pred = pred[:, None]
+        omega_bar = pred / Mf
+
+        # ---- nu-update (22)
+        nu = st.nu + w_bar_new - omega_bar
+        return SubsolverState(x_new, nu, omega_bar), None
+
+    state, _ = jax.lax.scan(one_iter, state, None, length=iters)
+    return merge_blocks(state.x_blocks, n), state
+
+
+def node_prox_feature_split(loss: Loss, f: SubsolverFactors, b: Array,
+                            q: Array, iters: int,
+                            state: SubsolverState | None = None
+                            ) -> tuple[Array, SubsolverState]:
+    """Convenience wrapper: evaluate the node prox via Algorithm 2."""
+    K = q.shape[1] if q.ndim == 2 else 1
+    q2 = q if q.ndim == 2 else q[:, None]
+    if state is None:
+        state = subsolver_init(f, K, b.shape[0])
+    x, state = subsolver_run(loss, f, b, q2, state, iters)
+    return (x if q.ndim == 2 else x[:, 0]), state

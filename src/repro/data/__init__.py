@@ -1,0 +1,2 @@
+from .synthetic import (SyntheticSpec, make_sparse_regression,
+                        make_sparse_classification, make_sparse_softmax)

@@ -1,0 +1,94 @@
+"""Synthetic SML datasets exactly as in the paper's §4.
+
+* Dense local feature matrices A_i with standard-normal entries, columns
+  normalized to unit l2 norm (normalization applied to the *global* stacked
+  matrix, then re-split, so nodes share the same column scaling).
+* Planted ground truth x_true with sparsity level s_l in (0,1):
+  kappa = round(n * (1 - s_l)) nonzeros.
+* Labels b_i = A_i x_true + e, e ~ N(0, noise^2).
+
+Classification variants threshold/argmax the noiseless scores — used for the
+SLogR / SSVM / SSR scenarios of the paper.
+
+Everything is generated node-sharded: (N, m, n) feature stacks so the same
+arrays drop into both the reference and the shard_map engines.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticSpec:
+    n_nodes: int          # N
+    m_per_node: int       # m_i
+    n_features: int       # n
+    sparsity_level: float = 0.8   # s_l; kappa = round(n (1 - s_l))
+    noise: float = 1e-2
+    n_classes: int = 1
+
+    @property
+    def kappa(self) -> int:
+        return max(1, round(self.n_features * (1.0 - self.sparsity_level)))
+
+
+def _features(key, spec: SyntheticSpec) -> Array:
+    N, m, n = spec.n_nodes, spec.m_per_node, spec.n_features
+    A = jax.random.normal(key, (N * m, n), jnp.float32)
+    A = A / jnp.linalg.norm(A, axis=0, keepdims=True)
+    return A.reshape(N, m, n)
+
+
+def _planted(key, spec: SyntheticSpec, K: int = 1) -> Array:
+    n, kappa = spec.n_features, spec.kappa
+    kv, ks = jax.random.split(key)
+    vals = jax.random.normal(kv, (kappa, K)) + jnp.sign(
+        jax.random.normal(kv, (kappa, K)))  # bounded away from 0
+    idx = jax.random.permutation(ks, n)[:kappa]
+    x = jnp.zeros((n, K)).at[idx].set(vals)
+    return x
+
+
+def make_sparse_regression(seed: int, spec: SyntheticSpec
+                           ) -> tuple[Array, Array, Array]:
+    """Returns (As (N,m,n), bs (N,m), x_true (n,)) — the paper's SLS data."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    As = _features(k1, spec)
+    x_true = _planted(k2, spec)[:, 0]
+    scores = jnp.einsum("nmf,f->nm", As, x_true)
+    bs = scores + spec.noise * jax.random.normal(k3, scores.shape)
+    return As, bs, x_true
+
+
+def make_sparse_classification(seed: int, spec: SyntheticSpec
+                               ) -> tuple[Array, Array, Array]:
+    """Labels in {-1, +1} from the planted model (SLogR / SSVM)."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    As = _features(k1, spec)
+    x_true = _planted(k2, spec)[:, 0]
+    # scale scores so the classes are separable but not trivially so
+    scores = jnp.einsum("nmf,f->nm", As, x_true)
+    scores = scores / jnp.std(scores)
+    flip = jax.random.bernoulli(k3, 0.02, scores.shape)  # 2% label noise
+    bs = jnp.where(flip, -jnp.sign(scores), jnp.sign(scores))
+    return As, bs, x_true
+
+
+def make_sparse_softmax(seed: int, spec: SyntheticSpec
+                        ) -> tuple[Array, Array, Array]:
+    """Integer labels argmax over C planted heads (SSR). x_true: (n, C)."""
+    C = spec.n_classes
+    assert C >= 2, "softmax needs n_classes >= 2"
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    As = _features(k1, spec)
+    x_true = _planted(k2, spec, K=C)
+    scores = jnp.einsum("nmf,fc->nmc", As, x_true)
+    scores = scores / jnp.std(scores)
+    noise = 0.1 * jax.random.normal(k3, scores.shape)
+    bs = jnp.argmax(scores + noise, axis=-1)
+    return As, bs, x_true

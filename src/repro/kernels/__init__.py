@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+gram            — tiled Gram matrix (Bi-cADMM per-block setup)
+bisect_proj     — batched-threshold ladder stats (distributed projections)
+flash_attention — causal flash attention for the LM zoo
+
+Each kernel ships with a jit wrapper (ops.py) and a pure-jnp oracle
+(ref.py); CPU validation runs the kernel body under interpret=True.
+"""
+from . import ops, ref

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: batched-threshold ladder statistics in one data pass.
+
+The distributed l1-epigraph / S^kappa projections (repro.core.sharded) need,
+per bisection round, ``h(theta_b) = sum_i max(|z_i| - theta_b, 0)`` and
+``c(theta_b) = #{i : |z_i| > theta_b}`` for a whole ladder of B candidate
+thresholds. A GPU implementation sorts; our TPU-native scheme evaluates the
+full ladder in ONE pass over the feature shard (DESIGN §3.3): each grid step
+streams one VMEM block of |z| and accumulates a (2, B) f32 statistics tile
+that stays resident. Collective cost per round is then a single (2*B,)-psum
+instead of an O(n) gather.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+_LANE = 128
+
+
+def _ladder_kernel(az_ref, th_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+    az = az_ref[...].astype(jnp.float32)            # (block, LANE)
+    th = th_ref[...].astype(jnp.float32)            # (1, B)
+    diff = az[:, :, None] - th[0][None, None, :]    # (block, LANE, B)
+    o_ref[0, :] += jnp.sum(jnp.maximum(diff, 0.0), axis=(0, 1))
+    o_ref[1, :] += jnp.sum((diff > 0.0).astype(jnp.float32), axis=(0, 1))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def ladder_stats(az: Array, thetas: Array, *, block: int = 2048,
+                 interpret: bool | None = None) -> Array:
+    """az (n,) nonnegative; thetas (B,). Returns (2, B) f32:
+    row 0 = sum_i max(az_i - theta_b, 0); row 1 = count(az_i > theta_b).
+
+    Padding uses -inf so padded entries contribute zero to both rows.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = az.shape[0]
+    B = thetas.shape[0]
+    cols = _LANE
+    rows = -(-n // cols)
+    block = min(block, -(-rows // 8) * 8)
+    rows_p = -(-rows // block) * block
+    azp = jnp.full((rows_p * cols,), -jnp.inf, az.dtype).at[:n].set(az)
+    azp = azp.reshape(rows_p, cols)
+    th2 = thetas.reshape(1, B)
+    out = pl.pallas_call(
+        _ladder_kernel,
+        grid=(rows_p // block,),
+        in_specs=[pl.BlockSpec((block, cols), lambda i: (i, 0)),
+                  pl.BlockSpec((1, B), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((2, B), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((2, B), jnp.float32),
+        interpret=interpret,
+    )(azp, th2)
+    return out

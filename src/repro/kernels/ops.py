@@ -1,0 +1,37 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These are the entry points the rest of the framework uses; each dispatches
+to the Pallas kernel (interpret=True off-TPU) and exposes the layouts model
+code already has (e.g. (B, S, H, Dh) attention tensors).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .bisect_proj import ladder_stats
+from .flash_attention import flash_attention_flat
+from .gram import gram, gram_xy
+
+Array = jax.Array
+
+__all__ = ["gram", "gram_xy", "ladder_stats", "flash_attention",
+           "flash_attention_flat"]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None) -> Array:
+    """Model-layout wrapper: q (B, Sq, Hq, Dh), k/v (B, Sk, Hkv, Dh)."""
+    B, Sq, Hq, Dh = q.shape
+    _, Sk, Hkv, _ = k.shape
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, Dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, Dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, Dh)
+    out = flash_attention_flat(qf, kf, vf, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+    return out.reshape(B, Hq, Sq, Dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def gram_ref(a: Array) -> Array:
+    """A^T A in f32."""
+    af = a.astype(jnp.float32)
+    return af.T @ af
+
+
+def gram_xy_ref(x: Array, y: Array) -> Array:
+    return x.astype(jnp.float32).T @ y.astype(jnp.float32)
+
+
+def ladder_stats_ref(az: Array, thetas: Array) -> Array:
+    """(2, B): [sum max(az - theta, 0); count(az > theta)]."""
+    azf = az.astype(jnp.float32)[:, None]
+    th = thetas.astype(jnp.float32)[None, :]
+    diff = azf - th
+    return jnp.stack([jnp.sum(jnp.maximum(diff, 0.0), axis=0),
+                      jnp.sum((diff > 0).astype(jnp.float32), axis=0)])
+
+
+def flash_attention_flat_ref(q: Array, k: Array, v: Array, *,
+                             causal: bool = True,
+                             sm_scale: float | None = None) -> Array:
+    """q (BH, Sq, Dh); k/v (BHkv, Sk, Dh) head-major GQA oracle."""
+    BH, Sq, Dh = q.shape
+    BHkv, Sk, _ = k.shape
+    group = BH // BHkv
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(Dh)
+    k = jnp.repeat(k, group, axis=0)
+    v = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,2 @@
+"""Launch layer: production meshes, AOT dry-run, train/serve drivers,
+checkpointing. Importing this package never touches jax device state."""

@@ -1,0 +1,215 @@
+"""HLO cost walker: FLOPs / HBM bytes / collective bytes from optimized HLO.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, which under
+scan-over-layers underestimates by ~n_layers. Every scan body in this
+framework is traced inside ``jax.named_scope("trip<N>")``, so each op's
+``op_name`` metadata carries its static trip count; this walker multiplies
+per-op costs by the product of enclosing trip markers to undo XLA's
+count-loops-once accounting.
+
+Accounting model (per-device, post-SPMD-partitioning module):
+
+* FLOPs    — dot ops: 2 * prod(result_shape) * prod(contracting_dims);
+             convolutions: 2 * prod(result) * prod(kernel_spatial) * Cin.
+             (elementwise flops are ignored — they are never roofline-
+             dominant on the MXU and XLA's own counts are similarly fuzzy.)
+* HBM bytes — for every *top-level* instruction of a non-fused computation:
+             sum of operand bytes + result bytes. Fusion instructions count
+             their operands/results only (the fused body never round-trips
+             HBM), which is exactly the fusion-aware traffic model.
+* Collective bytes — operand bytes of all-reduce / all-gather /
+             reduce-scatter / all-to-all / collective-permute, with a wire
+             multiplier (all-reduce 2x for ring reduce+broadcast phases).
+
+All numbers are *per device* (the module is the per-device partition).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r"trip(\d+)u(\d+)")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*?\)|\S+)\s+([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+(?:\([^)]*\)\s*->|\{)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+
+_COLLECTIVES = {
+    "all-reduce": 2.0, "all-reduce-start": 2.0,
+    "all-gather": 1.0, "all-gather-start": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0, "collective-permute-start": 1.0,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _trip_factor(line: str) -> int:
+    """Product of trip counts over *unique* scope ids (a scope re-entered
+    by jax's backward/remat tracing appears twice with the same uid)."""
+    f = 1
+    for n, _uid in {(n, u) for n, u in _TRIP_RE.findall(line)}:
+        f *= int(n)
+    return f
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    dot_count: int = 0
+    collective_count: int = 0
+
+    def as_dict(self) -> dict:
+        return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+                "collective_bytes": self.collective_bytes,
+                "collective_by_kind": dict(self.collective_by_kind),
+                "dot_count": self.dot_count,
+                "collective_count": self.collective_count}
+
+
+def _operands_str(line: str) -> str:
+    """The operand list substring: from the op's '(' to its matching ')'."""
+    i = line.index("(")
+    j = line.find(")", i)
+    return line[i:j + 1] if j != -1 else line[i:]
+
+
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _operand_types(line: str, symtab: dict) -> list[str]:
+    """Operand type strings, inline if printed, else from the symbol table."""
+    ops = _operands_str(line)
+    inline = _SHAPE_RE.findall(ops)
+    if inline:
+        return [f"{dt}[{dims}]" for dt, dims in inline]
+    return [symtab.get(nm, "") for nm in _OPERAND_NAME_RE.findall(ops)]
+
+
+def _dot_flops(line: str, result_type: str, symtab: dict) -> float:
+    """2 * prod(result) * prod(contracting dims of lhs)."""
+    cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    opts = _operand_types(line, symtab)
+    if not opts or not opts[0] or not cdims:
+        return 0.0
+    m = _SHAPE_RE.search(opts[0])
+    if not m:
+        return 0.0
+    lhs_dims = [int(d) for d in m.group(2).split(",") if d]
+    contract = [int(i) for i in cdims.group(1).split(",") if i]
+    k = 1
+    for i in contract:
+        if i < len(lhs_dims):
+            k *= lhs_dims[i]
+    return 2.0 * _shape_elems(result_type) * k
+
+
+def _conv_flops(line: str, result_type: str, symtab: dict) -> float:
+    opts = _operand_types(line, symtab)
+    if len(opts) < 2 or not opts[1]:
+        return 0.0
+    m = _SHAPE_RE.search(opts[1])
+    if not m:
+        return 0.0
+    rhs_dims = [int(d) for d in m.group(2).split(",") if d]
+    n = 1
+    for d in rhs_dims:
+        n *= d
+    # 2 * output elems * (kernel elems / output features) ~ upper bound
+    out_elems = _shape_elems(result_type)
+    dimcfg = re.search(r"dim_labels=\S+", line)
+    return 2.0 * out_elems * max(n // max(rhs_dims[-1], 1), 1) \
+        if dimcfg else 2.0 * out_elems * n
+
+
+def parse_hlo_costs(hlo_text: str) -> HloCosts:
+    costs = HloCosts()
+    fused_comps: set[str] = set()
+    symtab: dict[str, str] = {}
+    lines = hlo_text.splitlines()
+    # first pass: fusion-called computations + a name -> result-type table
+    for line in lines:
+        for m in _CALLS_RE.finditer(line):
+            fused_comps.add(m.group(1))
+        im = _INSTR_RE.match(line)
+        if im:
+            symtab[im.group(1)] = im.group(2)
+
+    current_comp = None
+    for line in lines:
+        cm = _COMP_RE.match(line)
+        if cm and ("->" in line or line.rstrip().endswith("{")) \
+                and " = " not in line:
+            current_comp = cm.group(1)
+            continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        _, rtype, opkind = im.groups()
+        trip = _trip_factor(line)
+        in_fusion = current_comp in fused_comps
+
+        if opkind == "dot":
+            costs.flops += _dot_flops(line, rtype, symtab) * trip
+            costs.dot_count += 1
+        elif opkind == "convolution":
+            costs.flops += _conv_flops(line, rtype, symtab) * trip
+        elif opkind in _COLLECTIVES:
+            # wire model: all-reduce 2x result bytes (reduce+broadcast
+            # phases); gather/scatter/permute/a2a ~ max(result, operands).
+            rbytes = _shape_bytes(rtype)
+            obytes = sum(_shape_bytes(t) for t in
+                         _operand_types(line, symtab))
+            if opkind.startswith("all-reduce"):
+                wire = 2.0 * max(rbytes, obytes)
+            else:
+                wire = float(max(rbytes, obytes))
+            wire *= trip
+            costs.collective_bytes += wire
+            costs.collective_by_kind[opkind.replace("-start", "")] += wire
+            costs.collective_count += 1
+
+        if not in_fusion and opkind not in ("parameter", "constant",
+                                            "get-tuple-element", "tuple",
+                                            "bitcast"):
+            obytes = sum(_shape_bytes(t) for t in
+                         _operand_types(line, symtab)) if "(" in line else 0
+            costs.hbm_bytes += (obytes + _shape_bytes(rtype)) * trip
+    return costs

@@ -1,0 +1,153 @@
+"""End-to-end LM training driver.
+
+Production layout (FSDP+TP+SP shardings from the rule engine, AdamW with
+f32 moments, optional gradient accumulation + int8 error-feedback gradient
+compression, atomic checkpoints with elastic resume, SIGTERM preemption
+save). On this CPU container you run it with a reduced config:
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --reduced \
+      --steps 200 --batch 8 --seq 128 --ckpt /tmp/ckpt
+
+The same driver lowers unchanged on the production mesh — the dry-run
+(launch.dryrun) proves every full-size (arch x shape) compiles there.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import signal
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config, reduced_config
+from repro.data.tokens import TokenStream
+from repro.launch import checkpoint as ckpt_lib
+from repro.models import zoo
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compress import ef_compress_tree, ef_init
+
+
+def make_train_step(cfg, adamw: AdamWConfig, *, accum: int = 1,
+                    compress: bool = False):
+    """Returns train_step(params, opt, err, batch) -> (params, opt, err, m).
+
+    accum > 1 scans over microbatches accumulating grads (halves activation
+    peaks for big models); compress=True applies int8 error-feedback
+    compression to the gradient signal before the optimizer.
+    """
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: zoo.loss_fn(p, cfg, batch), has_aux=True)(params)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, err, batch):
+        if accum > 1:
+            micro = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum,
+                                    *x.shape[1:]), batch)
+
+            def body(acc, mb):
+                loss, metrics, g = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, acc,
+                                   (loss, g))
+                return acc, None
+            zero = (jnp.zeros(()),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            (loss_sum, grads), _ = jax.lax.scan(body, zero, micro)
+            loss = loss_sum / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            metrics = {}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+        if compress:
+            grads, err, cstats = ef_compress_tree(grads, err)
+        params, opt_state, om = adamw_update(adamw, grads, opt_state,
+                                             params)
+        return params, opt_state, err, {"loss": loss, **metrics, **om}
+    return train_step
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b", choices=ARCH_NAMES)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-scale reduced config of the same family")
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--compress", action="store_true",
+                    help="int8 error-feedback gradient compression")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg, n_layers=args.layers,
+                             d_model=args.d_model, vocab=args.vocab)
+    adamw = AdamWConfig(lr=args.lr)
+    stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                         global_batch=args.batch)
+
+    key = jax.random.PRNGKey(0)
+    params = zoo.init_params(key, cfg)
+    opt_state = adamw_init(params)
+    err = ef_init(params) if args.compress else None
+    start = 0
+
+    if args.ckpt:
+        last = ckpt_lib.latest_step(args.ckpt)
+        if last is not None:
+            (params, opt_state), man = ckpt_lib.restore(
+                args.ckpt, (params, opt_state), last)
+            start = man["step"]
+            print(f"resumed from step {start} "
+                  f"(saved on mesh {man.get('mesh')})")
+
+    step_fn = jax.jit(make_train_step(cfg, adamw, accum=args.accum,
+                                      compress=args.compress))
+
+    # preemption handling: save on SIGTERM, then exit cleanly
+    state = {"step": start}
+    if args.ckpt:
+        def _on_term(signum, frame):
+            print(f"[preempt] SIGTERM at step {state['step']}; saving")
+            ckpt_lib.save(args.ckpt, state["step"], (params, opt_state))
+            sys.exit(0)
+        signal.signal(signal.SIGTERM, _on_term)
+
+    t0 = time.time()
+    tokens_seen = 0
+    for step in range(start, args.steps):
+        batch = stream.batch(step)
+        params, opt_state, err, metrics = step_fn(params, opt_state, err,
+                                                  batch)
+        state["step"] = step + 1
+        tokens_seen += args.batch * args.seq
+        if (step + 1) % args.log_every == 0 or step == start:
+            loss = float(metrics["loss"])
+            tps = tokens_seen / max(time.time() - t0, 1e-9)
+            print(f"step {step + 1:5d}  loss {loss:8.4f}  "
+                  f"tok/s {tps:9.0f}")
+            if not (loss == loss):                       # NaN guard
+                raise RuntimeError("loss is NaN")
+        if args.ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt_lib.save(args.ckpt, step + 1, (params, opt_state))
+    if args.ckpt:
+        ckpt_lib.save(args.ckpt, args.steps, (params, opt_state))
+    print(f"done: {args.steps - start} steps in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: unified LM backbones for the assigned architectures."""
+from . import zoo

@@ -1,0 +1,259 @@
+"""GQA attention: full, memory-chunked (flash-style, pure jnp), and decode.
+
+The chunked path is the default for long sequences: an outer scan over query
+chunks and an inner dynamically-bounded loop over key/value chunks up to the
+causal diagonal, carrying the running (max, denom, acc) online-softmax state.
+Pallas users swap in repro.kernels.flash_attention via ``impl="pallas"``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding import constrain
+from .layers import apply_rope, dense_init, rms_norm, rope_freqs, trip_scope
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ModelConfig, dtype):
+    D, Hq, Hkv, Dh = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                      cfg.resolved_head_dim)
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense_init(ks[0], D, Hq * Dh, dtype),
+         "wk": dense_init(ks[1], D, Hkv * Dh, dtype),
+         "wv": dense_init(ks[2], D, Hkv * Dh, dtype),
+         "wo": dense_init(ks[3], Hq * Dh, D, dtype)}
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((Dh,), dtype)
+        p["k_norm"] = jnp.zeros((Dh,), dtype)
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, x: Array, positions: Array):
+    B, S, D = x.shape
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, S, Hq, Dh)
+    k = (x @ p["wk"]).reshape(B, S, Hkv, Dh)
+    v = (x @ p["wv"]).reshape(B, S, Hkv, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    cos, sin = rope_freqs(Dh, cfg.rope_theta, positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    tp = _tp_size()
+    if tp > 1 and Hq % tp == 0:
+        # standard TP attention: heads sharded, scores head-sharded
+        q = constrain(q, "dp", None, "tp", None)
+    elif tp > 1:
+        # odd head counts (14, 24, 40): sequence-shard the queries instead
+        # of replicating attention over tp; scores shard along Sq.
+        q = constrain(q, "dp", "sp", None, None)
+    else:
+        # no TP mapped (fsdp/fsdp_sp profiles): sequence-shard q if "sp"
+        # is mapped, else leave the incoming sharding to propagate.
+        q = constrain(q, "dp", "sp", None, None)
+    if tp > 1 and Hkv % tp == 0:
+        k = constrain(k, "dp", None, "tp", None)
+        v = constrain(v, "dp", None, "tp", None)
+    else:
+        # pin kv batch-sharded only: ONE all-gather per layer instead of
+        # per-kv-block resharding storms when GSPMD improvises.
+        k = constrain(k, "dp", None, None, None)
+        v = constrain(v, "dp", None, None, None)
+    return q, k, v
+
+
+def _tp_size() -> int:
+    from repro.sharding import get_mesh_ctx
+    ctx = get_mesh_ctx()
+    if ctx is None:
+        return 1
+    tp = ctx.logical.get("tp")
+    if tp is None:
+        return 1
+    sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    axes = tp if isinstance(tp, tuple) else (tp,)
+    n = 1
+    for a in axes:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def _repeat_kv(k: Array, Hq: int) -> Array:
+    """(B, S, Hkv, Dh) -> (B, S, Hq, Dh) broadcast per GQA group.
+
+    Keeping a flat Hq head axis (instead of an (Hkv, G) reshape) preserves
+    tp-shardability of every attention intermediate: Hq is divisible by the
+    model axis even when Hkv is not.
+    """
+    B, S, Hkv, Dh = k.shape
+    G = Hq // Hkv
+    if G == 1:
+        return k
+    return jnp.repeat(k, G, axis=2)
+
+
+def _sdpa_full(q, k, v, causal: bool, q_offset: int | Array = 0):
+    """q (B,Sq,Hq,Dh), k/v (B,Sk,Hkv,Dh) -> (B,Sq,Hq,Dh). f32 softmax."""
+    B, Sq, Hq, Dh = q.shape
+    k = _repeat_kv(k, Hq)
+    v = _repeat_kv(v, Hq)
+    scale = 1.0 / math.sqrt(Dh)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        Sk = k.shape[1]
+        qpos = jnp.arange(Sq)[:, None] + q_offset
+        mask = qpos >= jnp.arange(Sk)[None, :]
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v)
+    return out
+
+
+def _sdpa_chunked(q, k, v, chunk_q: int, chunk_k: int, causal: bool = True,
+                  train: bool = False):
+    """Flash-style attention with online softmax, O(S*chunk) memory.
+
+    Outer scan over Sq/chunk_q query blocks; inner loop over kv blocks.
+    Inference (train=False, causal): dynamically-bounded fori up to the
+    causal diagonal — ~half the kv blocks on average, not differentiable.
+    Training (train=True): static bound over all kv blocks with causal
+    masking (reverse-mode safe); each kv step is ``jax.checkpoint``ed so
+    the backward pass stores only the (m, l, acc) carries, flash-style.
+    """
+    B, S, Hq, Dh = q.shape
+    scale = 1.0 / math.sqrt(Dh)
+    nq = S // chunk_q
+    nk = k.shape[1] // chunk_k
+    k = _repeat_kv(k, Hq)
+    v = _repeat_kv(v, Hq)
+    qg = q.reshape(B, nq, chunk_q, Hq, Dh)
+
+    def kv_step(iq, jk, qi, carry):
+        m, l, acc = carry
+        kj = jax.lax.dynamic_slice_in_dim(k, jk * chunk_k, chunk_k, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(v, jk * chunk_k, chunk_k, axis=1)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qi, kj
+                       ).astype(jnp.float32) * scale
+        if causal:
+            qpos = iq * chunk_q + jnp.arange(chunk_q)
+            kpos = jk * chunk_k + jnp.arange(chunk_k)
+            mask = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vj)
+        return m_new, l_new, acc_new
+
+    def q_block(_, iq):
+        with trip_scope(nq):
+            qi = jax.lax.dynamic_index_in_dim(qg, iq, axis=1, keepdims=False)
+            # (B, chunk_q, Hq, Dh)
+            m0 = jnp.full((B, Hq, chunk_q), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((B, Hq, chunk_q), jnp.float32)
+            a0 = jnp.zeros((B, Hq, chunk_q, Dh), jnp.float32)
+
+            if train:
+                # static bound + mask: reverse-mode safe. The WHOLE kv scan
+                # is rematerialized on backward (flash-style): residuals are
+                # one (qi, out) pair per q block instead of nq*nk carries.
+                @jax.checkpoint
+                def kv_scan(qi_, m_, l_, a_):
+                    def body(carry, jk):
+                        with trip_scope(nk):
+                            return kv_step(iq, jk, qi_, carry), None
+                    (m_, l_, a_), _ = jax.lax.scan(body, (m_, l_, a_),
+                                                   jnp.arange(nk))
+                    return m_, l_, a_
+                m, l, acc = kv_scan(qi, m0, l0, a0)
+            else:
+                hi = (iq * chunk_q // chunk_k) + 1 if causal else nk
+
+                def body(jk, carry):
+                    # average trip count over q blocks: ~ (nk+1)/2
+                    with trip_scope(max(1, (nk + 1) // 2) if causal else nk):
+                        return kv_step(iq, jk, qi, carry)
+                m, l, acc = jax.lax.fori_loop(0, hi, body, (m0, l0, a0))
+
+            out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+            # (B, Hq, chunk_q, Dh) -> (B, chunk_q, Hq, Dh)
+            out = out.transpose(0, 2, 1, 3)
+            return None, out
+
+    _, blocks = jax.lax.scan(q_block, None, jnp.arange(nq))
+    # (nq, B, chunk_q, Hq, Dh) -> (B, S, Hq, Dh)
+    return blocks.transpose(1, 0, 2, 3, 4).reshape(B, S, Hq, Dh)
+
+
+def attention(p, cfg: ModelConfig, x: Array, *, chunk_threshold: int = 2048,
+              chunk_q: int = 512, chunk_k: int = 512,
+              impl: str = "auto", causal: bool = True,
+              train: bool = False) -> Array:
+    """Self-attention over x (B, S, D); returns (B, S, D)."""
+    B, S, D = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=causal)
+    elif impl == "full" or (impl == "auto" and S <= chunk_threshold):
+        out = _sdpa_full(q, k, v, causal=causal)
+    else:
+        out = _sdpa_chunked(q, k, v, min(chunk_q, S), min(chunk_k, S),
+                            causal=causal, train=train)
+    out = constrain(out, "dp", None, "tp", None)
+    y = out.reshape(B, S, -1) @ p["wo"]
+    # Megatron-SP: the row-parallel output projection reduce-scatters into
+    # sequence-sharded layout instead of all-reduce + all-gather.
+    return constrain(y, "dp", "sp", None)
+
+
+def attention_with_cache(p, cfg: ModelConfig, x: Array):
+    """Prefill: same as attention but also returns (k, v) for the cache."""
+    B, S, D = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if S <= 2048:
+        out = _sdpa_full(q, k, v, causal=True)
+    else:
+        out = _sdpa_chunked(q, k, v, 512, 512)
+    out = constrain(out, "dp", None, "tp", None)
+    return out.reshape(B, S, -1) @ p["wo"], (k, v)
+
+
+def decode_attention(p, cfg: ModelConfig, x: Array, cache_k: Array,
+                     cache_v: Array, pos: Array):
+    """One-token decode. x (B, 1, D); cache (B, Smax, Hkv, Dh); pos ().
+
+    Writes the new k/v at `pos`, attends over cache[:pos+1] via masking.
+    """
+    B, _, D = x.shape
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    cdt = cache_k.dtype                 # possibly fp8 (cfg.cache_dtype)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_new.astype(cdt), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_new.astype(cdt), pos, axis=1)
+    Smax = cache_k.shape[1]
+    scale = 1.0 / math.sqrt(Dh)
+    kx = _repeat_kv(cache_k.astype(x.dtype), Hq)
+    vx = _repeat_kv(cache_v.astype(x.dtype), Hq)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kx).astype(jnp.float32) * scale
+    mask = jnp.arange(Smax)[None, None, None, :] <= pos
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, vx).reshape(B, 1, Hq * Dh)
+    return out @ p["wo"], cache_k, cache_v

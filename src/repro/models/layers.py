@@ -1,0 +1,101 @@
+"""Shared neural building blocks (pure-jnp, init/apply function pairs).
+
+All apply functions are shape-polymorphic and dtype-polymorphic; params are
+plain nested dicts so they stack cleanly for scan-over-layers and register
+as pytrees. Every lax.scan body is wrapped in ``jax.named_scope(f"trip{N}")``
+— the HLO cost walker (repro.launch.hlo_cost) multiplies per-op costs by the
+product of enclosing trip markers to undo XLA's count-loops-once accounting.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+
+Array = jax.Array
+
+
+_trip_uid = itertools.count()
+
+
+def trip_scope(n: int):
+    """Mark ops under a rolled loop body with its static trip count.
+
+    The unique suffix lets the HLO walker dedupe markers that appear twice
+    in one op_name (jax re-enters the same scope when it builds the
+    transposed/backward scan body — without the uid that would square the
+    multiplier).
+    """
+    return jax.named_scope(f"trip{int(n)}u{next(_trip_uid)}")
+
+
+def scan_layers(body, carry, stacked_params, length: int, unroll: bool = False):
+    """scan over stacked layer params with a trip-count marker."""
+    if unroll:
+        for i in range(length):
+            layer = jax.tree.map(lambda p: p[i], stacked_params)
+            carry = body(carry, layer)[0]
+        return carry
+
+    def marked(c, p):
+        with trip_scope(length):
+            return body(c, p)
+    carry, _ = jax.lax.scan(marked, carry, stacked_params, length=length)
+    return carry
+
+
+# ------------------------------------------------------------------- init --
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32)).astype(dtype)
+
+
+# ------------------------------------------------------------------- norms --
+def rms_norm(x: Array, w: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+# -------------------------------------------------------------------- RoPE --
+def rope_freqs(head_dim: int, theta: float, positions: Array) -> tuple[Array, Array]:
+    """positions (...,) -> cos/sin (..., head_dim/2), f32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x (..., S, H, Dh); cos/sin (..., S, Dh/2) broadcast over heads."""
+    xf = x.astype(jnp.float32)
+    x1, x2 = jnp.split(xf, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ SwiGLU --
+def mlp_init(key, d: int, f: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": dense_init(k1, d, f, dtype),
+            "w_up": dense_init(k2, d, f, dtype),
+            "w_down": dense_init(k3, f, d, dtype)}
+
+
+def mlp_apply(p, x: Array) -> Array:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = constrain(h, "dp", None, "tp")
+    # Megatron-SP: reduce-scatter the row-parallel down projection
+    return constrain(h @ p["w_down"], "dp", "sp", None)

@@ -1,0 +1,115 @@
+"""Mixture-of-Experts layer: top-k routing with fixed expert capacity and
+sort-based dispatch, expert-parallel over the `tp` axis.
+
+Dispatch is computed *per batch row* (vmap over B): each row of S tokens is
+routed independently with capacity C = S*K*cf/E. This keeps every scatter /
+gather operand's leading dim equal to the dp-sharded batch axis, which GSPMD
+partitions cleanly (batched scatters partition along batch dims), instead of
+one global (B*S*K,)-indexed scatter that would force replicated temporaries
+at 1M-token scale. Tokens over capacity are dropped (standard capacity-
+factor semantics); the router's combine weights renormalize.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding import constrain
+from .layers import dense_init
+
+Array = jax.Array
+
+
+def moe_init(key, cfg: ModelConfig, dtype):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], D, E, dtype, scale=0.02),
+        "experts": {
+            "w_gate": (jax.random.normal(ks[1], (E, D, F), jnp.float32)
+                       / jnp.sqrt(D)).astype(dtype),
+            "w_up": (jax.random.normal(ks[2], (E, D, F), jnp.float32)
+                     / jnp.sqrt(D)).astype(dtype),
+            "w_down": (jax.random.normal(ks[3], (E, F, D), jnp.float32)
+                       / jnp.sqrt(F)).astype(dtype),
+        },
+    }
+
+
+def expert_capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(n_tokens * cfg.experts_per_token * cfg.capacity_factor
+            / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def _dispatch_one_group(xt: Array, logits: Array, E: int, K: int, C: int):
+    """xt (T, D) one batch row; returns (buf (E,C,D), combine metadata)."""
+    T, D = xt.shape
+    probs = jax.nn.softmax(logits, axis=-1)                  # (T, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)          # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    flat_e = expert_ids.reshape(-1)                          # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(T), K)                    # token of slot
+    order = jnp.argsort(flat_e)
+    se, st = flat_e[order], flat_t[order]
+    seg_start = jnp.searchsorted(se, jnp.arange(E))          # (E,)
+    pos = jnp.arange(T * K) - seg_start[se]                  # pos in expert
+    keep = pos < C
+    pos_c = jnp.where(keep, pos, 0)
+
+    buf = jnp.zeros((E, C, xt.shape[1]), xt.dtype)
+    gathered = jnp.where(keep[:, None], xt[st], 0)
+    buf = buf.at[se, pos_c].add(gathered)                    # (E, C, D)
+    flat_gate = gate_vals.reshape(-1)[order]
+    return buf, (se, st, pos_c, keep, flat_gate, probs, expert_ids)
+
+
+def _combine_one_group(out_e: Array, meta, T: int) -> Array:
+    se, st, pos_c, keep, flat_gate, _, _ = meta
+    contrib = out_e[se, pos_c] * (flat_gate * keep)[:, None].astype(out_e.dtype)
+    return jnp.zeros((T, out_e.shape[-1]), out_e.dtype).at[st].add(contrib)
+
+
+def moe_apply(p, cfg: ModelConfig, x: Array,
+              capacity: int | None = None) -> tuple[Array, Array]:
+    """x (B, S, D) -> (B, S, D), aux load-balance loss (scalar, f32).
+
+    Sharding pattern (GShard-style expert parallelism): dispatch/combine run
+    with activations sharded along D (so the (B, S*K, D) gathered copies are
+    tp-sharded, not replicated); the capacity buffer is then resharded
+    D->E, which GSPMD lowers to the canonical EP all-to-all before the
+    expert-parallel einsums, and back E->D for the combine.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    C = capacity or expert_capacity(S, cfg)
+    x = constrain(x, "dp", None, "tp")                       # D-sharded
+    logits = (x @ p["router"]).astype(jnp.float32)           # (B, S, E)
+
+    buf, meta = jax.vmap(
+        lambda xt, lg: _dispatch_one_group(xt, lg, E, K, C))(x, logits)
+    buf = constrain(buf, "dp", None, None, "tp")             # (B, E, C, D/t)
+    buf = constrain(buf, "dp_moe", "ep", None, None)         # A2A: D -> E
+
+    # ---- expert computation (expert-parallel einsums) ---------------------
+    pe = p["experts"]
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, pe["w_gate"])) \
+        * jnp.einsum("becd,edf->becf", buf, pe["w_up"])
+    h = constrain(h, "dp_moe", "ep", None, None)
+    out_e = jnp.einsum("becf,efd->becd", h, pe["w_down"])    # (B, E, C, D)
+    out_e = constrain(out_e, "dp_moe", "ep", None, None)
+    out_e = constrain(out_e, "dp", None, None, "tp")         # A2A: E -> D
+
+    out = jax.vmap(lambda oe, mt: _combine_one_group(oe, mt, S))(out_e, meta)
+    out = constrain(out, "dp", None, "tp")
+    out = constrain(out, "dp", "sp", None)
+
+    # aux load-balance loss (Switch-style), averaged over groups
+    probs, expert_ids = meta[5], meta[6]
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(expert_ids[..., 0], E, dtype=jnp.float32),
+                  axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+    return out, aux

@@ -1,0 +1,220 @@
+"""RWKV6 ("Finch") block: time-mix with data-dependent per-channel decay
+plus squared-ReLU channel-mix.
+
+The per-channel decay makes the chunked-GLA pairwise matrix (Q, Q, Dh)-sized,
+so unlike Mamba2's per-head-scalar decay we keep the *exact* recurrence and
+run it as a two-level scan: an outer scan over chunks (carry saved) with the
+inner per-token scan under ``jax.checkpoint`` (rematerialized on the backward
+pass). This bounds train-time memory at S/chunk saved states.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding import constrain
+from .layers import dense_init, rms_norm, trip_scope
+
+Array = jax.Array
+
+_LORA_R = 64
+
+
+def rwkv_init(key, cfg: ModelConfig, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 10)
+    return {
+        # time-mix
+        "mix_tm": jnp.full((5, D), 0.5, dtype),          # r,k,v,w,g shifts
+        "w_r": dense_init(ks[0], D, D, dtype),
+        "w_k": dense_init(ks[1], D, D, dtype),
+        "w_v": dense_init(ks[2], D, D, dtype),
+        "w_g": dense_init(ks[3], D, D, dtype),
+        "decay_base": jnp.full((D,), -2.0, jnp.float32),  # w0
+        "decay_lora_a": dense_init(ks[4], D, _LORA_R, dtype, scale=0.01),
+        "decay_lora_b": dense_init(ks[5], _LORA_R, D, dtype, scale=0.01),
+        "boost_u": jnp.zeros((D // cfg.ssm_head_dim, cfg.ssm_head_dim),
+                             jnp.float32),
+        "wkv_norm": jnp.zeros((D,), dtype),
+        "w_o": dense_init(ks[6], D, D, dtype),
+        # channel-mix
+        "mix_cm": jnp.full((2, D), 0.5, dtype),          # r,k shifts
+        "w_r_cm": dense_init(ks[7], D, D, dtype),
+        "w_k_cm": dense_init(ks[8], D, F, dtype),
+        "w_down_cm": dense_init(ks[9], F, D, dtype),
+    }
+
+
+def _token_shift(x: Array, last: Array | None) -> Array:
+    """xx_t = x_{t-1} (zero / `last` at t=0). x (B,S,D); last (B,D)|None."""
+    prev = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :]
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def wkv_step(state: Array, r, k, v, w, u):
+    """Exact RWKV6 recurrence, one token.
+
+    state (B,H,hd,hd) [key x value]; r/k/v/w (B,H,hd); u (H,hd).
+    y_t = r . (state + diag(u) k v^T);  state' = diag(w) state + k v^T.
+    """
+    kv = k[..., :, None] * v[..., None, :]               # (B,H,hd,hd)
+    y = jnp.einsum("bhk,bhkv->bhv", r, state + u[None, :, :, None] * kv)
+    state_new = w[..., :, None] * state + kv
+    return y, state_new
+
+
+def wkv_scan(r, k, v, w, u, state0, inner_chunk: int = 64):
+    """r/k/v/w (B,S,H,hd) -> y (B,S,H,hd), final state (B,H,hd,hd).
+
+    Two-level: outer scan over S/inner_chunk (carry saved), inner scan
+    rematerialized under jax.checkpoint.
+    """
+    B, S, H, hd = r.shape
+    Q = min(inner_chunk, S)
+    assert S % Q == 0, f"seq {S} not divisible by wkv chunk {Q}"
+    nc = S // Q
+
+    def to_chunks(x):  # (B,S,H,hd) -> (nc, Q, B, H, hd)
+        return x.reshape(B, nc, Q, H, hd).transpose(1, 2, 0, 3, 4)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+
+    @jax.checkpoint
+    def chunk_body(state, inp):
+        rq, kq, vq, wq = inp                              # (Q,B,H,hd)
+
+        def step(s, tok):
+            with trip_scope(Q):
+                rt, kt, vt, wt = tok
+                y, s = wkv_step(s, rt, kt, vt, wt, u)
+                return s, y
+        state, ys = jax.lax.scan(step, state, (rq, kq, vq, wq))
+        return state, ys                                  # ys (Q,B,H,hd)
+
+    def outer(state, inp):
+        with trip_scope(nc):
+            return chunk_body(state, inp)
+
+    state, ys = jax.lax.scan(outer, state0, (rc, kc, vc, wc))
+    return ys.transpose(2, 0, 1, 3, 4).reshape(B, S, H, hd), state
+
+
+def _decay(p, xw: Array) -> Array:
+    """Data-dependent decay in (0,1): w = exp(-exp(w0 + lora(xw)))."""
+    lo = jnp.tanh(xw @ p["decay_lora_a"]) @ p["decay_lora_b"]
+    logw = p["decay_base"][None, ...] + lo.astype(jnp.float32)
+    return jnp.exp(-jnp.exp(logw))
+
+
+def time_mix(p, cfg: ModelConfig, x: Array, *, state=None, last=None,
+             return_state: bool = False):
+    """x (B,S,D). state (B,H,hd,hd) wkv state; last (B,D) token-shift."""
+    B, S, D = x.shape
+    hd = cfg.ssm_head_dim
+    H = D // hd
+    xx = _token_shift(x, last)
+    mr, mk, mv, mw, mg = [p["mix_tm"][i][None, None] for i in range(5)]
+    xr = x + mr * (xx - x)
+    xk = x + mk * (xx - x)
+    xv = x + mv * (xx - x)
+    xw = x + mw * (xx - x)
+    xg = x + mg * (xx - x)
+
+    r = (xr @ p["w_r"]).reshape(B, S, H, hd)
+    k = (xk @ p["w_k"]).reshape(B, S, H, hd)
+    v = (xv @ p["w_v"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ p["w_g"])
+    w = _decay(p, xw).reshape(B, S, H, hd)
+    r = constrain(r, "dp", None, "tp", None)
+
+    state0 = jnp.zeros((B, H, hd, hd), jnp.float32) if state is None \
+        else state
+    y, state_new = wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), w,
+                            p["boost_u"], state0)
+    y = rms_norm(y.astype(x.dtype).reshape(B, S, D), p["wkv_norm"]) * g
+    out = y @ p["w_o"]
+    out = constrain(out, "dp", "sp", None)
+    if return_state:
+        return out, (state_new, x[:, -1])
+    return out
+
+
+def time_mix_step(p, cfg: ModelConfig, x_t: Array, state, last):
+    """One-token decode. x_t (B,1,D); carries (state, last)."""
+    B, _, D = x_t.shape
+    hd = cfg.ssm_head_dim
+    H = D // hd
+    x = x_t[:, 0]
+    xx = last
+    mr, mk, mv, mw, mg = [p["mix_tm"][i][None] for i in range(5)]
+    xr, xk, xv, xw, xg = [x + m * (xx - x) for m in (mr, mk, mv, mw, mg)]
+    r = (xr @ p["w_r"]).reshape(B, H, hd).astype(jnp.float32)
+    k = (xk @ p["w_k"]).reshape(B, H, hd).astype(jnp.float32)
+    v = (xv @ p["w_v"]).reshape(B, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["w_g"])
+    w = _decay(p, xw[None])[0].reshape(B, H, hd)
+    y, state_new = wkv_step(state, r, k, v, w, p["boost_u"])
+    y = rms_norm(y.astype(x.dtype).reshape(B, 1, D), p["wkv_norm"]) \
+        * g[:, None]
+    return y @ p["w_o"], (state_new, x)
+
+
+def channel_mix(p, cfg: ModelConfig, x: Array, *, last=None,
+                return_state: bool = False):
+    xx = _token_shift(x, last)
+    mr, mk = p["mix_cm"][0][None, None], p["mix_cm"][1][None, None]
+    xr = x + mr * (xx - x)
+    xk = x + mk * (xx - x)
+    rgate = jax.nn.sigmoid(xr @ p["w_r_cm"])
+    kk = jnp.square(jax.nn.relu(xk @ p["w_k_cm"]))
+    kk = constrain(kk, "dp", None, "tp")
+    out = rgate * (kk @ p["w_down_cm"])
+    if return_state:
+        return out, x[:, -1]
+    return out
+
+
+def channel_mix_step(p, cfg: ModelConfig, x_t: Array, last):
+    out = channel_mix(p, cfg, x_t, last=last)
+    return out, x_t[:, 0]
+
+
+def rwkv_block_init(key, cfg: ModelConfig, dtype):
+    p = rwkv_init(key, cfg, dtype)
+    p["norm_tm"] = jnp.zeros((cfg.d_model,), dtype)
+    p["norm_cm"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def rwkv_block(p, cfg: ModelConfig, x: Array, *, states=None,
+               return_state: bool = False):
+    """Pre-norm residual block: x + TM(norm(x)); x + CM(norm(x))."""
+    if states is None:
+        if return_state:
+            out_tm, st_tm = time_mix(p, cfg, rms_norm(x, p["norm_tm"]),
+                                     return_state=True)
+            x = x + out_tm
+            out_cm, st_cm = channel_mix(p, cfg, rms_norm(x, p["norm_cm"]),
+                                        return_state=True)
+            return x + out_cm, (st_tm, st_cm)
+        x = x + time_mix(p, cfg, rms_norm(x, p["norm_tm"]))
+        return x + channel_mix(p, cfg, rms_norm(x, p["norm_cm"]))
+    (wkv_state, last_tm), last_cm = states
+    out_tm, (wkv_new, last_tm_new) = time_mix_step(
+        p, cfg, rms_norm(x, p["norm_tm"]), wkv_state, last_tm)
+    x = x + out_tm
+    out_cm, last_cm_new = channel_mix_step(
+        p, cfg, rms_norm(x, p["norm_cm"]), last_cm)
+    return x + out_cm, ((wkv_new, last_tm_new), last_cm_new)
+
+
+def rwkv_state_init(cfg: ModelConfig, batch: int, dtype):
+    D, hd = cfg.d_model, cfg.ssm_head_dim
+    H = D // hd
+    return ((jnp.zeros((batch, H, hd, hd), jnp.float32),
+             jnp.zeros((batch, D), dtype)),
+            jnp.zeros((batch, D), dtype))

@@ -1,0 +1,192 @@
+"""Mamba2 block (SSD — state-space duality, chunked).
+
+Train/prefill run the chunked SSD algorithm: quadratic attention-like
+einsums *within* a chunk (MXU-friendly) plus a `lax.scan` over chunks
+carrying the (B, H, P, ds) state. Decode is the exact one-step recurrence.
+Per-head scalar decay (Mamba2's key simplification vs Mamba1) keeps the
+pairwise decay matrix at (Q, Q) per head.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding import constrain
+from .layers import dense_init, rms_norm, trip_scope
+
+Array = jax.Array
+
+
+def mamba_init(key, cfg: ModelConfig, dtype):
+    D, di, ds = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H = cfg.n_ssm_heads
+    K = cfg.conv_kernel
+    conv_dim = di + 2 * ds                      # x + B + C (single group)
+    d_in_proj = 2 * di + 2 * ds + H             # z, x, B, C, dt
+    ks = jax.random.split(key, 3)
+    return {
+        "in_proj": dense_init(ks[0], D, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (K, conv_dim), jnp.float32)
+                   / K).astype(dtype),
+        "conv_bias_w": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "gate_norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[2], di, D, dtype),
+    }
+
+
+def _causal_conv(x: Array, w: Array, bias: Array) -> Array:
+    """Depthwise causal conv via K shifted adds. x (B, S, C), w (K, C)."""
+    K = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[K - 1 - i]
+    return out + bias
+
+
+def _conv_step(x_t: Array, conv_state: Array, w: Array, bias: Array):
+    """x_t (B, C); conv_state (B, K-1, C) past inputs. Returns y, new state."""
+    full = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", full, w) + bias
+    return y, full[:, 1:]
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, B_: Array, C_: Array,
+                chunk: int, h0: Array | None = None):
+    """Chunked SSD scan.
+
+    x (B,S,H,P), dt (B,S,H), A (H,) [negative], B_/C_ (B,S,ds),
+    h0 (B,H,P,ds) initial state. Returns y (B,S,H,P), h_final.
+    """
+    Bsz, S, H, P = x.shape
+    ds = B_.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, f"seq {S} not divisible by chunk {Q}"
+    nc = S // Q
+    f32 = jnp.float32
+
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H).astype(f32)
+    Bc = B_.reshape(Bsz, nc, Q, ds).astype(f32)
+    Cc = C_.reshape(Bsz, nc, Q, ds).astype(f32)
+
+    dA = dtc * A[None, None, None, :]                   # (B,nc,Q,H) <= 0
+    E = jnp.cumsum(dA, axis=2)                          # inclusive
+    dtot = E[:, :, -1, :]                               # (B,nc,H)
+
+    # ---- intra-chunk: attn[t,s] = exp(E_t - E_s) (C_t.B_s) dt_s, s <= t
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)          # (B,nc,Q,Q)
+    diff = E[:, :, :, None, :] - E[:, :, None, :, :]    # (B,nc,Q,Q,H)
+    mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+    gate = jnp.exp(jnp.where(mask[None, None, :, :, None], diff, -jnp.inf))
+    attn = CB[..., None] * gate * dtc[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", attn, xc.astype(f32))
+
+    # ---- chunk summary states: S_c = sum_s exp(E_Q - E_s) dt_s x_s (x) B_s
+    w_end = jnp.exp(dtot[:, :, None, :] - E) * dtc      # (B,nc,Q,H)
+    S_c = jnp.einsum("bckh,bckhp,bckn->bchpn",
+                     w_end, xc.astype(f32), Bc)         # (B,nc,H,P,ds)
+
+    # ---- inter-chunk scan over nc (carried state = start-of-chunk h)
+    h_init = jnp.zeros((Bsz, H, P, ds), f32) if h0 is None \
+        else h0.astype(f32)
+    dtot_t = dtot.transpose(1, 0, 2)                    # (nc,B,H)
+    S_t = S_c.transpose(1, 0, 2, 3, 4)                  # (nc,B,H,P,ds)
+
+    def step(h, inp):
+        with trip_scope(nc):
+            d, s = inp
+            h_new = jnp.exp(d)[..., None, None] * h + s
+            return h_new, h                              # emit start-of-chunk
+    h_fin, h_starts = jax.lax.scan(step, h_init, (dtot_t, S_t))
+    h_prev = h_starts.transpose(1, 0, 2, 3, 4)          # (B,nc,H,P,ds)
+
+    # ---- inter-chunk outputs: y_t += C_t . (exp(E_t) h_chunk_start)
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                         Cc, jnp.exp(E), h_prev)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), h_fin
+
+
+def ssd_step(h: Array, x_t: Array, dt_t: Array, A: Array, B_t: Array,
+             C_t: Array):
+    """Exact one-token recurrence. h (B,H,P,ds); x_t (B,H,P); dt_t (B,H);
+    B_t/C_t (B,ds). Returns y (B,H,P), h_new."""
+    f32 = jnp.float32
+    dt_t = dt_t.astype(f32)
+    decay = jnp.exp(dt_t * A[None, :])[..., None, None]
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt_t, x_t.astype(f32),
+                     B_t.astype(f32))
+    h_new = decay * h + upd
+    y = jnp.einsum("bhpn,bn->bhp", h_new, C_t.astype(f32))
+    return y.astype(x_t.dtype), h_new
+
+
+def _split_in_proj(p, cfg: ModelConfig, zxbcdt: Array):
+    di, ds, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * ds], axis=-1)
+    return z, xBC, dt
+
+
+def mamba_block(p, cfg: ModelConfig, x: Array, *, chunk: int = 128,
+                h0=None, conv0=None, return_state: bool = False):
+    """Full Mamba2 mixer. x (B,S,D) -> (B,S,D) [+ (h, conv_state)]."""
+    Bsz, S, D = x.shape
+    di, ds, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    P = cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"]
+    zxbcdt = constrain(zxbcdt, "dp", None, "tp")
+    z, xBC, dt = _split_in_proj(p, cfg, zxbcdt)
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_bias_w"]))
+    xs, B_, C_ = jnp.split(xBC, [di, di + ds], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["a_log"])
+    y, h_fin = ssd_chunked(xs.reshape(Bsz, S, H, P), dt, A, B_, C_,
+                           chunk, h0=h0)
+    y = y + xs.reshape(Bsz, S, H, P) * p["d_skip"][None, None, :, None] \
+        .astype(y.dtype)
+    y = y.reshape(Bsz, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"])
+    out = y @ p["out_proj"]
+    out = constrain(out, "dp", "sp", None)
+    if return_state:
+        # conv state holds the *pre-activation* conv inputs (last K-1 steps)
+        pre = _split_in_proj(p, cfg, zxbcdt)[1]
+        conv_state = pre[:, S - (cfg.conv_kernel - 1):, :]
+        return out, (h_fin, conv_state)
+    return out
+
+
+def mamba_step(p, cfg: ModelConfig, x_t: Array, state):
+    """One-token decode. x_t (B,1,D); state = (h (B,H,P,ds) f32,
+    conv_state (B,K-1,conv_dim))."""
+    h, conv_state = state
+    Bsz = x_t.shape[0]
+    di, ds, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    P = cfg.ssm_head_dim
+    zxbcdt = (x_t[:, 0] @ p["in_proj"])                 # (B, d_in_proj)
+    z, xBC, dt = _split_in_proj(p, cfg, zxbcdt[:, None, :])
+    xBC_t, conv_new = _conv_step(xBC[:, 0], conv_state, p["conv_w"],
+                                 p["conv_bias_w"])
+    xBC_t = jax.nn.silu(xBC_t)
+    xs, B_t, C_t = jnp.split(xBC_t, [di, di + ds], axis=-1)
+    dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                           + p["dt_bias"][None, :])
+    A = -jnp.exp(p["a_log"])
+    y, h_new = ssd_step(h, xs.reshape(Bsz, H, P), dt_t, A, B_t, C_t)
+    y = y + xs.reshape(Bsz, H, P) * p["d_skip"][None, :, None].astype(y.dtype)
+    y = rms_norm(y.reshape(Bsz, 1, di) * jax.nn.silu(z), p["gate_norm"])
+    out = y @ p["out_proj"]
+    return out, (h_new, conv_new)
+
+
+def mamba_state_init(cfg: ModelConfig, batch: int, dtype) -> tuple:
+    H, P, ds = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * ds
+    return (jnp.zeros((batch, H, P, ds), jnp.float32),
+            jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype))

@@ -1,0 +1,541 @@
+"""Unified LM zoo: decoder-only (dense / MoE / VLM), hybrid (Zamba2),
+attention-free (RWKV6), and encoder-decoder (Seamless) backbones.
+
+All forward paths are built from init/apply function pairs over plain dict
+pytrees, scan-over-layers with ``jax.checkpoint`` remat, and logical-axis
+sharding constraints (no mesh needed for CPU smoke tests).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding import constrain
+from . import rwkv as rwkv_mod
+from . import ssm as ssm_mod
+from .attention import (attn_init, attention, attention_with_cache,
+                        decode_attention, _project_qkv, _sdpa_full,
+                        _sdpa_chunked)
+from .layers import (dense_init, embed_init, mlp_apply, mlp_init, rms_norm,
+                     scan_layers, trip_scope)
+from .moe import expert_capacity, moe_apply, moe_init
+
+Array = jax.Array
+
+# Remat policy for the per-layer checkpoint (hillclimb knob, §Perf):
+# None = save nothing (8ND recompute); jax.checkpoint_policies.* to trade
+# memory for recompute (e.g. dots_with_no_batch_dims_saveable ~ 6ND).
+_REMAT = {"policy": None}
+
+
+def set_remat_policy(policy) -> None:
+    _REMAT["policy"] = policy
+
+
+def _ckpt(f):
+    return jax.checkpoint(f, policy=_REMAT["policy"])
+
+
+# ---------------------------------------------------------------- blocks --
+def block_init(key, cfg: ModelConfig, dtype, *, cross: bool = False,
+               use_moe: bool | None = None):
+    """One transformer block: attn (+optional cross-attn) + MLP/MoE."""
+    use_moe = cfg.family == "moe" if use_moe is None else use_moe
+    ks = jax.random.split(key, 3)
+    p = {"norm1": jnp.zeros((cfg.d_model,), dtype),
+         "attn": attn_init(ks[0], cfg, dtype),
+         "norm2": jnp.zeros((cfg.d_model,), dtype)}
+    if use_moe:
+        p["moe"] = moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    if cross:
+        kc = jax.random.split(ks[2], 4)
+        Dh, Hq, Hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+        p["norm_x"] = jnp.zeros((cfg.d_model,), dtype)
+        p["xattn"] = {
+            "wq_c": dense_init(kc[0], cfg.d_model, Hq * Dh, dtype),
+            "wk_c": dense_init(kc[1], cfg.d_model, Hkv * Dh, dtype),
+            "wv_c": dense_init(kc[2], cfg.d_model, Hkv * Dh, dtype),
+            "wo_c": dense_init(kc[3], Hq * Dh, cfg.d_model, dtype)}
+    return p
+
+
+def _ffn(p, cfg: ModelConfig, h: Array) -> tuple[Array, Array]:
+    if "moe" in p:
+        out, aux = moe_apply(p["moe"], cfg, h)
+        return out, aux
+    return mlp_apply(p["mlp"], h), jnp.zeros((), jnp.float32)
+
+
+def block_apply(p, cfg: ModelConfig, x: Array, *, causal: bool = True,
+                memory: Array | None = None) -> tuple[Array, Array]:
+    """Training/encoding path. memory: encoder output for cross-attn."""
+    h = attention(p["attn"], cfg, rms_norm(x, p["norm1"]), causal=causal,
+                  train=True)
+    x = x + h
+    if memory is not None:
+        x = x + cross_attention(p["xattn"], cfg, rms_norm(x, p["norm_x"]),
+                                memory)
+    out, aux = _ffn(p, cfg, rms_norm(x, p["norm2"]))
+    return x + out, aux
+
+
+def cross_attention(p, cfg: ModelConfig, x: Array, memory: Array) -> Array:
+    """Full (non-causal) attention of x over encoder memory."""
+    B, S, D = x.shape
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    Sm = memory.shape[1]
+    q = (x @ p["wq_c"]).reshape(B, S, Hq, Dh)
+    k = (memory @ p["wk_c"]).reshape(B, Sm, Hkv, Dh)
+    v = (memory @ p["wv_c"]).reshape(B, Sm, Hkv, Dh)
+    out = _sdpa_full(q, k, v, causal=False)
+    return constrain(out.reshape(B, S, -1) @ p["wo_c"], "dp", "sp", None)
+
+
+def cross_kv(p, cfg: ModelConfig, memory: Array):
+    B, Sm, _ = memory.shape
+    Hkv, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    return ((memory @ p["wk_c"]).reshape(B, Sm, Hkv, Dh),
+            (memory @ p["wv_c"]).reshape(B, Sm, Hkv, Dh))
+
+
+def cross_attention_cached(p, cfg: ModelConfig, x: Array, ck: Array,
+                           cv: Array) -> Array:
+    B, S, D = x.shape
+    Hq, Dh = cfg.n_heads, cfg.resolved_head_dim
+    q = (x @ p["wq_c"]).reshape(B, S, Hq, Dh)
+    out = _sdpa_full(q, ck, cv, causal=False)
+    return out.reshape(B, S, -1) @ p["wo_c"]
+
+
+# ------------------------------------------------------- decoder-only LM --
+def lm_init(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    blocks = jax.vmap(lambda k: block_init(k, cfg, dtype))(
+        jax.random.split(ks[0], cfg.n_layers))
+    p = {"embed": embed_init(ks[1], cfg.padded_vocab, cfg.d_model, dtype),
+         "blocks": blocks,
+         "final_norm": jnp.zeros((cfg.d_model,), dtype),
+         "lm_head": embed_init(ks[2], cfg.padded_vocab, cfg.d_model, dtype)}
+    if cfg.family == "vlm":
+        p["patch_proj"] = dense_init(ks[3], cfg.d_model, cfg.d_model, dtype)
+    return p
+
+
+def _embed_tokens(p, cfg: ModelConfig, tokens: Array) -> Array:
+    h = jnp.take(p["embed"], tokens, axis=0)
+    return constrain(h, "dp", None, None)
+
+
+def _lm_logits(p, cfg: ModelConfig, h: Array) -> Array:
+    h = rms_norm(h, p["final_norm"])
+    logits = h @ p["lm_head"].T
+    return constrain(logits, "dp", None, "tp")
+
+
+def _remat_group(L: int) -> int:
+    """Group size for 2-level remat: the divisor of L nearest sqrt(L).
+
+    Activations are stashed once per GROUP boundary (L/k stashes instead of
+    L) and each group's layers are recomputed transiently during its own
+    backward — sqrt-style checkpointing, the standard fix for the L x
+    (B, S, D) stash blowing past HBM on deep models.
+    """
+    import math
+    root = math.sqrt(L)
+    divs = [d for d in range(1, L + 1) if L % d == 0]
+    return min(divs, key=lambda d: abs(d - root))
+
+
+def lm_forward(p, cfg: ModelConfig, tokens: Array,
+               patches: Array | None = None) -> tuple[Array, Array]:
+    """tokens (B, S_text) -> logits (B, S, V). VLM prepends patch embeds."""
+    h = _embed_tokens(p, cfg, tokens)
+    if patches is not None:
+        h = jnp.concatenate([patches.astype(h.dtype) @ p["patch_proj"], h],
+                            axis=1)
+    L = cfg.n_layers
+    k = _remat_group(L)
+    G = L // k
+    grouped = jax.tree.map(lambda x: x.reshape(G, k, *x.shape[1:]),
+                           p["blocks"])
+
+    @_ckpt
+    def layer_body(h, lp):
+        h = constrain(h, "dp", "sp", None)
+        return block_apply(lp, cfg, h)
+
+    @jax.checkpoint
+    def group_body(h, gp):
+        def inner(carry, lp):
+            h, aux = carry
+            with trip_scope(k):
+                h, a = layer_body(h, lp)
+            return (h, aux + a), None
+        (h, aux), _ = jax.lax.scan(
+            inner, (h, jnp.zeros((), jnp.float32)), gp)
+        return h, aux
+
+    def scan_body(carry, gp):
+        h, aux = carry
+        h = constrain(h, "dp", "sp", None)   # sequence-parallel residuals
+        with trip_scope(G):
+            h, a = group_body(h, gp)
+        return (h, aux + a), None
+
+    (h, aux), _ = jax.lax.scan(scan_body, (h, jnp.zeros((), jnp.float32)),
+                               grouped)
+    return rms_norm(h, p["final_norm"]), aux / cfg.n_layers
+
+
+def lm_prefill(p, cfg: ModelConfig, tokens: Array,
+               patches: Array | None = None, max_seq: int | None = None):
+    """Forward + emit per-layer KV stacked (L, B, Smax, Hkv, Dh)."""
+    h = _embed_tokens(p, cfg, tokens)
+    if patches is not None:
+        h = jnp.concatenate([patches.astype(h.dtype) @ p["patch_proj"], h],
+                            axis=1)
+    S = h.shape[1]
+    max_seq = max_seq or S
+
+    def scan_body(h, lp):
+        with trip_scope(cfg.n_layers):
+            out, (k, v) = attention_with_cache(
+                lp["attn"], cfg, rms_norm(h, lp["norm1"]))
+            h = h + out
+            f, _ = _ffn(lp, cfg, rms_norm(h, lp["norm2"]))
+            h = h + f
+            pad = max_seq - S
+            if pad:
+                k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cdt = jnp.dtype(cfg.resolved_cache_dtype)
+            return h, (k.astype(cdt), v.astype(cdt))
+    h, (ks, vs) = jax.lax.scan(scan_body, h, p["blocks"])
+    return _lm_logits(p, cfg, h[:, -1:]), {"k": ks, "v": vs}
+
+
+def lm_decode_step(p, cfg: ModelConfig, token: Array, pos: Array, cache):
+    """One-token decode. token (B, 1) int32; cache {k,v}: (L,B,Smax,Hkv,Dh)."""
+    h = _embed_tokens(p, cfg, token)
+
+    def scan_body(h, inp):
+        lp, ck, cv = inp
+        with trip_scope(cfg.n_layers):
+            out, ck, cv = decode_attention(lp["attn"], cfg,
+                                           rms_norm(h, lp["norm1"]),
+                                           ck, cv, pos)
+            h = h + out
+            f, _ = _ffn(lp, cfg, rms_norm(h, lp["norm2"]))
+            return h + f, (ck, cv)
+    h, (ks, vs) = jax.lax.scan(scan_body, h, (p["blocks"], cache["k"],
+                                              cache["v"]))
+    return _lm_logits(p, cfg, h), {"k": ks, "v": vs}
+
+
+def lm_cache_init(cfg: ModelConfig, batch: int, max_seq: int, dtype):
+    Hkv, Dh, L = cfg.n_kv_heads, cfg.resolved_head_dim, cfg.n_layers
+    shape = (L, batch, max_seq, Hkv, Dh)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ------------------------------------------------------------- RWKV6 LM --
+def rwkv_lm_init(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 3)
+    blocks = jax.vmap(lambda k: rwkv_mod.rwkv_block_init(k, cfg, dtype))(
+        jax.random.split(ks[0], cfg.n_layers))
+    return {"embed": embed_init(ks[1], cfg.padded_vocab, cfg.d_model, dtype),
+            "blocks": blocks,
+            "final_norm": jnp.zeros((cfg.d_model,), dtype),
+            "lm_head": embed_init(ks[2], cfg.padded_vocab, cfg.d_model, dtype)}
+
+
+def rwkv_lm_forward(p, cfg: ModelConfig, tokens: Array):
+    h = _embed_tokens(p, cfg, tokens)
+
+    L = cfg.n_layers
+    k = _remat_group(L)
+    grouped = jax.tree.map(lambda x: x.reshape(L // k, k, *x.shape[1:]),
+                           p["blocks"])
+
+    @_ckpt
+    def layer_body(h, lp):
+        h = constrain(h, "dp", "sp", None)
+        return rwkv_mod.rwkv_block(lp, cfg, h)
+
+    @jax.checkpoint
+    def group_body(h, gp):
+        def inner(h, lp):
+            with trip_scope(k):
+                return layer_body(h, lp), None
+        h, _ = jax.lax.scan(inner, h, gp)
+        return h
+
+    def scan_body(h, gp):
+        h = constrain(h, "dp", "sp", None)
+        with trip_scope(L // k):
+            return group_body(h, gp), None
+    h, _ = jax.lax.scan(scan_body, h, grouped)
+    return rms_norm(h, p["final_norm"]), jnp.zeros((), jnp.float32)
+
+
+def rwkv_lm_prefill(p, cfg: ModelConfig, tokens: Array,
+                    max_seq: int | None = None):
+    h = _embed_tokens(p, cfg, tokens)
+
+    def scan_body(h, lp):
+        with trip_scope(cfg.n_layers):
+            h, ((wkv, ltm), lcm) = rwkv_mod.rwkv_block(lp, cfg, h,
+                                                       return_state=True)
+            return h, {"wkv": wkv, "last_tm": ltm, "last_cm": lcm}
+    h, states = jax.lax.scan(scan_body, h, p["blocks"])
+    return _lm_logits(p, cfg, h[:, -1:]), states
+
+
+def rwkv_lm_decode_step(p, cfg: ModelConfig, token: Array, pos: Array,
+                        cache):
+    h = _embed_tokens(p, cfg, token)
+
+    def scan_body(h, inp):
+        lp, st = inp
+        with trip_scope(cfg.n_layers):
+            h, ((wkv, ltm), lcm) = rwkv_mod.rwkv_block(
+                lp, cfg, h,
+                states=((st["wkv"], st["last_tm"]), st["last_cm"]))
+            return h, {"wkv": wkv, "last_tm": ltm, "last_cm": lcm}
+    h, states = jax.lax.scan(scan_body, h, (p["blocks"], cache))
+    return _lm_logits(p, cfg, h), states
+
+
+def rwkv_cache_init(cfg: ModelConfig, batch: int, max_seq: int, dtype):
+    ((wkv, ltm), lcm) = rwkv_mod.rwkv_state_init(cfg, batch, dtype)
+    L = cfg.n_layers
+    stack = lambda x: jnp.zeros((L,) + x.shape, x.dtype)
+    return {"wkv": stack(wkv), "last_tm": stack(ltm), "last_cm": stack(lcm)}
+
+
+# ------------------------------------------------------ hybrid (Zamba2) --
+def hybrid_init(key, cfg: ModelConfig, dtype):
+    assert cfg.n_layers % cfg.attn_every == 0
+    n_groups = cfg.n_layers // cfg.attn_every
+    ks = jax.random.split(key, 4)
+
+    def group(k):
+        kk = jax.random.split(k, cfg.attn_every)
+        return jax.vmap(lambda kx: _mamba_layer_init(kx, cfg, dtype))(kk)
+    groups = jax.vmap(group)(jax.random.split(ks[0], n_groups))
+    return {"embed": embed_init(ks[1], cfg.padded_vocab, cfg.d_model, dtype),
+            "mgroups": groups,                      # (G, A, ...) stacked
+            "shared": block_init(ks[2], cfg, dtype, use_moe=False),
+            "final_norm": jnp.zeros((cfg.d_model,), dtype),
+            "lm_head": embed_init(ks[3], cfg.padded_vocab, cfg.d_model, dtype)}
+
+
+def _mamba_layer_init(key, cfg: ModelConfig, dtype):
+    return {"norm": jnp.zeros((cfg.d_model,), dtype),
+            "mamba": ssm_mod.mamba_init(key, cfg, dtype)}
+
+
+def hybrid_forward(p, cfg: ModelConfig, tokens: Array):
+    h = _embed_tokens(p, cfg, tokens)
+    n_groups = cfg.n_layers // cfg.attn_every
+
+    @jax.checkpoint
+    def group_body(h, gp):
+        def inner(h, lp):
+            with trip_scope(cfg.attn_every):
+                h = constrain(h, "dp", "sp", None)
+                return h + ssm_mod.mamba_block(
+                    lp["mamba"], cfg, rms_norm(h, lp["norm"])), None
+        h, _ = jax.lax.scan(inner, h, gp)
+        h, _ = block_apply(p["shared"], cfg, h)      # shared attn block
+        return h
+
+    def scan_body(h, gp):
+        h = constrain(h, "dp", "sp", None)
+        with trip_scope(n_groups):
+            return group_body(h, gp), None
+    h, _ = jax.lax.scan(scan_body, h, p["mgroups"])
+    return rms_norm(h, p["final_norm"]), jnp.zeros((), jnp.float32)
+
+
+def hybrid_prefill(p, cfg: ModelConfig, tokens: Array,
+                   max_seq: int | None = None):
+    h = _embed_tokens(p, cfg, tokens)
+    S = h.shape[1]
+    max_seq = max_seq or S
+    n_groups = cfg.n_layers // cfg.attn_every
+
+    def scan_body(h, gp):
+        with trip_scope(n_groups):
+            def inner(h, lp):
+                out, st = ssm_mod.mamba_block(
+                    lp["mamba"], cfg, rms_norm(h, lp["norm"]),
+                    return_state=True)
+                return h + out, st
+            h, sstates = jax.lax.scan(inner, h, gp)
+            out, (k, v) = attention_with_cache(
+                p["shared"]["attn"], cfg, rms_norm(h, p["shared"]["norm1"]))
+            h = h + out
+            f, _ = _ffn(p["shared"], cfg, rms_norm(h, p["shared"]["norm2"]))
+            h = h + f
+            pad = max_seq - S
+            if pad:
+                k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return h, (sstates, (k, v))
+    h, (sstates, kv) = jax.lax.scan(scan_body, h, p["mgroups"])
+    return _lm_logits(p, cfg, h[:, -1:]), {"ssm_h": sstates[0],
+                                           "ssm_conv": sstates[1],
+                                           "k": kv[0], "v": kv[1]}
+
+
+def hybrid_decode_step(p, cfg: ModelConfig, token: Array, pos: Array, cache):
+    h = _embed_tokens(p, cfg, token)
+    n_groups = cfg.n_layers // cfg.attn_every
+
+    def scan_body(h, inp):
+        gp, st, ck, cv = inp
+        with trip_scope(n_groups):
+            def inner(h, lpst):
+                lp, s = lpst
+                out, s = ssm_mod.mamba_step(
+                    lp["mamba"], cfg, rms_norm(h, lp["norm"]), s)
+                return h + out, s
+            h, st = jax.lax.scan(inner, h, (gp, st))
+            out, ck, cv = decode_attention(
+                p["shared"]["attn"], cfg,
+                rms_norm(h, p["shared"]["norm1"]), ck, cv, pos)
+            h = h + out
+            f, _ = _ffn(p["shared"], cfg, rms_norm(h, p["shared"]["norm2"]))
+            return h + f, (st, ck, cv)
+    h, (st, ck, cv) = jax.lax.scan(
+        scan_body, h, (p["mgroups"], (cache["ssm_h"], cache["ssm_conv"]),
+                       cache["k"], cache["v"]))
+    return _lm_logits(p, cfg, h), {"ssm_h": st[0], "ssm_conv": st[1],
+                                   "k": ck, "v": cv}
+
+
+def hybrid_cache_init(cfg: ModelConfig, batch: int, max_seq: int, dtype):
+    G = cfg.n_layers // cfg.attn_every
+    A = cfg.attn_every
+    h0, conv0 = ssm_mod.mamba_state_init(cfg, batch, dtype)
+    stack = lambda x: jnp.zeros((G, A) + x.shape, x.dtype)
+    Hkv, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    kv_shape = (G, batch, max_seq, Hkv, Dh)
+    return {"ssm_h": stack(h0), "ssm_conv": stack(conv0),
+            "k": jnp.zeros(kv_shape, dtype),
+            "v": jnp.zeros(kv_shape, dtype)}
+
+
+# -------------------------------------------------- encoder-decoder LM --
+def encdec_init(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 5)
+    enc = jax.vmap(lambda k: block_init(k, cfg, dtype, use_moe=False))(
+        jax.random.split(ks[0], cfg.n_enc_layers))
+    dec = jax.vmap(lambda k: block_init(k, cfg, dtype, cross=True,
+                                        use_moe=False))(
+        jax.random.split(ks[1], cfg.n_layers))
+    return {"audio_proj": dense_init(ks[2], cfg.d_model, cfg.d_model, dtype),
+            "embed": embed_init(ks[3], cfg.padded_vocab, cfg.d_model, dtype),
+            "enc_blocks": enc, "dec_blocks": dec,
+            "enc_norm": jnp.zeros((cfg.d_model,), dtype),
+            "final_norm": jnp.zeros((cfg.d_model,), dtype),
+            "lm_head": embed_init(ks[4], cfg.padded_vocab, cfg.d_model, dtype)}
+
+
+def encode(p, cfg: ModelConfig, frames: Array) -> Array:
+    """frames (B, Se, D) precomputed embeddings (frontend stub)."""
+    h = frames @ p["audio_proj"]
+    h = constrain(h, "dp", None, None)
+
+    @jax.checkpoint
+    def body(h, lp):
+        h = constrain(h, "dp", "sp", None)
+        h, _ = block_apply(lp, cfg, h, causal=False)
+        return h
+
+    def scan_body(h, lp):
+        h = constrain(h, "dp", "sp", None)
+        with trip_scope(cfg.n_enc_layers):
+            return body(h, lp), None
+    h, _ = jax.lax.scan(scan_body, h, p["enc_blocks"])
+    return rms_norm(h, p["enc_norm"])
+
+
+def encdec_forward(p, cfg: ModelConfig, frames: Array, tokens: Array):
+    memory = encode(p, cfg, frames)
+    h = _embed_tokens(p, cfg, tokens)
+
+    @jax.checkpoint
+    def body(h, lp):
+        h = constrain(h, "dp", "sp", None)
+        h, _ = block_apply(lp, cfg, h, memory=memory)
+        return h
+
+    def scan_body(h, lp):
+        h = constrain(h, "dp", "sp", None)
+        with trip_scope(cfg.n_layers):
+            return body(h, lp), None
+    h, _ = jax.lax.scan(scan_body, h, p["dec_blocks"])
+    return rms_norm(h, p["final_norm"]), jnp.zeros((), jnp.float32)
+
+
+def encdec_prefill(p, cfg: ModelConfig, frames: Array, tokens: Array,
+                   max_seq: int | None = None):
+    memory = encode(p, cfg, frames)
+    h = _embed_tokens(p, cfg, tokens)
+    S = h.shape[1]
+    max_seq = max_seq or S
+
+    def scan_body(h, lp):
+        with trip_scope(cfg.n_layers):
+            out, (k, v) = attention_with_cache(
+                lp["attn"], cfg, rms_norm(h, lp["norm1"]))
+            h = h + out
+            ck, cv = cross_kv(lp["xattn"], cfg, memory)
+            h = h + cross_attention_cached(
+                lp["xattn"], cfg, rms_norm(h, lp["norm_x"]), ck, cv)
+            f, _ = _ffn(lp, cfg, rms_norm(h, lp["norm2"]))
+            h = h + f
+            pad = max_seq - S
+            if pad:
+                k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return h, (k, v, ck, cv)
+    h, (ks, vs, cks, cvs) = jax.lax.scan(scan_body, h, p["dec_blocks"])
+    return _lm_logits(p, cfg, h[:, -1:]), {"k": ks, "v": vs,
+                                           "ck": cks, "cv": cvs}
+
+
+def encdec_decode_step(p, cfg: ModelConfig, token: Array, pos: Array, cache):
+    h = _embed_tokens(p, cfg, token)
+
+    def scan_body(h, inp):
+        lp, ck_s, cv_s, ck_x, cv_x = inp
+        with trip_scope(cfg.n_layers):
+            out, ck_s, cv_s = decode_attention(
+                lp["attn"], cfg, rms_norm(h, lp["norm1"]), ck_s, cv_s, pos)
+            h = h + out
+            h = h + cross_attention_cached(
+                lp["xattn"], cfg, rms_norm(h, lp["norm_x"]), ck_x, cv_x)
+            f, _ = _ffn(lp, cfg, rms_norm(h, lp["norm2"]))
+            return h + f, (ck_s, cv_s)
+    h, (ks, vs) = jax.lax.scan(
+        scan_body, h, (p["dec_blocks"], cache["k"], cache["v"],
+                       cache["ck"], cache["cv"]))
+    return _lm_logits(p, cfg, h), {"k": ks, "v": vs, "ck": cache["ck"],
+                                   "cv": cache["cv"]}
+
+
+def encdec_cache_init(cfg: ModelConfig, batch: int, max_seq: int,
+                      enc_len: int, dtype):
+    Hkv, Dh, L = cfg.n_kv_heads, cfg.resolved_head_dim, cfg.n_layers
+    return {"k": jnp.zeros((L, batch, max_seq, Hkv, Dh), dtype),
+            "v": jnp.zeros((L, batch, max_seq, Hkv, Dh), dtype),
+            "ck": jnp.zeros((L, batch, enc_len, Hkv, Dh), dtype),
+            "cv": jnp.zeros((L, batch, enc_len, Hkv, Dh), dtype)}

@@ -1,0 +1,280 @@
+"""Unified model-zoo API: one entry point per lifecycle stage, dispatching
+on ``ModelConfig.family``.
+
+    init_params(key, cfg)                  -> params pytree
+    loss_fn(params, cfg, batch)            -> (loss, aux)
+    prefill(params, cfg, batch, max_seq)   -> (logits_last, cache)
+    decode_step(params, cfg, batch, cache) -> (logits, cache)
+    init_cache(cfg, batch, max_seq, dtype) -> cache pytree
+    batch_shapes(cfg, shape)               -> dict of (shape, dtype) specs
+
+`batch` dicts (matching ``launch.dryrun.input_specs``):
+    train   — tokens/labels (B, S) i32 [+ patches (B, P, D) | frames (B, Se, D)]
+    decode  — token (B, 1) i32, pos () i32 [+ cache]
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from . import transformer as tfm
+
+Array = jax.Array
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ----------------------------------------------------------------- init --
+def init_params(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    if cfg.family == "ssm":
+        return tfm.rwkv_lm_init(key, cfg, dt)
+    if cfg.family == "hybrid":
+        return tfm.hybrid_init(key, cfg, dt)
+    if cfg.family == "audio":
+        return tfm.encdec_init(key, cfg, dt)
+    return tfm.lm_init(key, cfg, dt)        # dense / moe / vlm
+
+
+def param_avals(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree of the params — no allocation (dry-run)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# -------------------------------------------------------------- forward --
+def forward_hidden(params, cfg: ModelConfig, batch: dict
+                   ) -> tuple[Array, Array]:
+    """Final-normed hidden states (B, S, D) + MoE aux loss."""
+    if cfg.family == "ssm":
+        return tfm.rwkv_lm_forward(params, cfg, batch["tokens"])
+    if cfg.family == "hybrid":
+        return tfm.hybrid_forward(params, cfg, batch["tokens"])
+    if cfg.family == "audio":
+        return tfm.encdec_forward(params, cfg, batch["frames"],
+                                  batch["tokens"])
+    if cfg.family == "vlm":
+        return tfm.lm_forward(params, cfg, batch["tokens"],
+                              patches=batch["patches"])
+    return tfm.lm_forward(params, cfg, batch["tokens"])
+
+
+def forward(params, cfg: ModelConfig, batch: dict) -> tuple[Array, Array]:
+    """Full logits (B, S, V) — small-model / smoke-test path."""
+    from repro.sharding import constrain
+    h, aux = forward_hidden(params, cfg, batch)
+    logits = h @ params["lm_head"].T
+    logits = constrain(logits, "dp", None, "tp")
+    return logits[..., :cfg.vocab_size], aux
+
+
+def _chunked_xent(h: Array, lm_head: Array, labels: Array,
+                  chunk: int, vocab: int) -> Array:
+    """Cross-entropy without materializing (B, S, V) logits: scan over
+    sequence chunks, projecting + reducing one chunk at a time. Each chunk
+    is ``jax.checkpoint``ed so the backward pass recomputes its logits
+    instead of stashing nc (B, chunk, V) residuals. Padded vocab ids are
+    masked to -inf."""
+    from repro.models.layers import trip_scope
+    from repro.sharding import constrain
+    B, S, D = h.shape
+    V_pad = lm_head.shape[0]
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S                                 # fallback: single chunk
+    nc = S // chunk
+    hs = h.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    # keep the loss inputs (and via WSC-transpose, their cotangents)
+    # sequence-sharded — otherwise dh and the lm_head wgrad operands
+    # materialize (B, S, D) per dp shard in f32.
+    hs = constrain(hs, None, "dp", "sp", None)
+    ls = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_xent(hc, lc):
+        logits = hc @ lm_head.T
+        logits = constrain(logits, "dp", None, "tp").astype(jnp.float32)
+        if V_pad != vocab:
+            pad_mask = jnp.arange(V_pad) >= vocab
+            logits = jnp.where(pad_mask[None, None], -1e30, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - tgt)
+
+    def body(acc, inp):
+        hc, lc = inp
+        with trip_scope(nc):
+            return acc + chunk_xent(hc, lc), None
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ls))
+    return tot / (B * S)
+
+
+_LOSS_CHUNK = {"value": 512}
+
+
+def set_loss_chunk(v: int) -> None:
+    """Hillclimb knob: sequence-chunk size of the chunked cross-entropy."""
+    _LOSS_CHUNK["value"] = v
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict,
+            aux_weight: float = 0.01,
+            loss_chunk: int | None = None) -> tuple[Array, dict]:
+    loss_chunk = loss_chunk or _LOSS_CHUNK["value"]
+    from repro.sharding import constrain
+    h, aux = forward_hidden(params, cfg, batch)
+    labels = batch["labels"]
+    S = labels.shape[1]
+    h = h[:, -S:]                                 # vlm: text positions only
+    h = constrain(h, "dp", "sp", None)
+    xent = _chunked_xent(h, params["lm_head"], labels, loss_chunk,
+                         cfg.vocab_size)
+    loss = xent + aux_weight * aux
+    return loss, {"xent": xent, "aux": aux}
+
+
+# ---------------------------------------------------------------- serve --
+def prefill(params, cfg: ModelConfig, batch: dict,
+            max_seq: int | None = None):
+    if cfg.family == "ssm":
+        return tfm.rwkv_lm_prefill(params, cfg, batch["tokens"], max_seq)
+    if cfg.family == "hybrid":
+        return tfm.hybrid_prefill(params, cfg, batch["tokens"], max_seq)
+    if cfg.family == "audio":
+        return tfm.encdec_prefill(params, cfg, batch["frames"],
+                                  batch["tokens"], max_seq)
+    if cfg.family == "vlm":
+        return tfm.lm_prefill(params, cfg, batch["tokens"],
+                              patches=batch["patches"], max_seq=max_seq)
+    return tfm.lm_prefill(params, cfg, batch["tokens"], max_seq=max_seq)
+
+
+def decode_step(params, cfg: ModelConfig, batch: dict, cache):
+    token, pos = batch["token"], batch["pos"]
+    if cfg.family == "ssm":
+        return tfm.rwkv_lm_decode_step(params, cfg, token, pos, cache)
+    if cfg.family == "hybrid":
+        return tfm.hybrid_decode_step(params, cfg, token, pos, cache)
+    if cfg.family == "audio":
+        return tfm.encdec_decode_step(params, cfg, token, pos, cache)
+    return tfm.lm_decode_step(params, cfg, token, pos, cache)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               enc_len: int | None = None):
+    dt = jnp.dtype(cfg.resolved_cache_dtype)
+    if cfg.family == "ssm":
+        return tfm.rwkv_cache_init(cfg, batch, max_seq, dt)
+    if cfg.family == "hybrid":
+        return tfm.hybrid_cache_init(cfg, batch, max_seq, dt)
+    if cfg.family == "audio":
+        return tfm.encdec_cache_init(cfg, batch, max_seq,
+                                     enc_len or max_seq, dt)
+    return tfm.lm_cache_init(cfg, batch, max_seq, dt)
+
+
+def cache_avals(cfg: ModelConfig, batch: int, max_seq: int,
+                enc_len: int | None = None):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_seq, enc_len))
+
+
+# --------------------------------------------------------- input shapes --
+def batch_shapes(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStructs for every input of the (cfg, shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = _dtype(cfg)
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            Se = Sd = S // 2
+            return {"frames": sd((B, Se, cfg.d_model), dt),
+                    "tokens": sd((B, Sd), i32),
+                    "labels": sd((B, Sd), i32)}
+        if cfg.family == "vlm":
+            P = cfg.frontend_len
+            return {"patches": sd((B, P, cfg.d_model), dt),
+                    "tokens": sd((B, S - P), i32),
+                    "labels": sd((B, S - P), i32)}
+        return {"tokens": sd((B, S), i32), "labels": sd((B, S), i32)}
+    # decode: one token + full cache of seq_len
+    return {"token": sd((B, 1), i32), "pos": sd((), i32)}
+
+
+def decode_cache_avals(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    enc_len = S // 2 if cfg.family == "audio" else None
+    max_seq = S // 2 if cfg.family == "audio" else S
+    return cache_avals(cfg, B, max_seq, enc_len)
+
+
+# ------------------------------------------------------- sharding specs --
+def cache_pspec(path: str, shape: tuple[int, ...], mesh,
+                dp="data", tp="model") -> Any:
+    """PartitionSpec for one cache leaf, keyed by leaf name.
+
+    k/v/ck/cv (L, B, S, Hkv, Dh): batch->dp, heads->tp when divisible,
+    else sequence->tp (sequence-parallel cache — the long_500k path).
+    wkv (L, B, H, hd, hd): batch->dp, heads->tp.
+    ssm_h (G, A, B, H, P, ds): batch->dp, heads->tp.
+    ssm_conv / last_* : batch->dp, channels->tp.
+    """
+    from jax.sharding import PartitionSpec as P
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def size(ax):
+        if ax is None:
+            return 1
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        out = 1
+        for a in axes:
+            out *= sizes[a]
+        return out
+
+    name = path.split("/")[-1]
+    dims: list = [None] * len(shape)
+    dpn, tpn = size(dp), size(tp)
+
+    def put(i, ax, ax_n):
+        if ax_n > 1 and shape[i] % ax_n == 0 and dims[i] is None:
+            dims[i] = ax
+            return True
+        return False
+
+    if name in ("k", "v", "ck", "cv"):          # (L, B, S, Hkv, Dh)
+        put(1, dp, dpn)
+        # heads -> tp; else head_dim -> tp (a dynamic-update at `pos`
+        # into an S-sharded cache forces GSPMD cache re-gathers); S last.
+        put(3, tp, tpn) or put(4, tp, tpn) or put(2, tp, tpn)
+    elif name == "wkv":                          # (L, B, H, hd, hd)
+        put(1, dp, dpn)
+        put(2, tp, tpn)
+    elif name == "ssm_h":                        # (G, A, B, H, P, ds)
+        put(2, dp, dpn)
+        put(3, tp, tpn)
+    elif name == "ssm_conv":                     # (G, A, B, K-1, conv_dim)
+        put(2, dp, dpn)
+        put(4, tp, tpn)
+    elif len(shape) >= 2:                        # last_tm/last_cm (L, B, D)
+        put(1, dp, dpn)
+        put(len(shape) - 1, tp, tpn)
+    return P(*dims)
+
+
+def cache_specs(cfg: ModelConfig, cache_tree, mesh, dp=None, tp="model"):
+    if dp is None:
+        dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+
+    def key_str(kp):
+        return "/".join(str(getattr(k, "key", getattr(k, "idx", "")))
+                        for k in kp)
+    specs = [cache_pspec(key_str(kp), tuple(leaf.shape), mesh, dp, tp)
+             for kp, leaf in paths_leaves]
+    return jax.tree_util.tree_unflatten(treedef, specs)

@@ -1,0 +1,3 @@
+"""Optimizers + distributed-optimization tricks."""
+from .adamw import AdamWConfig, adamw_init, adamw_update
+from . import compress

@@ -1,0 +1,80 @@
+"""Error-feedback int8 gradient compression.
+
+Quantize each leaf to int8 with a per-leaf scale before the (simulated or
+shard_map) all-reduce; the quantization residual is carried in an error
+buffer and added back to the next step's gradient, so the *accumulated*
+gradient signal is unbiased (EF-SGD / 1-bit-Adam style). With linear
+collectives, ``psum(quantize(g))`` then dequantize is equivalent to an
+int8-on-the-wire all-reduce — an 4x wire-byte reduction vs f32 (2x vs bf16).
+
+Used two ways:
+  * LM training: wrap grads with ``ef_compress_tree`` before adamw_update.
+  * Bi-cADMM: compress the consensus statistic (x_i + u_i) before the
+    `nodes` psum (``ShardedBiCADMM(compress="int8_ef")``) — beyond-paper
+    communication optimization (DESIGN §6).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class QTensor(NamedTuple):
+    q: Array        # int8 payload
+    scale: Array    # () f32
+
+
+def quantize(x: Array) -> QTensor:
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q, scale)
+
+
+def dequantize(qt: QTensor, dtype=jnp.float32) -> Array:
+    return (qt.q.astype(jnp.float32) * qt.scale).astype(dtype)
+
+
+def ef_init(tree) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), tree)
+
+
+def ef_compress_tree(grads, err) -> tuple[Any, Any, dict]:
+    """Compress each leaf with error feedback.
+
+    Returns (decompressed grads as seen after the wire, new error buffers,
+    stats). The caller feeds the returned grads to the optimizer.
+    """
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        qt = quantize(corrected)
+        deq = dequantize(qt)
+        return deq.astype(g.dtype), corrected - deq
+
+    out = jax.tree.map(one, grads, err)
+    newg = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    newe = jax.tree.map(lambda t: t[1], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    bytes_fp = sum(l.size * 4 for l in jax.tree.leaves(grads))
+    return newg, newe, {"wire_bytes_int8": bytes_fp // 4,
+                        "wire_bytes_f32": bytes_fp}
+
+
+def psum_int8_ef(x: Array, err: Array, axis: str) -> tuple[Array, Array]:
+    """int8-on-the-wire psum with error feedback (shard_map helper).
+
+    The payload is summed as int32 (exact) with a pmax'd shared scale, so
+    the result equals dequantize(psum(quantize(x))) on every shard.
+    """
+    corrected = x.astype(jnp.float32) + err
+    scale = jax.lax.pmax(jnp.max(jnp.abs(corrected)), axis) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(corrected / scale), -127, 127)
+    local_deq = q * scale
+    summed = jax.lax.psum(q.astype(jnp.int32), axis)
+    return summed.astype(jnp.float32) * scale, corrected - local_deq

@@ -1,0 +1,2 @@
+from .ctx import (MeshCtx, constrain, get_mesh_ctx, mesh_ctx, set_mesh_ctx)
+from . import rules

@@ -1,0 +1,109 @@
+"""Logical-axis sharding context.
+
+Model code calls ``constrain(x, "dp", None, "tp")`` with *logical* axis
+names; the launch layer installs a :class:`MeshCtx` mapping logical names to
+physical mesh axes. With no context installed (unit tests, single-device
+smoke runs) ``constrain`` is a no-op, so model code never needs a mesh.
+
+Logical axes:
+  dp  — batch/data parallel  (production: ("pod", "data"))
+  tp  — tensor/model parallel (production: "model")
+  fsdp — parameter sharding axis for ZeRO-style weight sharding
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCtx:
+    mesh: Mesh
+    logical: dict   # logical name -> physical axis (str | tuple | None)
+
+    def resolve(self, *axes) -> P:
+        out = []
+        for a in axes:
+            if a is None:
+                out.append(None)
+            elif isinstance(a, (tuple, list)):
+                phys = []
+                for sub in a:
+                    p = self.logical.get(sub, sub)
+                    if p is None:
+                        continue
+                    phys.extend(p if isinstance(p, tuple) else (p,))
+                out.append(tuple(phys) if phys else None)
+            else:
+                p = self.logical.get(a, a)
+                out.append(p)
+        return P(*out)
+
+    def sharding(self, *axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.resolve(*axes))
+
+
+def set_mesh_ctx(ctx: MeshCtx | None):
+    _state.ctx = ctx
+
+
+def get_mesh_ctx() -> MeshCtx | None:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def mesh_ctx(ctx: MeshCtx):
+    prev = get_mesh_ctx()
+    set_mesh_ctx(ctx)
+    try:
+        yield ctx
+    finally:
+        set_mesh_ctx(prev)
+
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    """with_sharding_constraint with logical axis names; no-op without ctx.
+
+    Axes whose mesh size does not divide the corresponding dim are dropped
+    (replicated on that dim) so model code never emits an invalid spec —
+    e.g. 14 query heads over tp=16 falls back to replication.
+    """
+    ctx = get_mesh_ctx()
+    if ctx is None:
+        return x
+    spec = ctx.resolve(*axes)
+    sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    fixed = []
+    used: set = set()
+    for dim, entry in enumerate(spec):
+        if entry is None or dim >= x.ndim:
+            fixed.append(None)
+            continue
+        names = tuple(entry) if isinstance(entry, tuple) else (entry,)
+        # drop axes already consumed by an earlier dim (profiles may map
+        # two logical names onto overlapping physical axes)
+        names = tuple(nm for nm in names if nm not in used)
+
+        def axsize(nms):
+            total = 1
+            for nm in nms:
+                total *= sizes.get(nm, 1)
+            return total
+
+        # shrink to the longest prefix that divides the dim (e.g. batch
+        # 256 on a 512-way ("pod","data","model") dp uses ("pod","data"))
+        while names and x.shape[dim] % axsize(names) != 0:
+            names = names[:-1]
+        if not names:
+            fixed.append(None)
+            continue
+        used.update(names)
+        fixed.append(names if len(names) > 1 else names[0])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*fixed)))

@@ -1,0 +1,147 @@
+"""FSDP + TP sharding rule engine.
+
+Maps every parameter / optimizer-state / activation leaf to a
+``PartitionSpec`` from its *tree path* and shape. The rules encode the
+standard megatron-style TP sweep plus ZeRO-3 FSDP over the data axis:
+
+* up-projections  (d_model -> wide)   : P(fsdp, tp)
+* down-projections (wide -> d_model)  : P(tp, fsdp)
+* embeddings / lm head (vocab, d)     : P(tp, fsdp)   (vocab-parallel)
+* MoE expert stacks (E, d_in, d_out)  : P(tp, fsdp, None)  (expert-parallel)
+* per-feature vectors (norms, biases) : replicated
+* stacked-layer leading L axis        : never sharded
+
+``fsdp``/``tp`` are *logical* names resolved against the active mesh by the
+launch layer ("data" / "model" on the production mesh, with "pod" joining
+the batch axis only). Leaves whose dim sizes do not divide the mesh axis
+fall back to replication on that dim — the engine never emits an invalid
+spec, so every (arch x mesh) combination lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# leaf-name -> (role) table. Roles decide which dim gets tp.
+_UP = ("wq", "wk", "wv", "w_gate", "w_up", "in_proj", "w_r", "w_k", "w_v",
+       "w_g", "w_dt", "wq_c", "wk_c", "wv_c")
+_DOWN = ("wo", "w_down", "out_proj", "w_o", "wo_c")
+_EMBED = ("embed", "lm_head", "patch_proj", "audio_proj")
+_REPLICATED_SUFFIX = ("norm", "bias", "scale", "a_log", "dt_bias", "d_skip",
+                      "decay", "boost", "mix", "router")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Resolves logical (fsdp, tp, ep) onto physical mesh axes."""
+    fsdp: str | tuple[str, ...] | None = "data"
+    tp: str | tuple[str, ...] | None = "model"
+    ep: str | tuple[str, ...] | None = "model"   # expert-parallel (MoE)
+
+    def _axis_size(self, mesh: Mesh, axis) -> int:
+        if axis is None:
+            return 1
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        size = 1
+        for a in axes:
+            size *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+        return size
+
+    def spec_for(self, path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+        """PartitionSpec for one leaf. `path` is '/'-joined tree path."""
+        name = path.split("/")[-1]
+        lname = path.lower()
+        tp_n = self._axis_size(mesh, self.tp)
+        fs_n = self._axis_size(mesh, self.fsdp)
+
+        def ok(dim_size: int, ax_size: int) -> bool:
+            return ax_size > 1 and dim_size % ax_size == 0
+
+        def put(dims: list, i: int, axis, ax_size: int):
+            if 0 <= i < len(shape) and ok(shape[i], ax_size) \
+                    and dims[i] is None and not _conflicts(dims, axis):
+                dims[i] = axis
+
+        def _conflicts(dims, axis) -> bool:
+            flat = set()
+            for d in dims:
+                if d is None:
+                    continue
+                flat.update(d if isinstance(d, tuple) else (d,))
+            new = set(axis if isinstance(axis, tuple) else (axis,))
+            return bool(flat & new)
+
+        dims: list[Any] = [None] * len(shape)
+        if len(shape) == 0 or any(n in name for n in _REPLICATED_SUFFIX):
+            return P(*dims)
+
+        # stacked layers: leading axis of ndim>=3 matmul stacks is L or E.
+        # Heuristic: treat trailing two dims as the matmul; a leading E dim
+        # on expert stacks is expert-parallel (tp).
+        lead = len(shape) - 2
+        if any(k == name or name.startswith(k) for k in _EMBED):
+            # (V, D) or (L?, V, D): vocab-parallel
+            put(dims, lead, self.tp, tp_n)
+            put(dims, lead + 1, self.fsdp, fs_n)
+            return P(*dims)
+        if "expert" in lname or (len(shape) >= 3 and name in _UP + _DOWN
+                                 and "moe" in lname):
+            ep_n = self._axis_size(mesh, self.ep)
+            put(dims, lead - 1, self.ep, ep_n)       # E dim
+            # ZeRO-shard the matmul dims over whatever fsdp axes the ep
+            # axis did not consume
+            ep_axes = set(self.ep if isinstance(self.ep, tuple)
+                          else (self.ep,)) if self.ep else set()
+            fs_axes = (self.fsdp if isinstance(self.fsdp, tuple)
+                       else (self.fsdp,)) if self.fsdp else ()
+            rem = tuple(a for a in fs_axes if a not in ep_axes)
+            if rem:
+                rem = rem if len(rem) > 1 else rem[0]
+                put(dims, lead, rem, self._axis_size(mesh, rem))
+            return P(*dims)
+        if any(name == k or name.startswith(k) for k in _DOWN):
+            put(dims, lead, self.tp, tp_n)
+            put(dims, lead + 1, self.fsdp, fs_n)
+            return P(*dims)
+        if any(name == k or name.startswith(k) for k in _UP):
+            put(dims, lead, self.fsdp, fs_n)
+            put(dims, lead + 1, self.tp, tp_n)
+            return P(*dims)
+        if len(shape) >= 2:
+            # unknown matmul-like leaf: fsdp on in, tp on out
+            put(dims, lead, self.fsdp, fs_n)
+            put(dims, lead + 1, self.tp, tp_n)
+            return P(*dims)
+        return P(*dims)
+
+    # ---- pytree-level API ---------------------------------------------------
+    def tree_specs(self, tree: Any, mesh: Mesh) -> Any:
+        """PartitionSpec pytree matching `tree` (of arrays or avals)."""
+        paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+
+        def key_str(kp) -> str:
+            parts = []
+            for k in kp:
+                if hasattr(k, "key"):
+                    parts.append(str(k.key))
+                elif hasattr(k, "name"):
+                    parts.append(str(k.name))
+                elif hasattr(k, "idx"):
+                    parts.append(str(k.idx))
+            return "/".join(parts)
+
+        specs = [self.spec_for(key_str(kp), tuple(leaf.shape), mesh)
+                 for kp, leaf in paths_leaves]
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+    def tree_shardings(self, tree: Any, mesh: Mesh) -> Any:
+        return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            self.tree_specs(tree, mesh),
+                            is_leaf=lambda s: isinstance(s, P))
+
+
+PRODUCTION_RULES = ShardingRules(fsdp="data", tp="model")

@@ -1,0 +1,127 @@
+"""Integration tests: Bi-cADMM recovers planted sparse models (paper §4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BiCADMM, BiCADMMConfig
+from repro.data import (SyntheticSpec, make_sparse_classification,
+                        make_sparse_regression, make_sparse_softmax)
+
+
+def _support_f1(true_sup, got_sup):
+    tp = np.sum(true_sup & got_sup)
+    return 2 * tp / (true_sup.sum() + got_sup.sum())
+
+
+def test_sls_exact_support_recovery():
+    spec = SyntheticSpec(4, 250, 100, sparsity_level=0.8, noise=1e-3)
+    As, bs, x_true = make_sparse_regression(0, spec)
+    cfg = BiCADMMConfig(kappa=spec.kappa, gamma=10.0, rho_c=1.0, alpha=0.5,
+                        max_iter=400, tol=1e-5)
+    res = BiCADMM("squared", cfg).fit(As, bs)
+    assert np.array_equal(np.array(res.support), np.array(x_true != 0))
+    assert float(res.p_r) < 1e-4 and float(res.b_r) < 1e-4
+    # final iterate is exactly kappa-sparse
+    assert int(jnp.sum(res.x != 0)) <= spec.kappa
+
+
+def test_sls_feature_split_matches_direct():
+    """Algorithm 2 path must agree with the direct-prox oracle."""
+    spec = SyntheticSpec(2, 120, 60, sparsity_level=0.75, noise=1e-3)
+    As, bs, x_true = make_sparse_regression(1, spec)
+    kw = dict(kappa=spec.kappa, gamma=10.0, rho_c=1.0, alpha=0.5,
+              max_iter=300, tol=1e-5)
+    r1 = BiCADMM("squared", BiCADMMConfig(**kw)).fit(As, bs)
+    r2 = BiCADMM("squared", BiCADMMConfig(
+        **kw, n_feature_blocks=4, inner_iters=25)).fit(As, bs)
+    assert np.array_equal(np.array(r1.support), np.array(r2.support))
+    np.testing.assert_allclose(np.array(r1.x), np.array(r2.x),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_sls_residual_histories_decrease():
+    spec = SyntheticSpec(4, 100, 80, sparsity_level=0.8, noise=1e-3)
+    As, bs, _ = make_sparse_regression(2, spec)
+    cfg = BiCADMMConfig(kappa=spec.kappa, gamma=10.0, rho_c=1.0, alpha=0.5)
+    res = BiCADMM("squared", cfg).fit_with_history(As, bs, iters=120)
+    p = np.array(res.history["p_r"])
+    b = np.array(res.history["b_r"])
+    assert p[-1] < 1e-2 * p[10]
+    assert b[-1] < 1e-2      # bi-linear constraint satisfied
+    assert float(res.p_r) == pytest.approx(p[-1])
+
+
+def test_slogr_recovery():
+    spec = SyntheticSpec(3, 400, 40, sparsity_level=0.75, noise=0.0)
+    As, bs, x_true = make_sparse_classification(3, spec)
+    cfg = BiCADMMConfig(kappa=spec.kappa, gamma=50.0, rho_c=0.5, alpha=0.5,
+                        max_iter=250, tol=3e-4)
+    res = BiCADMM("logistic", cfg).fit(As, bs)
+    f1 = _support_f1(np.array(x_true != 0), np.array(res.support))
+    assert f1 >= 0.8, f1
+    # the fitted sparse model must classify the training set well
+    pred = jnp.einsum("nmf,f->nm", As, res.x)
+    acc = float(jnp.mean(jnp.sign(pred) == bs))
+    assert acc > 0.9, acc
+
+
+def test_ssvm_recovery():
+    spec = SyntheticSpec(2, 300, 40, sparsity_level=0.75, noise=0.0)
+    As, bs, x_true = make_sparse_classification(4, spec)
+    cfg = BiCADMMConfig(kappa=spec.kappa, gamma=50.0, rho_c=0.5, alpha=0.5,
+                        max_iter=250, tol=3e-4)
+    res = BiCADMM("smoothed_hinge", cfg).fit(As, bs)
+    pred = jnp.einsum("nmf,f->nm", As, res.x)
+    acc = float(jnp.mean(jnp.sign(pred) == bs))
+    assert acc > 0.9, acc
+
+
+def test_ssr_softmax_recovery():
+    spec = SyntheticSpec(2, 400, 30, sparsity_level=0.7, noise=0.0,
+                         n_classes=3)
+    As, bs, x_true = make_sparse_softmax(5, spec)
+    kappa = int(jnp.sum(x_true != 0))  # kappa on the flattened (n*C,) vector
+    cfg = BiCADMMConfig(kappa=kappa, gamma=50.0, rho_c=0.5, alpha=0.5,
+                        max_iter=200, tol=5e-4)
+    res = BiCADMM("softmax", cfg, n_classes=3).fit(As, bs)
+    pred = jnp.einsum("nmf,fc->nmc", As, res.x.reshape(30, 3))
+    acc = float(jnp.mean(jnp.argmax(pred, -1) == bs))
+    assert acc > 0.85, acc
+
+
+def test_ssr_feature_split_runs():
+    spec = SyntheticSpec(2, 200, 24, sparsity_level=0.7, noise=0.0,
+                         n_classes=3)
+    As, bs, x_true = make_sparse_softmax(6, spec)
+    kappa = int(jnp.sum(x_true != 0))
+    cfg = BiCADMMConfig(kappa=kappa, gamma=50.0, rho_c=0.5, alpha=0.5,
+                        max_iter=120, tol=5e-4, n_feature_blocks=3,
+                        inner_iters=20)
+    res = BiCADMM("softmax", cfg, n_classes=3).fit(As, bs)
+    pred = jnp.einsum("nmf,fc->nmc", As, res.x.reshape(24, 3))
+    acc = float(jnp.mean(jnp.argmax(pred, -1) == bs))
+    assert acc > 0.8, acc
+
+
+def test_over_relaxation_converges():
+    spec = SyntheticSpec(4, 100, 60, sparsity_level=0.8, noise=1e-3)
+    As, bs, x_true = make_sparse_regression(7, spec)
+    cfg = BiCADMMConfig(kappa=spec.kappa, gamma=10.0, rho_c=1.0, alpha=0.5,
+                        max_iter=400, tol=1e-5, over_relax=1.5)
+    res = BiCADMM("squared", cfg).fit(As, bs)
+    assert np.array_equal(np.array(res.support), np.array(x_true != 0))
+
+
+def test_rho_b_controls_bilinear_residual():
+    """Paper Fig 1: larger rho_b drives b_r down faster."""
+    spec = SyntheticSpec(2, 150, 60, sparsity_level=0.8, noise=1e-3)
+    As, bs, _ = make_sparse_regression(8, spec)
+    traces = {}
+    for rho_b in [0.125, 1.0]:
+        cfg = BiCADMMConfig(kappa=spec.kappa, gamma=10.0, rho_c=2.0,
+                            rho_b=rho_b)
+        res = BiCADMM("squared", cfg).fit_with_history(As, bs, iters=60)
+        traces[rho_b] = np.array(res.history["b_r"])
+    # average bilinear residual over the run is smaller for larger rho_b
+    assert traces[1.0][10:40].mean() <= traces[0.125][10:40].mean()

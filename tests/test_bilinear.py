@@ -1,0 +1,128 @@
+"""Unit + property tests for the Theorem 2.1 machinery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bilinear
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def _rand(seed, n):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,))
+
+
+# ------------------------------------------------------------ Theorem 2.1 --
+@given(st.integers(0, 10_000), st.integers(2, 64))
+def test_theorem_certificate_for_sparse_vectors(seed, n):
+    """Any kappa-sparse x admits the (s,t) certificate with zero residuals."""
+    x = np.array(_rand(seed % 100, n))
+    kappa = max(1, n // 3)
+    idx = np.argsort(-np.abs(x))[kappa:]
+    x[idx] = 0.0
+    cert = bilinear.check_theorem_certificate(jnp.asarray(x), kappa)
+    for k, v in cert.items():
+        assert float(v) < 1e-5, (k, float(v))
+
+
+def test_certificate_fails_for_dense_vector():
+    x = jnp.ones(20)
+    cert = bilinear.check_theorem_certificate(x, kappa=5)
+    # ||s||_1 = 20 > 5 — the S^kappa condition must be violated
+    assert float(cert["l1_s"]) > 1.0
+
+
+# --------------------------------------------------------------- s-update --
+@given(st.integers(0, 10_000), st.integers(4, 128), st.floats(0.1, 0.9))
+def test_s_update_feasible_and_optimal(seed, n, kfrac):
+    z = _rand(seed % 100, n)
+    kappa = max(1.0, float(int(kfrac * n)))
+    t, v = 1.7, 0.3
+    s = bilinear.s_update(z, t, v, kappa)
+    assert float(jnp.sum(jnp.abs(s))) <= kappa + 1e-4
+    assert float(jnp.max(jnp.abs(s))) <= 1.0 + 1e-6
+    # optimal objective: distance from (t - v) to achievable range
+    u_max, _ = bilinear.support_skappa(z, kappa)
+    c = t - v
+    expected = max(abs(c) - float(u_max), 0.0) ** 2
+    got = float((jnp.vdot(z, s) - c) ** 2)
+    assert got <= expected + 1e-5
+
+
+def test_support_skappa_fractional():
+    z = jnp.asarray([3.0, -2.0, 1.0, 0.5])
+    u, s = bilinear.support_skappa(z, 2.5)
+    assert abs(float(u) - (3.0 + 2.0 + 0.5 * 1.0)) < 1e-6
+    assert float(jnp.sum(jnp.abs(s))) <= 2.5 + 1e-6
+
+
+# ----------------------------------------------------- epigraph projection --
+@given(st.integers(0, 10_000), st.integers(2, 200),
+       st.floats(-5.0, 5.0))
+def test_epigraph_projection_properties(seed, n, t0):
+    z0 = _rand(seed % 100, n)
+    z, t = bilinear.project_l1_epigraph(z0, t0)
+    # feasibility
+    assert float(jnp.sum(jnp.abs(z))) <= float(t) + 1e-4
+    # idempotence
+    z2, t2 = bilinear.project_l1_epigraph(z, t)
+    np.testing.assert_allclose(np.array(z2), np.array(z), atol=1e-5)
+    assert abs(float(t2) - float(t)) < 1e-5
+
+
+@given(st.integers(0, 10_000), st.integers(2, 200), st.floats(-5.0, 5.0))
+def test_epigraph_projection_bisect_matches_sort(seed, n, t0):
+    z0 = _rand(seed % 100, n)
+    z, t = bilinear.project_l1_epigraph(z0, t0)
+    zb, tb = bilinear.project_l1_epigraph_bisect(z0, t0)
+    np.testing.assert_allclose(np.array(z), np.array(zb), atol=1e-4)
+    assert abs(float(t) - float(tb)) < 1e-4
+
+
+def test_epigraph_projection_optimality_vs_sampling():
+    """Projection must beat random feasible points (convexity certificate)."""
+    rng = np.random.default_rng(0)
+    z0 = np.array(_rand(3, 40))
+    t0 = -1.0
+    z, t = bilinear.project_l1_epigraph(jnp.asarray(z0), t0)
+    d_star = np.linalg.norm(z0 - np.array(z)) ** 2 + (t0 - float(t)) ** 2
+    for _ in range(500):
+        c = rng.normal(size=40) * rng.uniform(0, 2)
+        tc = np.abs(c).sum() + abs(rng.normal())
+        d = np.linalg.norm(z0 - c) ** 2 + (t0 - tc) ** 2
+        assert d_star <= d + 1e-6
+
+
+def test_epigraph_apex_case():
+    z0 = jnp.asarray([0.1, -0.2])
+    z, t = bilinear.project_l1_epigraph(z0, -10.0)
+    assert float(jnp.abs(z).sum()) < 1e-6 and abs(float(t)) < 1e-6
+    zb, tb = bilinear.project_l1_epigraph_bisect(z0, -10.0)
+    assert float(jnp.abs(zb).sum()) < 1e-6 and abs(float(tb)) < 1e-6
+
+
+def test_epigraph_inside_is_identity():
+    z0 = jnp.asarray([0.5, -0.25])
+    z, t = bilinear.project_l1_epigraph(z0, 2.0)
+    np.testing.assert_allclose(np.array(z), np.array(z0), atol=1e-7)
+    assert abs(float(t) - 2.0) < 1e-7
+
+
+# -------------------------------------------------- support_skappa_bisect --
+@given(st.integers(0, 10_000), st.integers(4, 128), st.floats(0.1, 0.9))
+def test_support_bisect_matches_sort(seed, n, kfrac):
+    z = _rand(seed % 100, n)
+    kappa = max(1.0, float(int(kfrac * n)))
+    u1, _ = bilinear.support_skappa(z, kappa)
+    u2, s2 = bilinear.support_skappa_bisect(z, kappa)
+    assert abs(float(u1) - float(u2)) < 1e-3 * max(1.0, abs(float(u1)))
+    assert float(jnp.sum(jnp.abs(s2))) <= kappa + 1e-3
+
+
+def test_hard_threshold():
+    z = jnp.asarray([3.0, -1.0, 2.0, 0.1])
+    out = bilinear.hard_threshold(z, 2)
+    np.testing.assert_allclose(np.array(out), [3.0, 0.0, 2.0, 0.0])

@@ -1,0 +1,40 @@
+"""Integration test of the whole dry-run machinery: sharded train-step
+lowering + compile + HLO cost walk for reduced configs on a real (2,2)
+mesh. Runs in a subprocess because the device-count XLA flag must be set
+before jax initializes."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "qwen3-moe-30b-a3b",
+                                  "rwkv6-1.6b", "zamba2-2.7b",
+                                  "seamless-m4t-medium"])
+def test_dryrun_smoke_subprocess(arch):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--smoke",
+         "--arch", arch],
+        capture_output=True, text=True, timeout=420, env=env, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert f"[smoke-ok] {arch}" in out.stdout
+
+
+def test_dryrun_smoke_fsdp_profile():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--smoke",
+         "--arch", "qwen3-8b", "--profile", "fsdp"],
+        capture_output=True, text=True, timeout=420, env=env, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "[smoke-ok]" in out.stdout

@@ -1,0 +1,100 @@
+"""Loss oracles: gradient consistency and prox optimality (property-based)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.losses import get_loss, make_softmax
+
+settings.register_profile("ci", deadline=None, max_examples=20)
+settings.load_profile("ci")
+
+SCALAR_LOSSES = ["squared", "logistic", "hinge", "smoothed_hinge"]
+
+
+def _data(seed, m, classification):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    pred = jax.random.normal(k1, (m,))
+    if classification:
+        b = jnp.sign(jax.random.normal(k2, (m,)))
+        b = jnp.where(b == 0, 1.0, b)
+    else:
+        b = jax.random.normal(k2, (m,))
+    return pred, b
+
+
+@pytest.mark.parametrize("name", ["squared", "logistic", "smoothed_hinge"])
+@given(seed=st.integers(0, 1000))
+def test_grad_matches_autodiff(name, seed):
+    loss = get_loss(name)
+    pred, b = _data(seed, 16, name != "squared")
+    g_auto = jax.grad(lambda p: loss.value(p, b))(pred)
+    np.testing.assert_allclose(np.array(loss.grad(pred, b)),
+                               np.array(g_auto), atol=1e-5)
+
+
+@pytest.mark.parametrize("name", SCALAR_LOSSES)
+@given(seed=st.integers(0, 1000), c=st.floats(0.2, 10.0))
+def test_prox_omega_optimality(name, seed, c):
+    """prox must (near-)minimize value(w,b) + c/2 (w-q)^2 per coordinate."""
+    loss = get_loss(name)
+    q, b = _data(seed, 12, name != "squared")
+    w = loss.prox_omega(q, b, c)
+
+    def obj(ww):
+        return float(loss.value(ww, b) + 0.5 * c * jnp.sum((ww - q) ** 2))
+
+    f_star = obj(w)
+    rng = np.random.default_rng(seed)
+    for scale in [1e-3, 1e-2, 0.1, 1.0]:
+        for _ in range(10):
+            cand = w + scale * jnp.asarray(rng.normal(size=w.shape),
+                                           dtype=w.dtype)
+            assert f_star <= obj(cand) + 1e-4 * (1 + abs(f_star))
+
+
+@given(seed=st.integers(0, 1000), c=st.floats(0.3, 5.0),
+       C=st.integers(3, 6))
+def test_softmax_prox_optimality(seed, c, C):
+    loss = make_softmax(C)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    m = 8
+    q = jax.random.normal(k1, (m, C))
+    b = jax.random.randint(k2, (m,), 0, C)
+    w = loss.prox_omega(q, b, c)
+
+    def obj(ww):
+        return float(loss.value(ww, b) + 0.5 * c * jnp.sum((ww - q) ** 2))
+
+    # first-order stationarity: grad + c (w - q) ~ 0
+    gr = loss.grad(w, b) + c * (w - q)
+    assert float(jnp.max(jnp.abs(gr))) < 1e-3
+    f_star = obj(w)
+    rng = np.random.default_rng(seed)
+    for _ in range(20):
+        cand = w + 0.05 * jnp.asarray(rng.normal(size=w.shape), dtype=w.dtype)
+        assert f_star <= obj(cand) + 1e-4 * (1 + abs(f_star))
+
+
+def test_softmax_grad_matches_autodiff():
+    loss = make_softmax(5)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    pred = jax.random.normal(k1, (9, 5))
+    b = jax.random.randint(k2, (9,), 0, 5)
+    g_auto = jax.grad(lambda p: loss.value(p, b))(pred)
+    np.testing.assert_allclose(np.array(loss.grad(pred, b)), np.array(g_auto),
+                               atol=1e-5)
+
+
+def test_hinge_prox_closed_form_cases():
+    loss = get_loss("hinge")
+    c = 2.0
+    # margin already >= 1: identity
+    assert float(loss.prox_omega(jnp.asarray([2.0]), jnp.asarray([1.0]), c)[0]) == 2.0
+    # deep violation: shift by 1/c
+    w = loss.prox_omega(jnp.asarray([-3.0]), jnp.asarray([1.0]), c)
+    assert abs(float(w[0]) - (-3.0 + 0.5)) < 1e-6
+    # middle: clamp to margin 1
+    w = loss.prox_omega(jnp.asarray([0.9]), jnp.asarray([1.0]), c)
+    assert abs(float(w[0]) - 1.0) < 1e-6

@@ -1,0 +1,110 @@
+"""Tests: the paper-technique integrations (sparsify) + baselines, with
+hypothesis property tests on the solver invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bilinear
+from repro.core.baselines import (best_subset_exact, brute_force_best_subset,
+                                  fista_lasso, iht, lasso_for_kappa)
+from repro.core.sparsify import fit_sparse_head, sparsify_linear
+from repro.data.synthetic import SyntheticSpec, make_sparse_regression
+
+
+# ---------------------------------------------------------------- lasso --
+def test_fista_lasso_zero_at_lam_max():
+    k = jax.random.PRNGKey(0)
+    A = jax.random.normal(k, (40, 12))
+    b = jax.random.normal(jax.random.PRNGKey(1), (40,))
+    lam_max = float(jnp.max(jnp.abs(A.T @ b)))
+    x = fista_lasso(A, b, lam_max * 1.01, iters=300)
+    assert float(jnp.max(jnp.abs(x))) < 1e-5
+
+
+def test_lasso_for_kappa_hits_cardinality():
+    spec = SyntheticSpec(n_nodes=2, m_per_node=100, n_features=30,
+                         sparsity_level=0.8)
+    As, bs, x_true = make_sparse_regression(0, spec)
+    A = As.reshape(-1, 30)
+    b = bs.reshape(-1)
+    x, lam = lasso_for_kappa(A, b, spec.kappa)
+    nnz = int(jnp.sum(jnp.abs(x) > 1e-6))
+    assert abs(nnz - spec.kappa) <= 2
+
+
+# ------------------------------------------------- exact branch & bound --
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_bnb_matches_brute_force(seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    A = np.asarray(jax.random.normal(k1, (30, 10)))
+    b = np.asarray(jax.random.normal(k2, (30,)))
+    sup_bb, obj_bb = best_subset_exact(A, b, kappa=3)
+    sup_bf, obj_bf = brute_force_best_subset(A, b, kappa=3)
+    assert abs(obj_bb - obj_bf) < 1e-8 * max(1.0, abs(obj_bf))
+
+
+def test_iht_recovers_planted_support():
+    spec = SyntheticSpec(n_nodes=1, m_per_node=300, n_features=40,
+                         sparsity_level=0.9, noise=1e-3)
+    As, bs, x_true = make_sparse_regression(0, spec)
+    x = iht(As[0], bs[0], spec.kappa, iters=500)
+    sup = np.abs(np.asarray(x)) > 0
+    st_true = np.abs(np.asarray(x_true)) > 0
+    assert (sup & st_true).sum() >= spec.kappa - 1
+
+
+# --------------------------------------------------------------- sparsify --
+def test_sparsify_linear_cardinality_and_fidelity():
+    k = jax.random.PRNGKey(0)
+    W = jax.random.normal(k, (24, 6)) * \
+        (jax.random.uniform(jax.random.PRNGKey(1), (24, 6)) < 0.3)
+    X = jax.random.normal(jax.random.PRNGKey(2), (200, 24))
+    Ws, stats = sparsify_linear(W, X, sparsity=0.75, max_iter=80)
+    nnz = np.sum(np.abs(np.asarray(Ws)) > 0, axis=0)
+    assert (nnz <= stats["kappa"]).all()
+    assert stats["rel_err"] < 0.6          # mostly-sparse W is recoverable
+
+
+def test_fit_sparse_head_logistic():
+    spec = SyntheticSpec(n_nodes=4, m_per_node=200, n_features=32,
+                         sparsity_level=0.75)
+    from repro.data.synthetic import make_sparse_classification
+    As, bs, x_true = make_sparse_classification(0, spec)
+    feats = np.asarray(As.reshape(-1, 32))
+    labels = np.asarray(bs.reshape(-1))
+    w, stats = fit_sparse_head(jnp.asarray(feats), jnp.asarray(labels),
+                               kappa=spec.kappa, loss="logistic",
+                               n_nodes=4, max_iter=150)
+    assert stats["support"] <= spec.kappa
+    assert stats["metric"] > 0.8           # train accuracy
+
+
+# ----------------------------------------------------- solver invariants --
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 40), seed=st.integers(0, 10_000),
+       frac=st.floats(0.1, 0.9))
+def test_skappa_membership_property(n, seed, frac):
+    """s-update always lands in S^kappa = {||s||_inf<=1, ||s||_1<=kappa}."""
+    kappa = max(1, int(n * frac))
+    key = jax.random.PRNGKey(seed)
+    z = jax.random.normal(key, (n,))
+    t = jnp.sum(jnp.abs(z)) * 0.9
+    s = bilinear.s_update(z, t, jnp.asarray(0.1), float(kappa))
+    assert float(jnp.max(jnp.abs(s))) <= 1.0 + 1e-5
+    assert float(jnp.sum(jnp.abs(s))) <= kappa + 1e-4
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 60), seed=st.integers(0, 10_000))
+def test_epigraph_projection_property(n, seed):
+    """Projection output satisfies ||z||_1 <= t and is idempotent."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    z = 3.0 * jax.random.normal(k1, (n,))
+    t = jax.random.normal(k2, ())
+    zp, tp_ = bilinear.project_l1_epigraph(z, t)
+    assert float(jnp.sum(jnp.abs(zp))) <= float(tp_) + 1e-4
+    zp2, tp2 = bilinear.project_l1_epigraph(zp, tp_)
+    np.testing.assert_allclose(np.asarray(zp2), np.asarray(zp), atol=1e-5)
+    np.testing.assert_allclose(float(tp2), float(tp_), atol=1e-5)
