@@ -30,13 +30,21 @@ def host_to_device(nbytes: int, reps: int = 5) -> float:
 
 def modelled_ici(n: int, m_per_node: int, inner_iters: int = 15,
                  M: int = 16, link_gbps: float = 50e9) -> dict:
-    """Per-outer-iteration wire bytes of the sharded engine (DESIGN §5)."""
+    """Per-outer-iteration wire bytes of the sharded engine with
+    ``projection="batched"`` — the communication-optimized mode (DESIGN §5).
+
+    The engine's *default* mode is ``projection="exact"``, which instead
+    all-gathers the O(n) iterate for the reference-faithful sort-based
+    projections; its gather term is reported alongside for contrast."""
     inner = 4 * m_per_node * inner_iters          # psum of (m_i,) f32
     consensus = 4 * (n // M)                       # psum of the z shard
     scalars = 4 * 64 * 3                           # batched-ladder psums
     total = inner + consensus + scalars
+    exact_gathers = 4 * n * 4                      # z/w/s/x-diff all-gathers
     return {"inner_allreduce": inner, "consensus": consensus,
             "projection_scalars": scalars, "total": total,
+            "exact_mode_extra_gathers": exact_gathers,
+            "exact_mode_total": inner + consensus + exact_gathers,
             "seconds_at_link": total / link_gbps}
 
 

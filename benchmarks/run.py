@@ -11,8 +11,8 @@ from __future__ import annotations
 import argparse
 import time
 
-from . import (fig1_convergence, fig23_scaling, fig4_transfer, roofline,
-               table1_compare)
+from . import (fig1_convergence, fig23_scaling, fig4_transfer, path_sweep,
+               roofline, table1_compare)
 
 
 def main() -> None:
@@ -30,6 +30,8 @@ def main() -> None:
     fig23_scaling.main(full=args.full)
     print("# Fig 4 — transfer / wire-byte accounting")
     fig4_transfer.main(full=args.full)
+    print("# Path sweep — warm-started kappa-path vs cold fits")
+    path_sweep.main(full=args.full)
     print("# Roofline — from dry-run records")
     roofline.main()
     print(f"# total {time.time() - t0:.1f}s")

@@ -1,0 +1,46 @@
+"""Kappa-path demo: sweep the sparsity budget with one warm-started call
+and print the cardinality / training-loss trade-off curve used for model
+selection.
+
+    PYTHONPATH=src python examples/kappa_path.py
+"""
+import numpy as np
+
+from repro.core import BiCADMM, BiCADMMConfig, fit_path, kappa_ladder
+from repro.data.synthetic import SyntheticSpec, make_graded_regression
+
+
+def main():
+    spec = SyntheticSpec(n_nodes=2, m_per_node=400, n_features=200,
+                         sparsity_level=0.9, noise=1e-3)
+    As, bs, x_true = make_graded_regression(0, spec)
+    true_card = int(np.sum(np.asarray(x_true) != 0))
+    print(f"n={spec.n_features}  planted cardinality={true_card}")
+
+    kappas = kappa_ladder(spec.n_features, 10, lo_frac=0.02, hi_frac=0.2)
+    cfg = BiCADMMConfig(kappa=kappas[0], gamma=10.0, rho_c=1.0, alpha=0.5,
+                        max_iter=300, tol=1e-5)
+    res = fit_path(BiCADMM("squared", cfg), As, bs, kappas)
+
+    print(f"\n{'kappa':>6} {'card':>5} {'iters':>6} {'train loss':>11} "
+          f"{'support F1':>11}")
+    sup_true = np.asarray(x_true) != 0
+    for i, k in enumerate(kappas):
+        sup = np.asarray(res.support[i])
+        f1 = 2 * (sup & sup_true).sum() / max(sup.sum() + sup_true.sum(), 1)
+        print(f"{k:6d} {int(res.cardinality[i]):5d} {int(res.iters[i]):6d} "
+              f"{float(res.train_loss[i]):11.4f} {f1:11.3f}")
+
+    # the elbow of the loss curve sits at the planted cardinality: the first
+    # budget that forces true signal (not noise) out of the model produces
+    # the largest *relative* loss jump
+    losses = np.asarray(res.train_loss)
+    cards = np.asarray(res.cardinality)
+    rel_jump = np.diff(np.log(np.maximum(losses, 1e-12)))
+    elbow = int(cards[int(np.argmax(rel_jump))])
+    print(f"\ntotal outer iterations (warm path): {int(res.iters.sum())}")
+    print(f"loss elbow at cardinality ~{elbow} (planted: {true_card})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,3 +1,101 @@
-from .bicadmm import BiCADMM, BiCADMMConfig, BiCADMMResult, fit_sparse_model
+"""Core Bi-cADMM engines and the unified :class:`SolverEngine` front-end.
+
+Two interchangeable engines solve the paper's SML problem:
+
+* ``BiCADMM``        — single-process reference oracle (``bicadmm.py``).
+* ``ShardedBiCADMM`` — ``shard_map`` production engine (``sharded.py``).
+
+``SolverEngine`` hides the engine split behind one API (``fit`` /
+``fit_path`` / ``fit_grid``), normalizing the data layout: it always takes
+the paper's node-stacked ``As (N, m, n)`` / ``bs (N, m)`` arrays and
+flattens them for the sharded engine. The hyperparameter-path machinery
+lives in ``repro.core.path``.
+"""
+from .bicadmm import (BiCADMM, BiCADMMConfig, BiCADMMResult, SolveParams,
+                      fit_sparse_model, reset_for_resume)
 from .losses import get_loss
-from . import bilinear, losses, prox, subsolver
+from . import bilinear, losses, path, prox, subsolver
+from .path import PathResult, fit_grid, fit_path, kappa_ladder
+from .sharded import ShardedBiCADMM, ShardedPathResult, ShardedResult
+
+
+class SolverEngine:
+    """Unified front-end over the reference and sharded Bi-cADMM engines.
+
+    >>> eng = SolverEngine("squared", cfg)                       # reference
+    >>> eng = SolverEngine("squared", cfg, engine="sharded",
+    ...                    mesh=jax.make_mesh((2, 4), ("nodes", "feat")))
+    >>> res  = eng.fit(As, bs)                    # one (kappa, gamma, rho)
+    >>> path = eng.fit_path(As, bs, kappas=[30, 22, 16, 11, 8])  # warm path
+    >>> grid = eng.fit_grid(As, bs, kappas=[...])  # independent cold fits
+
+    Data is always the paper's stacked layout: ``As (N, m, n)``,
+    ``bs (N, m)``. The sharded engine is fed the flattened
+    ``(N*m, n)`` / ``(N*m,)`` views (its rows shard over the mesh's node
+    axis in the same node order).
+    """
+
+    def __init__(self, loss, cfg: BiCADMMConfig, *, engine: str = "reference",
+                 mesh=None, n_classes: int = 1, **sharded_kw):
+        self.engine = engine
+        self.cfg = cfg
+        if engine == "reference":
+            if mesh is not None or sharded_kw:
+                raise ValueError("mesh / sharded options require "
+                                 "engine='sharded'")
+            self.solver = BiCADMM(loss, cfg, n_classes=n_classes)
+        elif engine == "sharded":
+            if mesh is None:
+                raise ValueError("engine='sharded' requires a mesh")
+            self.solver = ShardedBiCADMM(loss, cfg, mesh,
+                                         n_classes=n_classes, **sharded_kw)
+        else:
+            raise ValueError(f"unknown engine {engine!r}")
+
+    @staticmethod
+    def _flat(As, bs):
+        N, m, n = As.shape
+        return As.reshape(N * m, n), bs.reshape(-1)
+
+    def fit(self, As, bs, *, kappa=None, gamma=None, rho_c=None, **kw):
+        if self.engine == "reference":
+            overrides = dict(kappa=kappa, gamma=gamma, rho_c=rho_c)
+            if kw:
+                raise TypeError(f"unknown fit option(s) {sorted(kw)} for the "
+                                "reference engine")
+            if all(v is None for v in overrides.values()):
+                return self.solver.fit(As, bs)
+            return self.solver.run_from(As, bs, self.solver.init_state(As, bs),
+                                        **overrides)
+        if not (kappa is None and gamma is None and rho_c is None):
+            raise ValueError("per-solve kappa/gamma/rho_c overrides are "
+                             "reference-engine only; the sharded engine bakes "
+                             "them into its config/factors — use fit_path for "
+                             "kappa sweeps, or a new config")
+        A, b = self._flat(As, bs)
+        return self.solver.fit(A, b, **kw)
+
+    def fit_path(self, As, bs, kappas, *, warm_start: bool = True,
+                 gammas=None, rho_cs=None, **kw):
+        """Warm-started hyperparameter path in one compiled scan."""
+        if self.engine == "reference":
+            return fit_path(self.solver, As, bs, kappas, gammas=gammas,
+                            rho_cs=rho_cs, warm_start=warm_start)
+        if gammas is not None or rho_cs is not None:
+            raise ValueError("the sharded engine caches penalty-dependent "
+                             "factors; it sweeps kappa only")
+        A, b = self._flat(As, bs)
+        return self.solver.fit_path(A, b, kappas, warm_start=warm_start, **kw)
+
+    def fit_grid(self, As, bs, kappas, *, gammas=None, rho_cs=None):
+        """Independent cold fits of every grid point in one compiled call
+        (vmap-batched on the reference engine; a cold sequential scan —
+        identical numerics, shared compile — on the sharded engine)."""
+        if self.engine == "reference":
+            return fit_grid(self.solver, As, bs, kappas, gammas=gammas,
+                            rho_cs=rho_cs)
+        if gammas is not None or rho_cs is not None:
+            raise ValueError("the sharded engine caches penalty-dependent "
+                             "factors; it sweeps kappa only")
+        A, b = self._flat(As, bs)
+        return self.solver.fit_path(A, b, kappas, warm_start=False)

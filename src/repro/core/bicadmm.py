@@ -19,6 +19,27 @@ Note on signs: the paper's eq (4) writes ``y_i^T (z - x_i)`` but its scaled
 updates (8)-(9) follow the standard Boyd consensus form; we follow (8)-(9),
 under which the (z,t) data-fidelity center is ``w = mean_i (x_i + u_i)``.
 
+Resumable-state API
+-------------------
+The while-loop state is first-class, which makes warm starts (and the
+hyperparameter-path engine in ``repro.core.path``) possible:
+
+* ``init_state(As, bs)``    — build a fresh :class:`BiCADMMState`.
+* ``run_from(As, bs, state, kappa=..., gamma=..., rho_c=...)`` — reset the
+  iteration counter / residuals of ``state``, run the (jitted) while-loop
+  from it, and return a :class:`BiCADMMResult` whose ``.state`` field is the
+  final solver state — feed it back into ``run_from`` to warm-start the next
+  solve (e.g. the next kappa on a sparsity path).
+* ``fit(As, bs)``           — ``run_from`` from ``init_state`` (unchanged
+  one-shot behavior).
+
+``kappa`` / ``gamma`` / ``rho_c`` overrides may be traced scalars, so whole
+hyperparameter grids run inside one ``lax.scan`` / ``vmap`` (see
+``repro.core.path``). Dynamic ``gamma`` / ``rho_c`` on the squared loss
+switch the cached Cholesky to a spectral (eigh) factorization whose shift is
+applied at solve time; the feature-split inner ADMM bakes the penalties into
+its per-block factors and therefore only supports dynamic ``kappa``.
+
 The distributed (shard_map) engine with identical semantics lives in
 ``repro.core.sharded``; this module is the oracle it is tested against.
 """
@@ -33,7 +54,9 @@ import jax.numpy as jnp
 
 from . import bilinear
 from .losses import Loss, get_loss
-from .prox import RidgeFactors, direct_prox, newton_cg_prox, ridge_setup
+from .prox import (EighRidgeFactors, RidgeFactors, direct_prox,
+                   newton_cg_prox, ridge_prox_eigh, ridge_setup,
+                   ridge_setup_eigh)
 from .subsolver import (SubsolverFactors, SubsolverState, node_prox_feature_split,
                         subsolver_init, subsolver_setup)
 
@@ -67,6 +90,15 @@ class BiCADMMConfig:
         return self.n_feature_blocks > 1 or self.force_feature_split
 
 
+class SolveParams(NamedTuple):
+    """Per-solve hyperparameters. Entries may be Python floats (static) or
+    traced scalars (dynamic, e.g. the scan/vmap axes of the path engine)."""
+    kappa: Array | float
+    rho_c: Array | float
+    rho_b: Array | float
+    sigma: Array | float      # 1 / (N * gamma)
+
+
 class BiCADMMState(NamedTuple):
     x: Array          # (N, n*K) local estimates
     u: Array          # (N, n*K) scaled consensus duals
@@ -90,6 +122,14 @@ class BiCADMMResult(NamedTuple):
     d_r: Array
     b_r: Array
     history: Any      # dict of (max_iter,) residual traces or None
+    state: Any = None  # final BiCADMMState — warm-start via run_from(state)
+
+
+def reset_for_resume(st: BiCADMMState) -> BiCADMMState:
+    """Zero the iteration counter and residuals so a (possibly converged)
+    state re-enters the while-loop; the iterates (x,u,z,t,s,v) are kept."""
+    big = jnp.asarray(jnp.inf, st.z.dtype)
+    return st._replace(k=jnp.asarray(0), p_r=big, d_r=big, b_r=big)
 
 
 def _zt_update(z0: Array, t0: Array, w: Array, s: Array, v: Array,
@@ -133,23 +173,42 @@ class BiCADMM:
         self.cfg = cfg
 
     # -- setup ---------------------------------------------------------------
-    def _setup(self, As: Array, bs: Array):
+    def _setup(self, As: Array, bs: Array, *, dynamic_penalties: bool = False):
         cfg = self.cfg
         N, m, n = As.shape
         sigma = 1.0 / (N * cfg.gamma)
         K = self.loss.n_classes
         if cfg.use_feature_split:
+            if dynamic_penalties:
+                raise ValueError(
+                    "dynamic gamma/rho_c are not supported with the "
+                    "feature-split sub-solver (penalties are baked into its "
+                    "cached per-block factors); sweep kappa only, or use "
+                    "n_feature_blocks=1")
             factors = jax.vmap(
                 lambda A: subsolver_setup(A, sigma, cfg.rho_c, cfg.rho_l,
                                           cfg.n_feature_blocks))(As)
         elif self.loss.name == "squared":
-            factors = jax.vmap(
-                lambda A, b: ridge_setup(A, b, sigma, cfg.rho_c))(As, bs)
+            if dynamic_penalties:
+                factors = jax.vmap(ridge_setup_eigh)(As, bs)
+            else:
+                factors = jax.vmap(
+                    lambda A, b: ridge_setup(A, b, sigma, cfg.rho_c))(As, bs)
         else:
             factors = None
-        return factors, sigma, N, n, K
+        return factors, N, n, K
 
-    def _x_update(self, factors, sigma, As, bs, q, inner):
+    def _make_params(self, N: int, *, kappa=None, gamma=None, rho_c=None
+                     ) -> SolveParams:
+        cfg = self.cfg
+        kappa = cfg.kappa if kappa is None else kappa
+        gamma = cfg.gamma if gamma is None else gamma
+        rho_c = cfg.rho_c if rho_c is None else rho_c
+        rho_b = cfg.rho_b if cfg.rho_b is not None else cfg.alpha * rho_c
+        return SolveParams(kappa=kappa, rho_c=rho_c, rho_b=rho_b,
+                           sigma=1.0 / (N * gamma))
+
+    def _x_update(self, factors, params: SolveParams, As, bs, q, inner):
         """q: (N, n*K) prox centers -> (N, n*K), new inner state."""
         cfg, loss = self.cfg, self.loss
         N, m, n = As.shape
@@ -163,26 +222,31 @@ class BiCADMM:
             return jax.vmap(one)(factors, bs, q, inner)
 
         if loss.name == "squared":
-            def one(f, qi):
-                return direct_prox(loss, None, None, qi, sigma, cfg.rho_c,
-                                   ridge=f)
+            if isinstance(factors, EighRidgeFactors):
+                def one(f, qi):
+                    return ridge_prox_eigh(f, qi, params.rho_c, params.sigma)
+            else:
+                def one(f, qi):
+                    return direct_prox(loss, None, None, qi, params.sigma,
+                                       params.rho_c, ridge=f)
             return jax.vmap(one)(factors, q), inner
 
         def one(A, b, qi):
             qx = qi.reshape(n, K) if K > 1 else qi
-            x = newton_cg_prox(loss, A, b, qx, sigma, cfg.rho_c,
+            x = newton_cg_prox(loss, A, b, qx, params.sigma, params.rho_c,
                                newton_iters=cfg.newton_iters)
             return x.reshape(-1)
         return jax.vmap(one)(As, bs, q), inner
 
     # -- one iteration ---------------------------------------------------------
-    def _step(self, factors, sigma, As, bs, st: BiCADMMState) -> BiCADMMState:
+    def _step(self, factors, As, bs, params: SolveParams,
+              st: BiCADMMState) -> BiCADMMState:
         cfg = self.cfg
         N = As.shape[0]
-        rho_b = cfg.rho_b_eff
+        rho_c, rho_b = params.rho_c, params.rho_b
 
         q = st.z[None] - st.u                              # (N, d)
-        x_new, inner = self._x_update(factors, sigma, As, bs, q, st.inner)
+        x_new, inner = self._x_update(factors, params, As, bs, q, st.inner)
 
         if cfg.over_relax != 1.0:                          # optional relaxation
             x_eff = cfg.over_relax * x_new + (1.0 - cfg.over_relax) * st.z[None]
@@ -191,14 +255,14 @@ class BiCADMM:
 
         w = jnp.mean(x_eff + st.u, axis=0)                 # consensus center
         z_new, t_new = _zt_update(st.z, st.t, w, st.s, st.v,
-                                  float(N), cfg.rho_c, rho_b, cfg.zt_iters)
-        s_new = bilinear.s_update(z_new, t_new, st.v, float(cfg.kappa))
+                                  float(N), rho_c, rho_b, cfg.zt_iters)
+        s_new = bilinear.s_update(z_new, t_new, st.v, params.kappa)
         u_new = st.u + x_eff - z_new[None]
         gval = bilinear.g(z_new, s_new, t_new)
         v_new = st.v + gval
 
         p_r = jnp.sum(jnp.linalg.norm(x_new - z_new[None], axis=1))
-        d_r = jnp.sqrt(float(N)) * cfg.rho_c * jnp.linalg.norm(z_new - st.z)
+        d_r = jnp.sqrt(float(N)) * rho_c * jnp.linalg.norm(z_new - st.z)
         b_r = jnp.abs(gval)
         return BiCADMMState(x_new, u_new, z_new, t_new, s_new, v_new,
                             st.k + 1, p_r, d_r, b_r, inner)
@@ -224,48 +288,70 @@ class BiCADMM:
             k=jnp.asarray(0), p_r=big, d_r=big, b_r=big, inner=inner)
 
     # -- drivers ---------------------------------------------------------------
-    def fit(self, As: Array, bs: Array) -> BiCADMMResult:
-        """Run until residual tolerances or max_iter (jitted while_loop)."""
-        factors, sigma, N, n, K = self._setup(As, bs)
+    def init_state(self, As: Array, bs: Array) -> BiCADMMState:
+        """Public resumable-state entry point: a fresh zero state."""
+        return self._init_state(As, bs, As.shape[2], self.loss.n_classes)
+
+    def _run_while(self, factors, As, bs, params: SolveParams,
+                   st0: BiCADMMState) -> BiCADMMState:
         cfg = self.cfg
-        st0 = self._init_state(As, bs, n, K)
 
         def cond(st: BiCADMMState):
             converged = ((st.p_r < cfg.tol) & (st.d_r < cfg.tol)
                          & (st.b_r < cfg.tol))
             return (~converged) & (st.k < cfg.max_iter)
 
-        step = partial(self._step, factors, sigma, As, bs)
-        st = jax.lax.while_loop(cond, step, st0)
-        return self._finalize(As, bs, st, history=None)
+        step = partial(self._step, factors, As, bs, params)
+        return jax.lax.while_loop(cond, step, st0)
+
+    def run_from(self, As: Array, bs: Array, state: BiCADMMState, *,
+                 kappa=None, gamma=None, rho_c=None) -> BiCADMMResult:
+        """Run until residual tolerances or max_iter, warm-starting from
+        ``state`` (counter/residuals are reset first; iterates are kept).
+
+        ``kappa`` / ``gamma`` / ``rho_c`` override the config per-solve and
+        may be traced scalars — this is the primitive the path engine scans.
+        """
+        dyn = gamma is not None or rho_c is not None
+        factors, N, n, K = self._setup(As, bs, dynamic_penalties=dyn)
+        params = self._make_params(N, kappa=kappa, gamma=gamma, rho_c=rho_c)
+        st = self._run_while(factors, As, bs, params, reset_for_resume(state))
+        return self._finalize(As, bs, st, params, history=None)
+
+    def fit(self, As: Array, bs: Array) -> BiCADMMResult:
+        """Run until residual tolerances or max_iter (jitted while_loop)."""
+        return self.run_from(As, bs, self.init_state(As, bs))
 
     def fit_with_history(self, As: Array, bs: Array,
                          iters: int | None = None) -> BiCADMMResult:
         """Fixed-iteration scan recording residual traces (Fig. 1)."""
-        factors, sigma, N, n, K = self._setup(As, bs)
+        factors, N, n, K = self._setup(As, bs)
+        params = self._make_params(N)
         iters = iters or self.cfg.max_iter
         st0 = self._init_state(As, bs, n, K)
-        step = partial(self._step, factors, sigma, As, bs)
+        step = partial(self._step, factors, As, bs, params)
 
         def body(st, _):
             st = step(st)
             return st, dict(p_r=st.p_r, d_r=st.d_r, b_r=st.b_r,
                             card=jnp.sum(jnp.abs(st.z) > 1e-6))
         st, hist = jax.lax.scan(body, st0, None, length=iters)
-        return self._finalize(As, bs, st, history=hist)
+        return self._finalize(As, bs, st, params, history=hist)
 
-    def _finalize(self, As, bs, st: BiCADMMState, history) -> BiCADMMResult:
+    def _finalize(self, As, bs, st: BiCADMMState, params: SolveParams,
+                  history) -> BiCADMMResult:
         cfg = self.cfg
-        z_sparse = bilinear.hard_threshold(st.z, cfg.kappa)
+        z_sparse = bilinear.hard_threshold(st.z, params.kappa)
         support = jnp.abs(z_sparse) > 0
         if cfg.polish:
-            x_final = self._polish(As, bs, support, z_sparse)
+            x_final = self._polish(As, bs, support, z_sparse, params)
         else:
             x_final = z_sparse
         return BiCADMMResult(x_final, st.z, support, st.k,
-                             st.p_r, st.d_r, st.b_r, history)
+                             st.p_r, st.d_r, st.b_r, history, st)
 
-    def _polish(self, As, bs, support: Array, z0: Array) -> Array:
+    def _polish(self, As, bs, support: Array, z0: Array,
+                params: SolveParams) -> Array:
         """Debias: re-fit restricted to the recovered support (masked ridge).
 
         Implemented as the full regularized problem plus a large quadratic
@@ -274,7 +360,7 @@ class BiCADMM:
         cfg, loss = self.cfg, self.loss
         N, m, n = As.shape
         K = loss.n_classes
-        sigma = 1.0 / cfg.gamma          # full-problem l2 weight
+        sigma = N * params.sigma         # full-problem l2 weight = 1 / gamma
         BIG = 1e8
         pen = jnp.where(support, 0.0, BIG)
 

@@ -1,0 +1,171 @@
+"""Warm-started hyperparameter-path engine for Bi-cADMM.
+
+Real SML deployments do not solve one ``(kappa, gamma, rho)`` instance —
+they sweep the sparsity budget kappa (and often the ridge weight gamma) to
+pick a model. This module fits an *entire* path in a single compiled call:
+
+* :func:`fit_path`  — one jitted ``lax.scan`` over the grid points, each
+  solve warm-started from the previous solution's full ADMM state
+  ``(x, u, z, t, s, v)`` (``warm_start=False`` re-initializes per point,
+  which is the sequential cold baseline with identical numerics).
+* :func:`fit_grid`  — ``vmap``-batched *independent* cold fits: all grid
+  points solved concurrently in one compiled call (the while-loop runs
+  until every lane converges).
+
+Both accept optional per-point ``gammas`` / ``rho_cs`` grids next to
+``kappas``. Penalty grids on the squared loss switch the x-update to the
+spectral ridge factorization (``repro.core.prox.ridge_setup_eigh``) so the
+shift ``sigma + rho_c`` can be a traced scalar; the feature-split sub-solver
+bakes penalties into its cached Cholesky factors and therefore supports
+kappa grids only (a ``ValueError`` explains this at call time).
+
+The sharded (shard_map) counterpart is ``ShardedBiCADMM.fit_path`` in
+``repro.core.sharded`` — same scan-of-while-loops structure, run
+shard-local. ``SolverEngine`` in ``repro.core`` dispatches between them.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .bicadmm import BiCADMM, BiCADMMState, SolveParams, reset_for_resume
+
+Array = jax.Array
+
+
+class PathResult(NamedTuple):
+    """Stacked per-grid-point results; leading axis = grid index."""
+    x: Array            # (P, d) polished sparse solutions
+    z: Array            # (P, d) consensus iterates
+    support: Array      # (P, d) bool
+    iters: Array        # (P,) outer iterations spent per point
+    p_r: Array          # (P,)
+    d_r: Array          # (P,)
+    b_r: Array          # (P,)
+    cardinality: Array  # (P,) ||x_p||_0
+    train_loss: Array   # (P,) sum-loss of the polished solution on the data
+    kappas: Array       # (P,)
+    gammas: Array       # (P,)
+    rho_cs: Array       # (P,)
+    state: Any = None   # final BiCADMMState of the last point (fit_path only)
+
+
+def _grids(solver: BiCADMM, kappas, gammas, rho_cs, dt):
+    """Materialize the three per-point hyperparameter arrays (config values
+    fill the axes the caller did not sweep) and report whether penalties are
+    dynamic."""
+    cfg = solver.cfg
+    kaps = jnp.asarray(kappas, dt)
+    if kaps.ndim != 1 or kaps.shape[0] == 0:
+        raise ValueError("kappas must be a non-empty 1-D grid")
+    P = kaps.shape[0]
+    dyn = gammas is not None or rho_cs is not None
+
+    def fill(vals, default):
+        arr = jnp.full((P,), default, dt) if vals is None \
+            else jnp.asarray(vals, dt)
+        if arr.shape != (P,):
+            raise ValueError("gammas/rho_cs must match kappas' length")
+        return arr
+
+    return kaps, fill(gammas, cfg.gamma), fill(rho_cs, cfg.rho_c), dyn
+
+
+def _point_outputs(solver: BiCADMM, As, bs, st: BiCADMMState,
+                   params: SolveParams) -> dict:
+    """Finalize one grid point into the stackable output slice."""
+    res = solver._finalize(As, bs, st, params, history=None)
+    n = As.shape[2]
+    K = solver.loss.n_classes
+    pred = As.reshape(-1, n) @ res.x.reshape(n, K)
+    pred = pred[:, 0] if K == 1 else pred
+    return dict(x=res.x, z=res.z, support=res.support, iters=st.k,
+                p_r=st.p_r, d_r=st.d_r, b_r=st.b_r,
+                cardinality=jnp.sum(res.support),
+                train_loss=solver.loss.value(pred, bs.reshape(-1)))
+
+
+def _pack(outs: dict, kaps, gams, rhos, state=None) -> PathResult:
+    return PathResult(outs["x"], outs["z"], outs["support"], outs["iters"],
+                      outs["p_r"], outs["d_r"], outs["b_r"],
+                      outs["cardinality"], outs["train_loss"],
+                      kaps, gams, rhos, state)
+
+
+def fit_path(solver: BiCADMM, As: Array, bs: Array, kappas, *,
+             gammas=None, rho_cs=None, warm_start: bool = True) -> PathResult:
+    """Fit the whole hyperparameter path in one jitted ``lax.scan``.
+
+    Each point's while-loop starts from the previous point's converged ADMM
+    state (primal *and* dual), so later solves typically need a fraction of
+    a cold solve's iterations. Order the grid so neighbours are similar —
+    for kappa paths, descending kappa (dense -> sparse) works well.
+    """
+    kaps, gams, rhos, dyn = _grids(solver, kappas, gammas, rho_cs, As.dtype)
+    factors, N, n, K = solver._setup(As, bs, dynamic_penalties=dyn)
+    st0 = solver._init_state(As, bs, n, K)
+    # Thread gamma/rho_c as traced scalars only when actually sweeping them:
+    # a kappa-only path then compiles the identical penalty constants as a
+    # plain fit (and as the sharded engine's path), keeping the trajectories
+    # comparable at full precision.
+    xs = (kaps, gams, rhos) if dyn else kaps
+    last, outs = _path_scan(solver, N, dyn, warm_start, As, bs, xs,
+                            factors, st0)
+    return _pack(outs, kaps, gams, rhos, last)
+
+
+@partial(jax.jit, static_argnums=(0, 1, 2, 3))
+def _path_scan(solver, N, dyn, warm_start, As, bs, xs, factors, st0):
+    """Module-level jitted scan: the compile cache persists across calls
+    (keyed on the solver instance + grid kind + shapes), so repeated sweeps
+    pay tracing once instead of per call."""
+    def solve_one(carry, pt):
+        kappa, gamma, rho_c = pt if dyn else (pt, None, None)
+        params = solver._make_params(N, kappa=kappa, gamma=gamma,
+                                     rho_c=rho_c)
+        st = solver._run_while(factors, As, bs, params,
+                               reset_for_resume(carry))
+        out = _point_outputs(solver, As, bs, st, params)
+        return (st if warm_start else st0), out
+
+    return jax.lax.scan(solve_one, st0, xs)
+
+
+def fit_grid(solver: BiCADMM, As: Array, bs: Array, kappas, *,
+             gammas=None, rho_cs=None) -> PathResult:
+    """``vmap``-batched independent cold fits of every grid point in one
+    compiled call — maximal parallelism, no cross-point coupling (use this
+    as the oracle the warm path is certified against, or when points are
+    too dissimilar for warm starts to help)."""
+    kaps, gams, rhos, dyn = _grids(solver, kappas, gammas, rho_cs, As.dtype)
+    factors, N, n, K = solver._setup(As, bs, dynamic_penalties=dyn)
+    st0 = solver._init_state(As, bs, n, K)
+    outs = _grid_vmap(solver, N, dyn, As, bs,
+                      (kaps, gams, rhos) if dyn else kaps, factors, st0)
+    return _pack(outs, kaps, gams, rhos)
+
+
+@partial(jax.jit, static_argnums=(0, 1, 2))
+def _grid_vmap(solver, N, dyn, As, bs, xs, factors, st0):
+    def solve_pt(pt):
+        kappa, gamma, rho_c = pt if dyn else (pt, None, None)
+        params = solver._make_params(N, kappa=kappa, gamma=gamma,
+                                     rho_c=rho_c)
+        st = solver._run_while(factors, As, bs, params, st0)
+        return _point_outputs(solver, As, bs, st, params)
+
+    return jax.vmap(solve_pt)(xs)
+
+
+def kappa_ladder(n_features: int, num: int = 8, *, lo_frac: float = 0.05,
+                 hi_frac: float = 0.5, descending: bool = True) -> list[int]:
+    """A sensible default kappa grid: `num` distinct integer budgets
+    geometrically spaced in [lo_frac, hi_frac] * n_features."""
+    lo = max(1, round(lo_frac * n_features))
+    hi = max(lo + 1, round(hi_frac * n_features))
+    raw = jnp.geomspace(lo, hi, num)
+    ks = sorted({max(1, int(round(float(k)))) for k in raw})
+    return ks[::-1] if descending else ks

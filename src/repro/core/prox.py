@@ -19,7 +19,7 @@ the flattened vector.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +51,29 @@ def ridge_prox_factorized(f: RidgeFactors, q: Array, rho_c: float) -> Array:
     rhs = f.Atb + rho_c * q
     y = jax.scipy.linalg.solve_triangular(f.chol, rhs, lower=True)
     return jax.scipy.linalg.solve_triangular(f.chol.T, y, lower=False)
+
+
+class EighRidgeFactors(NamedTuple):
+    """Spectral factors of A^T A: solve (A^T A + c I)^{-1} rhs for *any*
+    (traced) shift c. This is what lets the path engine sweep gamma / rho_c
+    grids without refactorizing — the Cholesky in :class:`RidgeFactors` bakes
+    the shift in, the eigendecomposition does not."""
+    V: Array       # (n, n) orthonormal eigenvectors of A^T A
+    evals: Array   # (n,) eigenvalues (>= 0)
+    Atb: Array     # (n,)
+
+
+def ridge_setup_eigh(A: Array, b: Array) -> EighRidgeFactors:
+    evals, V = jnp.linalg.eigh(A.T @ A)
+    return EighRidgeFactors(V, evals, A.T @ b)
+
+
+def ridge_prox_eigh(f: EighRidgeFactors, q: Array, rho_c: Array | float,
+                    sigma: Array | float) -> Array:
+    """Same prox as :func:`ridge_prox_factorized` but with a dynamic shift
+    c = sigma + rho_c: x = V diag(1/(evals + c)) V^T (A^T b + rho_c q)."""
+    rhs = f.Atb + rho_c * q
+    return f.V @ ((f.V.T @ rhs) / (f.evals + sigma + rho_c))
 
 
 def _cg(matvec: Callable[[Array], Array], rhs: Array, iters: int,

@@ -14,35 +14,55 @@ paper's hierarchical layout. Per outer iteration the collectives are:
       psum over `feat` of the partial predictions A_ij x_ij   [(m_i, K) each]
   consensus center:
       psum over `nodes` of (x_ij + u_ij)                      [(n_j, K)]
-  (z,t) FISTA + s-update:
-      scalar psums only — the cone / S^kappa projections run as *batched
-      threshold bisection* (one psum of a (B,) candidate ladder per round)
-      instead of the gather+sort a GPU implementation would use. This is
-      the beyond-paper communication optimization #2: per outer iteration
-      the bytes on the wire drop from O(n) (gather x_i to a coordinator,
-      paper Alg 1 "Collect") to O(n_j) + O(scalars).
+  (z,t) FISTA + s-update — selected by ``projection``:
+      * ``"exact"`` (default): all-gather z/s/w over `feat` and run the
+        *identical* sort-based projections of ``repro.core.bicadmm`` /
+        ``repro.core.bilinear`` on the full vector, replicated on every
+        device. O(n) on the wire per outer iteration (the paper's
+        "Collect"), but the iterate trajectory — and hence the iteration
+        count — agrees with the single-process reference oracle exactly.
+      * ``"batched"``: batched threshold-ladder bisection — ONE (B,)-vector
+        psum per round instead of the gather+sort. This is the beyond-paper
+        communication optimization #2: per outer iteration the bytes on the
+        wire drop from O(n) to O(n_j) + O(scalars), at the cost of
+        projection results that match the exact ones only to ladder
+        resolution (~|z|_max / 32^3).
+      * ``"bisect"``: naive scalar-bisection (one scalar psum per step).
 
 The paper's global coordinator node does not exist here: every device runs
-the identical (z, t, s, v) update on psum'd statistics (symmetric
+the identical (z, t, s, v) update on psum'd / gathered statistics (symmetric
 replication), which removes the paper's stated single-coordinator
 limitation (§6 of the paper).
 
+Resumable-state API
+-------------------
+Warm starts are first-class, mirroring ``repro.core.bicadmm``:
+
+* ``init_state(n, n_samples, dtype)`` — a fresh :class:`ShardedGlobalState`
+  (host-side pytree of *global* arrays; shard_map scatters/gathers it).
+* ``fit(A, b, state=...)`` — start the while-loop from a previous solve's
+  state; the returned :class:`ShardedResult` carries the final state in
+  ``.state`` for chaining.
+* ``fit_path(A, b, kappas, warm_start=True)`` — the entire kappa-path in
+  ONE ``shard_map`` + ``lax.scan`` call: each budget's while-loop is
+  warm-started shard-locally from the previous budget's (x, u, z, t, s, v),
+  with no host round-trips between path points.
+
 The semantics are tested for exact agreement with ``repro.core.bicadmm``
-(single-process oracle) in ``tests/test_sharded.py``.
+(single-process oracle) in ``tests/test_sharded.py`` / ``tests/test_path.py``.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from . import bilinear
-from .bicadmm import BiCADMMConfig
+from .bicadmm import BiCADMMConfig, _zt_update
 from .losses import Loss, get_loss
 
 Array = jax.Array
@@ -63,6 +83,21 @@ class ShardedState(NamedTuple):
     b_r: Array
 
 
+class ShardedGlobalState(NamedTuple):
+    """Host-side resumable state: global arrays, scattered by shard_map.
+
+    Layouts: x/u are (N, n_pad, K) — node-major, feature-sharded; z/s are
+    (n_pad, K); nu/omega are (n_samples, K) row-sharded over nodes."""
+    x: Array
+    u: Array
+    z: Array
+    t: Array
+    s: Array
+    v: Array
+    nu: Array
+    omega: Array
+
+
 class ShardedResult(NamedTuple):
     z: Array          # (n*K,) consensus iterate (global, unpadded)
     support: Array
@@ -72,6 +107,21 @@ class ShardedResult(NamedTuple):
     d_r: Array
     b_r: Array
     history: Any
+    state: Any = None  # ShardedGlobalState — warm-start via fit(state=...)
+
+
+class ShardedPathResult(NamedTuple):
+    """Stacked kappa-path results; leading axis = path index."""
+    z: Array          # (P, n*K)
+    support: Array    # (P, n*K) bool
+    x_sparse: Array   # (P, n*K)
+    iters: Array      # (P,)
+    p_r: Array
+    d_r: Array
+    b_r: Array
+    cardinality: Array  # (P,)
+    kappas: Array     # (P,)
+    state: Any = None
 
 
 # --------------------------------------------------------------------------
@@ -134,7 +184,8 @@ def batched_epigraph_project(z0: Array, t0: Array, feat_axis: str | None,
     return z, t
 
 
-def batched_support_skappa(z: Array, kappa: float, feat_axis: str | None,
+def batched_support_skappa(z: Array, kappa: Array | float,
+                           feat_axis: str | None,
                            rounds: int = 3, B: int = 32) -> tuple[Array, Array]:
     """Distributed LP over S^kappa via batched-count bisection on tau."""
     sum_fn = _psum(feat_axis)
@@ -187,11 +238,17 @@ class ShardedBiCADMM:
     nodes_axis: str | tuple[str, ...] = "nodes"
     feat_axis: str = "feat"
     n_classes: int = 1
-    projection: str = "batched"      # "batched" | "bisect" (naive scalar)
+    projection: str = "exact"        # "exact" | "batched" | "bisect"
 
     def __post_init__(self):
         if isinstance(self.loss, str):
             self.loss = get_loss(self.loss, self.n_classes)
+        if self.projection not in ("exact", "batched", "bisect"):
+            raise ValueError(f"unknown projection mode {self.projection!r}")
+        # jitted shard_map programs, keyed on the python values the closures
+        # bake in — reused across calls so repeated fits/sweeps don't
+        # re-trace (shapes/dtypes are handled by jit's own cache)
+        self._jit_cache: dict = {}
 
     # ---- specs -------------------------------------------------------------
     def _sizes(self, n: int):
@@ -210,9 +267,33 @@ class ShardedBiCADMM:
             A = jnp.pad(A, ((0, 0), (0, n_pad - n)))
         return A
 
+    # ---- resumable state -----------------------------------------------------
+    def init_state(self, n: int, n_samples: int,
+                   dtype=jnp.float32) -> ShardedGlobalState:
+        """Fresh zero state for problems with ``n`` features and
+        ``n_samples`` total rows (global, host-side layout)."""
+        N, M, nb = self._sizes(n)
+        K = self.loss.n_classes
+        n_pad = M * nb
+        z = jnp.zeros((n_pad, K), dtype)
+        return ShardedGlobalState(
+            x=jnp.zeros((N, n_pad, K), dtype), u=jnp.zeros((N, n_pad, K), dtype),
+            z=z, t=jnp.asarray(0.0, dtype), s=jnp.zeros((n_pad, K), dtype),
+            v=jnp.asarray(0.0, dtype),
+            nu=jnp.zeros((n_samples, K), dtype),
+            omega=jnp.zeros((n_samples, K), dtype))
+
+    def _state_specs(self):
+        nodes, feat = self.nodes_axis, self.feat_axis
+        return ShardedGlobalState(
+            x=P(nodes, feat, None), u=P(nodes, feat, None),
+            z=P(feat, None), t=P(), s=P(feat, None), v=P(),
+            nu=P(nodes, None), omega=P(nodes, None))
+
     # ---- the shard-local program --------------------------------------------
-    def _local_run(self, N, M, iters, record_history, A_blk, b_blk, q0=None):
-        """Runs on each device inside shard_map. A_blk (m_loc, nb·...)."""
+    def _local_funcs(self, N, M, A_blk, b_blk):
+        """Build the shard-local (init/step/cond) closures. Runs on each
+        device inside shard_map; A_blk is the (m_loc, nb) data block."""
         cfg, loss = self.cfg, self.loss
         K = loss.n_classes
         nodes, feat = self.nodes_axis, self.feat_axis
@@ -222,7 +303,6 @@ class ShardedBiCADMM:
         sigma = 1.0 / (N * cfg.gamma)
         c = sigma + cfg.rho_c
         m_loc, nb = A_blk.shape
-        nbK = nb * K
 
         # --- setup: per-device cached Cholesky (constant across iterations)
         G = A_blk.T @ A_blk
@@ -233,29 +313,75 @@ class ShardedBiCADMM:
             y = jax.scipy.linalg.solve_triangular(chol, rhs, lower=True)
             return jax.scipy.linalg.solve_triangular(chol.T, y, lower=False)
 
+        exact = self.projection == "exact"
+        if exact:
+            # Reference-faithful linear algebra: the sub-solver oracle
+            # (repro.core.subsolver) computes every block through *batched*
+            # (leading block axis) einsums / vmapped triangular solves, and
+            # XLA lowers batched and unbatched matmuls differently at the
+            # ulp level. Mirror the batched forms with a unit leading axis
+            # so a (1,1)-mesh trajectory is bit-identical to the oracle.
+            from .subsolver import _block_solve
+            A1 = A_blk[None]                       # (1, m_loc, nb)
+            chol1 = chol[None]
+
+            def mm_fwd(x):                         # (nb, K) -> (m_loc, K)
+                return jnp.einsum("jmn,jnk->jmk", A1, x[None])[0]
+
+            def mm_t(ct):                          # (m_loc, K) -> (nb, K)
+                return jnp.einsum("jmn,jmk->jnk", A1, ct[None])[0]
+
+            def x_solve(rhs):
+                return jax.vmap(_block_solve)(chol1, rhs[None])[0]
+        else:
+            mm_fwd = lambda x: A_blk @ x
+            mm_t = lambda ct: A_blk.T @ ct
+            x_solve = chol_solve
+
         def flat(x):  # (nb, K) -> (nbK,) for the projection helpers
             return x.reshape(-1)
 
         def unflat(x):
             return x.reshape(nb, K)
 
+        def gather_full(x2d):
+            """(nb, K) local shard -> (n_pad*K,) replicated full vector,
+            laid out exactly like the reference engine's flat iterate."""
+            g = jax.lax.all_gather(x2d, feat, axis=0, tiled=True)
+            return g.reshape(-1)
+
+        def slice_local(flat_g):
+            """(n_pad*K,) full vector -> this device's (nb, K) shard."""
+            g = flat_g.reshape(M * nb, K)
+            j = jax.lax.axis_index(feat)
+            return jax.lax.dynamic_slice_in_dim(g, j * nb, nb, axis=0)
+
+        def feat_mean(w):
+            if exact:
+                # mean over the gathered (M, m_loc, K) stack — the same
+                # reduction order as the reference sub-solver
+                return jnp.mean(jax.lax.all_gather(w, feat, axis=0), axis=0)
+            return psum_f(w) / M
+
         def inner_admm(x0, nu0, om0, q):
             """Algorithm 2 across the feat axis (q: (nb,K) prox center)."""
+            Mf = float(M)
+
             def it(carry, _):
                 x, nu, om = carry
-                w = A_blk @ x                              # (m_loc, K)
-                w_bar = psum_f(w) / M
-                c_t = w + om - w_bar - nu
-                rhs = cfg.rho_l * (A_blk.T @ c_t) + cfg.rho_c * q
-                x_new = chol_solve(rhs)
-                w_new = A_blk @ x_new
-                w_bar_new = psum_f(w_new) / M
+                w = mm_fwd(x)                              # (m_loc, K)
+                w_bar = feat_mean(w)
+                c_t = w + (om - w_bar - nu)
+                rhs = cfg.rho_l * mm_t(c_t) + cfg.rho_c * q
+                x_new = x_solve(rhs)
+                w_new = mm_fwd(x_new)
+                w_bar_new = feat_mean(w_new)
                 a = w_bar_new + nu
-                pq = M * a
+                pq = Mf * a
                 pred = loss.prox_omega(
-                    pq[:, 0] if K == 1 else pq, b_blk, cfg.rho_l / M)
+                    pq[:, 0] if K == 1 else pq, b_blk, cfg.rho_l / Mf)
                 pred = pred[:, None] if K == 1 else pred
-                om_new = pred / M
+                om_new = pred / Mf
                 nu_new = nu + w_bar_new - om_new
                 return (x_new, nu_new, om_new), None
             (x, nu, om), _ = jax.lax.scan(it, (x0, nu0, om0), None,
@@ -269,7 +395,7 @@ class ShardedBiCADMM:
                 z0f, t0, sum_fn=lambda x: psum_f(jnp.sum(x)) if x.ndim else psum_f(x),
                 max_fn=lambda x: _pmax(feat)(jnp.max(x)) if x.ndim else _pmax(feat)(x))
 
-        def zt_update(z0, t0, wc, s, v):
+        def zt_update_sharded(z0, t0, wc, s, v):
             a = N * cfg.rho_c
             ss = psum_f(jnp.vdot(s, s))
             L = a + rho_b * (ss + 1.0)
@@ -296,7 +422,10 @@ class ShardedBiCADMM:
                 (z0p, t0p, z0p, t0p, jnp.asarray(1.0, z0.dtype)))
             return z, t
 
-        def outer_step(st: ShardedState) -> ShardedState:
+        def outer_step_exact(st: ShardedState, kappa) -> ShardedState:
+            """Reference-faithful outer iteration: the (z,t,s,v) block runs
+            the *same* sort-based code as repro.core.bicadmm on the gathered
+            full vector, replicated on every device."""
             q = st.z - st.u
             x_new, nu, om = inner_admm(st.x, st.nu, st.omega, q)
             if cfg.over_relax != 1.0:
@@ -304,13 +433,38 @@ class ShardedBiCADMM:
             else:
                 x_eff = x_new
             wc = psum_n(x_eff + st.u) / N
-            z_new, t_new = zt_update(st.z, st.t, wc, st.s, st.v)
+            zg_old = gather_full(st.z)
+            zg, t_new = _zt_update(zg_old, st.t, gather_full(wc),
+                                   gather_full(st.s), st.v,
+                                   float(N), cfg.rho_c, rho_b, cfg.zt_iters)
+            sg = bilinear.s_update(zg, t_new, st.v, kappa)
+            gval = bilinear.g(zg, sg, t_new)
+            z_new, s_new = slice_local(zg), slice_local(sg)
+            u_new = st.u + x_eff - z_new
+            v_new = st.v + gval
+            # residuals (14), reference reduction order
+            p_r = psum_n(jnp.linalg.norm(gather_full(x_new - z_new)))
+            d_r = jnp.sqrt(jnp.asarray(N, zg.dtype)) * cfg.rho_c * \
+                jnp.linalg.norm(zg - zg_old)
+            b_r = jnp.abs(gval)
+            return ShardedState(x_new, u_new, z_new, t_new, s_new, v_new,
+                                nu, om, st.k + 1, p_r, d_r, b_r)
+
+        def outer_step_sharded(st: ShardedState, kappa) -> ShardedState:
+            q = st.z - st.u
+            x_new, nu, om = inner_admm(st.x, st.nu, st.omega, q)
+            if cfg.over_relax != 1.0:
+                x_eff = cfg.over_relax * x_new + (1.0 - cfg.over_relax) * st.z
+            else:
+                x_eff = x_new
+            wc = psum_n(x_eff + st.u) / N
+            z_new, t_new = zt_update_sharded(st.z, st.t, wc, st.s, st.v)
             if self.projection == "batched":
                 u_max, s_star = batched_support_skappa(
-                    flat(z_new), float(cfg.kappa), feat)
+                    flat(z_new), kappa, feat)
             else:
                 u_max, s_star = bilinear.support_skappa_bisect(
-                    flat(z_new), float(cfg.kappa),
+                    flat(z_new), kappa,
                     sum_fn=lambda x: psum_f(jnp.sum(x)) if x.ndim else psum_f(x),
                     max_fn=lambda x: _pmax(feat)(jnp.max(x)) if x.ndim else _pmax(feat)(x))
             ctar = jnp.asarray(t_new - st.v, z_new.dtype)
@@ -329,31 +483,36 @@ class ShardedBiCADMM:
             return ShardedState(x_new, u_new, z_new, t_new, s_new, v_new,
                                 nu, om, st.k + 1, p_r, d_r, b_r)
 
-        dt = A_blk.dtype
+        outer_step = outer_step_exact if exact else outer_step_sharded
+
+        big = jnp.asarray(jnp.inf, A_blk.dtype)
+
+        def reset(st: ShardedState) -> ShardedState:
+            return st._replace(k=jnp.asarray(0), p_r=big, d_r=big, b_r=big)
+
+        return outer_step, reset
+
+    def _unpack_state(self, gs: ShardedGlobalState, dt):
+        """Shard-local views (inside shard_map) -> ShardedState."""
         big = jnp.asarray(jnp.inf, dt)
-        st0 = ShardedState(
-            x=jnp.zeros((nb, K), dt), u=jnp.zeros((nb, K), dt),
-            z=(jnp.zeros((nb, K), dt) if q0 is None else q0),
-            t=jnp.asarray(0.0, dt), s=jnp.zeros((nb, K), dt),
-            v=jnp.asarray(0.0, dt),
-            nu=jnp.zeros((m_loc, K), dt), omega=jnp.zeros((m_loc, K), dt),
+        return ShardedState(
+            x=gs.x[0], u=gs.u[0], z=gs.z, t=gs.t, s=gs.s, v=gs.v,
+            nu=gs.nu, omega=gs.omega,
             k=jnp.asarray(0), p_r=big, d_r=big, b_r=big)
 
-        if record_history:
-            def body(st, _):
-                st = outer_step(st)
-                return st, jnp.stack([st.p_r, st.d_r, st.b_r])
-            st, hist = jax.lax.scan(body, st0, None, length=iters)
-            return st, hist
+    @staticmethod
+    def _pack_state(st: ShardedState) -> ShardedGlobalState:
+        return ShardedGlobalState(x=st.x[None], u=st.u[None], z=st.z, t=st.t,
+                                  s=st.s, v=st.v, nu=st.nu, omega=st.omega)
 
-        def cond(st):
-            done = (st.p_r < cfg.tol) & (st.d_r < cfg.tol) & (st.b_r < cfg.tol)
-            return (~done) & (st.k < iters)
-        st = jax.lax.while_loop(cond, outer_step, st0)
-        return st, jnp.zeros((iters, 3), dt)
+    def _unpad_flat(self, z: Array, n: int, n_pad: int) -> Array:
+        """(n_pad, K) feature-padded iterate -> (n*K,) reference layout."""
+        K = self.loss.n_classes
+        return z[:n].reshape(-1) if K > 1 else z.reshape(-1)[: n * K]
 
     # ---- public API ----------------------------------------------------------
     def fit(self, A_global: Array, b_global: Array, *,
+            state: ShardedGlobalState | None = None,
             record_history: bool = False, iters: int | None = None
             ) -> ShardedResult:
         cfg = self.cfg
@@ -363,27 +522,109 @@ class ShardedBiCADMM:
         n_pad = M * nb
         A_p = self._pad(A_global, n_pad)
         iters = iters if iters is not None else cfg.max_iter
+        if state is None:
+            state = self.init_state(n, A_global.shape[0], A_p.dtype)
 
         nodes = self.nodes_axis
+        st_specs = self._state_specs()
         in_specs = (P(nodes, self.feat_axis),
-                    P(nodes) if b_global.ndim == 1 else P(nodes, None))
+                    P(nodes) if b_global.ndim == 1 else P(nodes, None),
+                    st_specs)
         # z / history / scalars are replicated over `nodes`; z is
         # feat-sharded on its leading dim.
         out_specs = ((P(self.feat_axis, None), P(), P(), P(), P(), P()),
-                     P(None, None))
+                     P(None, None), st_specs)
 
-        def run(A_blk, b_blk):
-            st, hist = self._local_run(N, M, iters, record_history,
-                                       A_blk, b_blk)
-            return (st.z, st.k, st.p_r, st.d_r, st.b_r, st.t), hist
+        def run(A_blk, b_blk, gs):
+            outer_step, _ = self._local_funcs(N, M, A_blk, b_blk)
+            st0 = self._unpack_state(gs, A_blk.dtype)
+            kappa = jnp.asarray(float(cfg.kappa), A_blk.dtype)
+            step = lambda st: outer_step(st, kappa)
 
-        fn = shard_map(run, mesh=self.mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_rep=False)
-        (z, k, p_r, d_r, b_r, t), hist = jax.jit(fn)(A_p, b_global)
+            if record_history:
+                def body(st, _):
+                    st = step(st)
+                    return st, jnp.stack([st.p_r, st.d_r, st.b_r])
+                st, hist = jax.lax.scan(body, st0, None, length=iters)
+            else:
+                def cond(st):
+                    done = ((st.p_r < cfg.tol) & (st.d_r < cfg.tol)
+                            & (st.b_r < cfg.tol))
+                    return (~done) & (st.k < iters)
+                st = jax.lax.while_loop(cond, step, st0)
+                hist = jnp.zeros((iters, 3), A_blk.dtype)
+            return ((st.z, st.k, st.p_r, st.d_r, st.b_r, st.t), hist,
+                    self._pack_state(st))
 
-        zf = z.reshape(-1)[: n * K] if K == 1 else \
-            z.reshape(n_pad, K)[:n].reshape(-1)
+        key = ("fit", n, b_global.ndim, record_history, iters)
+        if key not in self._jit_cache:
+            self._jit_cache[key] = jax.jit(shard_map(
+                run, mesh=self.mesh, in_specs=in_specs,
+                out_specs=out_specs, check_rep=False))
+        (z, k, p_r, d_r, b_r, t), hist, gs = \
+            self._jit_cache[key](A_p, b_global, state)
+
+        zf = self._unpad_flat(z, n, n_pad)
         z_sparse = bilinear.hard_threshold(zf, cfg.kappa)
         support = jnp.abs(z_sparse) > 0
         return ShardedResult(zf, support, z_sparse, k, p_r, d_r,
-                             b_r, hist if record_history else None)
+                             b_r, hist if record_history else None, gs)
+
+    def fit_path(self, A_global: Array, b_global: Array, kappas, *,
+                 state: ShardedGlobalState | None = None,
+                 warm_start: bool = True) -> ShardedPathResult:
+        """Fit the whole kappa-path in one shard_map'd ``lax.scan``: each
+        budget's while-loop warm-starts from the previous budget's ADMM
+        state (``warm_start=False`` re-initializes per point — the cold
+        baseline with identical numerics and collectives)."""
+        cfg = self.cfg
+        K = self.loss.n_classes
+        n = A_global.shape[1]
+        N, M, nb = self._sizes(n)
+        n_pad = M * nb
+        A_p = self._pad(A_global, n_pad)
+        kaps = jnp.asarray(kappas, A_p.dtype)
+        if kaps.ndim != 1 or kaps.shape[0] == 0:
+            raise ValueError("kappas must be a non-empty 1-D grid")
+        if state is None:
+            state = self.init_state(n, A_global.shape[0], A_p.dtype)
+
+        nodes = self.nodes_axis
+        st_specs = self._state_specs()
+        in_specs = (P(nodes, self.feat_axis),
+                    P(nodes) if b_global.ndim == 1 else P(nodes, None),
+                    P(), st_specs)
+        out_specs = ((P(None, self.feat_axis, None), P(None), P(None),
+                      P(None), P(None)), st_specs)
+
+        def run(A_blk, b_blk, ks, gs):
+            outer_step, reset = self._local_funcs(N, M, A_blk, b_blk)
+            st_init = self._unpack_state(gs, A_blk.dtype)
+
+            def cond(st):
+                done = ((st.p_r < cfg.tol) & (st.d_r < cfg.tol)
+                        & (st.b_r < cfg.tol))
+                return (~done) & (st.k < cfg.max_iter)
+
+            def solve_one(carry, kappa):
+                st = jax.lax.while_loop(
+                    cond, lambda s: outer_step(s, kappa), reset(carry))
+                out = (st.z, st.k, st.p_r, st.d_r, st.b_r)
+                return (st if warm_start else st_init), out
+
+            last, outs = jax.lax.scan(solve_one, st_init, ks)
+            return outs, self._pack_state(last)
+
+        key = ("path", n, b_global.ndim, warm_start)
+        if key not in self._jit_cache:
+            self._jit_cache[key] = jax.jit(shard_map(
+                run, mesh=self.mesh, in_specs=in_specs,
+                out_specs=out_specs, check_rep=False))
+        (z, k, p_r, d_r, b_r), gs = \
+            self._jit_cache[key](A_p, b_global, kaps, state)
+
+        zf = jax.vmap(lambda zz: self._unpad_flat(zz, n, n_pad))(z)
+        x_sparse = jax.vmap(bilinear.hard_threshold)(zf, kaps)
+        support = jnp.abs(x_sparse) > 0
+        return ShardedPathResult(zf, support, x_sparse, k, p_r, d_r, b_r,
+                                 jnp.sum(support, axis=1), kaps, gs)

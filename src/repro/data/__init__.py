@@ -1,2 +1,3 @@
-from .synthetic import (SyntheticSpec, make_sparse_regression,
-                        make_sparse_classification, make_sparse_softmax)
+from .synthetic import (SyntheticSpec, make_graded_classification,
+                        make_graded_regression, make_sparse_classification,
+                        make_sparse_regression, make_sparse_softmax)

@@ -1,0 +1,36 @@
+"""Optional-hypothesis shim: property-based tests skip individually when the
+``[test]`` extra is absent, while the plain tests in the same module still
+run (a module-level ``pytest.importorskip`` would silently drop them too).
+
+Usage in a test module::
+
+    from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+With hypothesis installed these are the real objects; without it, ``@given``
+marks the test as skipped and ``settings`` / ``st`` are inert stand-ins that
+absorb the decoration-time calls (``st.integers(...)`` etc.).
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    settings.register_profile = lambda *a, **k: None
+    settings.load_profile = lambda *a, **k: None
+
+    class _Strategies:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

@@ -43,7 +43,14 @@ _SUBPROC = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     os.environ.setdefault("JAX_PLATFORMS", "cpu")
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType
+    try:  # AxisType landed after jax 0.4.x; plain make_mesh is equivalent
+        from jax.sharding import AxisType
+        def make_mesh(shape, names):
+            return jax.make_mesh(shape, names,
+                                 axis_types=(AxisType.Auto,) * len(shape))
+    except ImportError:
+        def make_mesh(shape, names):
+            return jax.make_mesh(shape, names)
     from repro.core import BiCADMM, BiCADMMConfig
     from repro.core.sharded import ShardedBiCADMM
     from repro.data import SyntheticSpec, make_sparse_regression, \\
@@ -56,8 +63,7 @@ _SUBPROC = textwrap.dedent("""
     kw = dict(kappa=spec.kappa, gamma=10.0, rho_c=1.0, alpha=0.5,
               max_iter=200, tol=1e-5, n_feature_blocks=4, inner_iters=25)
     ref = BiCADMM("squared", BiCADMMConfig(**kw, polish=False)).fit(As, bs)
-    mesh = jax.make_mesh((2, 4), ("nodes", "feat"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("nodes", "feat"))
     res = ShardedBiCADMM("squared", BiCADMMConfig(**kw), mesh).fit(
         As.reshape(-1, 60), bs.reshape(-1))
     out["sq_iters"] = [int(ref.iters), int(res.iters)]
@@ -81,8 +87,7 @@ _SUBPROC = textwrap.dedent("""
     out["lg_support"] = bool(jnp.all(res2.support == ref2.support))
 
     # nodes axis spanning two mesh axes (the production ("pod","data") case)
-    mesh3 = jax.make_mesh((2, 1, 4), ("pod", "data", "feat"),
-                          axis_types=(AxisType.Auto,) * 3)
+    mesh3 = make_mesh((2, 1, 4), ("pod", "data", "feat"))
     res3 = ShardedBiCADMM("squared", BiCADMMConfig(**kw), mesh3,
                           nodes_axis=("pod", "data")).fit(
         As.reshape(-1, 60), bs.reshape(-1))
