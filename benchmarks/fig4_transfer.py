@@ -29,22 +29,39 @@ def host_to_device(nbytes: int, reps: int = 5) -> float:
 
 
 def modelled_ici(n: int, m_per_node: int, inner_iters: int = 15,
-                 M: int = 16, link_gbps: float = 50e9) -> dict:
-    """Per-outer-iteration wire bytes of the sharded engine with
-    ``projection="batched"`` — the communication-optimized mode (DESIGN §5).
+                 M: int = 16, link_gbps: float = 50e9,
+                 zt_iters: int = 120) -> dict:
+    """Per-outer-iteration wire bytes of the sharded engine.
 
-    The engine's *default* mode is ``projection="exact"``, which instead
-    all-gathers the O(n) iterate for the reference-faithful sort-based
-    projections; its gather term is reported alongside for contrast."""
-    inner = 4 * m_per_node * inner_iters          # psum of (m_i,) f32
+    The *default* mode is ``projection="ladder_exact"`` — the exact
+    sort-free engine whose per-FISTA-step projection traffic is the (2*B,)
+    bracketing psums plus a handful of (2,)-polish psums. Both exact modes
+    also pay an inner-loop all-gather of the (m_i, K) prediction stack
+    (2x per inner step, to mirror the oracle's reduction order), which the
+    approximate modes replace with a psum — both inner terms are modeled.
+    The opt-in ``projection="exact"`` mode additionally all-gathers the
+    O(n) iterate (the paper's "Collect"); its gather term is reported for
+    contrast, as are the approximate batched-ladder scalars."""
+    from repro.core.bilinear import LADDER_B
+    inner_psum = 4 * m_per_node * inner_iters      # psum of (m_i,) f32
+    # exact modes: 2 all-gathers of the (M, m_i) stack per inner step
+    inner_gather = 4 * m_per_node * inner_iters * 2 * M
     consensus = 4 * (n // M)                       # psum of the z shard
-    scalars = 4 * 64 * 3                           # batched-ladder psums
-    total = inner + consensus + scalars
+    # ladder_exact: per FISTA step, 2 bracketing rounds (the TPU default of
+    # bilinear.default_rounds) x (2*B,)-psum + ~4 polish (2,)-psums + 3
+    # scalars (abs-sum/max/dot)
+    tpu_rounds, polish = 2, 4
+    ladder = 4 * zt_iters * (tpu_rounds * 2 * LADDER_B + polish * 2 + 3)
+    batched_scalars = 4 * 64 * 3                   # batched-ladder psums
+    total = inner_gather + consensus + ladder
     exact_gathers = 4 * n * 4                      # z/w/s/x-diff all-gathers
-    return {"inner_allreduce": inner, "consensus": consensus,
-            "projection_scalars": scalars, "total": total,
+    return {"inner_allreduce_batched": inner_psum,
+            "inner_gather_exact_modes": inner_gather,
+            "consensus": consensus,
+            "projection_ladder_exact": ladder,
+            "projection_scalars_batched": batched_scalars, "total": total,
             "exact_mode_extra_gathers": exact_gathers,
-            "exact_mode_total": inner + consensus + exact_gathers,
+            "exact_mode_total": inner_gather + consensus + exact_gathers,
             "seconds_at_link": total / link_gbps}
 
 

@@ -1,0 +1,128 @@
+"""Projection engine benchmark — the repo's perf-trajectory baseline.
+
+Every Bi-cADMM outer iteration runs ``zt_iters`` (default 120) l1-epigraph
+projections inside the (7b) FISTA loop plus one S^kappa support evaluation,
+so the projection primitive IS the hot path. This benchmark times, across
+feature dimensions d:
+
+* ``sort``   — ``project_l1_epigraph_sort`` (the retired O(d log d) default)
+* ``bisect`` — ``project_l1_epigraph_bisect`` (60 scalar halvings, approx.)
+* ``ladder`` — ``project_l1_epigraph`` (the exact sort-free default:
+  ladder-refinement bracketing + closed-form polish)
+
+and verifies ladder == sort on the way. It also measures the end-to-end
+effect: ``BiCADMM.fit_with_history`` (fixed iterations, squared loss) and a
+warm-started ``fit_path`` under ``projection="ladder"`` vs ``"sort"``.
+Expect an honest crossover in the json: at small d the fixed-iteration fit
+can come out <1x (the polish loop's sequential steps cost more than a tiny
+device sort), while the path engine and every d >= 1e5 size win big.
+
+Results land in ``benchmarks/results/proj_bench.json``:
+
+    PYTHONPATH=src python -m benchmarks.proj_bench            # CPU-scaled
+    PYTHONPATH=src python -m benchmarks.proj_bench --full     # adds d=1e7
+    PYTHONPATH=src python -m benchmarks.proj_bench --smoke    # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BiCADMM, BiCADMMConfig, bilinear, fit_path
+from repro.data.synthetic import SyntheticSpec, make_graded_regression
+
+from .common import emit, save_json, timeit
+
+
+def _bench_projection(d: int, reps: int) -> dict:
+    key = jax.random.PRNGKey(d % (2**31 - 1))
+    z0 = jax.random.normal(key, (d,), jnp.float32)
+    t0 = jnp.float32(0.05) * jnp.sum(jnp.abs(z0))  # interior root, generic
+
+    sort_fn = jax.jit(bilinear.project_l1_epigraph_sort)
+    bisect_fn = jax.jit(bilinear.project_l1_epigraph_bisect)
+    ladder_fn = jax.jit(bilinear.project_l1_epigraph)
+
+    t_sort = timeit(sort_fn, z0, t0, reps=reps)
+    t_bisect = timeit(bisect_fn, z0, t0, reps=reps)
+    t_ladder = timeit(ladder_fn, z0, t0, reps=reps)
+
+    zs, ts = sort_fn(z0, t0)
+    zl, tl = ladder_fn(z0, t0)
+    zdiff = float(jnp.max(jnp.abs(zs - zl)))
+    tdiff = float(jnp.abs(ts - tl))
+
+    return dict(d=d, t_sort=t_sort, t_bisect=t_bisect, t_ladder=t_ladder,
+                speedup_vs_sort=t_sort / t_ladder, zdiff=zdiff, tdiff=tdiff)
+
+
+def _bench_end_to_end(n: int, m: int, iters: int, reps: int) -> dict:
+    spec = SyntheticSpec(n_nodes=2, m_per_node=m, n_features=n,
+                         sparsity_level=0.75, noise=1e-4)
+    As, bs, _ = make_graded_regression(0, spec)
+    kappa = max(4, n // 8)
+    out = {}
+    for proj in ("ladder", "sort"):
+        cfg = BiCADMMConfig(kappa=kappa, gamma=10.0, rho_c=1.0, alpha=0.5,
+                            max_iter=iters, tol=1e-6, polish=False,
+                            projection=proj)
+        solver = BiCADMM("squared", cfg)
+        out[f"fit_{proj}"] = timeit(
+            lambda: solver.fit_with_history(As, bs, iters=iters).z,
+            reps=reps)
+        kappas = [max(2, n // 4), max(2, n // 6), max(2, n // 8)]
+        out[f"path_{proj}"] = timeit(
+            lambda: fit_path(solver, As, bs, kappas).x, reps=reps)
+    out["fit_speedup"] = out["fit_sort"] / out["fit_ladder"]
+    out["path_speedup"] = out["path_sort"] / out["path_ladder"]
+    out.update(n=n, m=m, iters=iters)
+    return out
+
+
+def main(full: bool = False, smoke: bool = False):
+    if smoke:
+        dims, reps, e2e = [10_000], 2, (80, 200, 10)
+    elif full:
+        dims, reps, e2e = [10_000, 100_000, 1_000_000, 10_000_000], 3, \
+            (1000, 1000, 30)
+    else:
+        dims, reps, e2e = [10_000, 100_000, 1_000_000], 3, (500, 800, 20)
+
+    out = {"projection": [], "backend": jax.default_backend()}
+    for d in dims:
+        r = _bench_projection(d, reps)
+        out["projection"].append(r)
+        emit(f"proj_bench.d{d}.sort", r["t_sort"], "")
+        emit(f"proj_bench.d{d}.bisect", r["t_bisect"], "")
+        emit(f"proj_bench.d{d}.ladder", r["t_ladder"],
+             f"speedup={r['speedup_vs_sort']:.2f}x;zdiff={r['zdiff']:.1e}")
+        print(f"#   d={d}: ladder {r['speedup_vs_sort']:.2f}x vs sort "
+              f"(zdiff {r['zdiff']:.1e})")
+        assert r["zdiff"] < 1e-5 and r["tdiff"] < 1e-5, \
+            "ladder projection diverged from the sort oracle"
+
+    e = _bench_end_to_end(*e2e, reps)
+    out["end_to_end"] = e
+    emit("proj_bench.fit.ladder", e["fit_ladder"],
+         f"speedup={e['fit_speedup']:.2f}x")
+    emit("proj_bench.fit.sort", e["fit_sort"], "")
+    emit("proj_bench.path.ladder", e["path_ladder"],
+         f"speedup={e['path_speedup']:.2f}x")
+    emit("proj_bench.path.sort", e["path_sort"], "")
+    print(f"#   end-to-end fit: ladder {e['fit_speedup']:.2f}x vs sort; "
+          f"fit_path: {e['path_speedup']:.2f}x")
+
+    if not smoke:  # CI smoke must not clobber the committed baseline
+        save_json("proj_bench.json", out)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: one small dim + tiny end-to-end")
+    a = ap.parse_args()
+    main(full=a.full, smoke=a.smoke)

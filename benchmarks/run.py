@@ -12,7 +12,7 @@ import argparse
 import time
 
 from . import (fig1_convergence, fig23_scaling, fig4_transfer, path_sweep,
-               roofline, table1_compare)
+               proj_bench, roofline, table1_compare)
 
 
 def main() -> None:
@@ -32,6 +32,8 @@ def main() -> None:
     fig4_transfer.main(full=args.full)
     print("# Path sweep — warm-started kappa-path vs cold fits")
     path_sweep.main(full=args.full)
+    print("# Projection engine — sort vs bisect vs ladder-exact")
+    proj_bench.main(full=args.full)
     print("# Roofline — from dry-run records")
     roofline.main()
     print(f"# total {time.time() - t0:.1f}s")

@@ -80,6 +80,7 @@ class BiCADMMConfig:
     polish: bool = True             # debias on the recovered support
     over_relax: float = 1.0         # 1.0 = paper-faithful; 1.5-1.8 typical
     force_feature_split: bool = False  # use Algorithm 2 even when M == 1
+    projection: str = "ladder"      # "ladder" (sort-free exact) | "sort"
 
     @property
     def rho_b_eff(self) -> float:
@@ -133,31 +134,49 @@ def reset_for_resume(st: BiCADMMState) -> BiCADMMState:
 
 
 def _zt_update(z0: Array, t0: Array, w: Array, s: Array, v: Array,
-               N: float, rho_c: float, rho_b: float, iters: int
+               N: float, rho_c: float, rho_b: float, iters: int, *,
+               ops: bilinear.LadderOps | None = None,
+               projection: str = "ladder", rounds: int | None = None
                ) -> tuple[Array, Array]:
     """Step (7b): min over {(z,t): ||z||_1 <= t} of
         (N rho_c / 2) ||z - w||^2 + (rho_b / 2) (s^T z - t + v)^2
-    by FISTA with the exact sort-based cone projection."""
+    by FISTA with the exact cone projection — sort-free (ladder-refinement)
+    by default, ``projection="sort"`` for the retired oracle.
+
+    ``ops`` makes every reduction injectable: the reference engine passes
+    the replicated defaults, ``repro.core.sharded`` passes psum/pmax over
+    the ``feat`` axis — the SAME code then runs on local shards with O(B)
+    collectives per projection, and on a single device the two engines are
+    bit-identical. The fused ladder path computes |y| of the gradient step
+    once per FISTA iteration and reuses it for the refinement passes and
+    the final soft-threshold; no sort, no O(n) gather.
+    """
+    ops = bilinear.DEFAULT_OPS if ops is None else ops
     a = N * rho_c
-    L = a + rho_b * (jnp.vdot(s, s) + 1.0)  # ||Hessian||_2 upper bound
+    L = a + rho_b * (ops.sum_fn(s * s) + 1.0)  # ||Hessian||_2 upper bound
     step = 1.0 / L
 
+    if projection == "sort":
+        project = bilinear.project_l1_epigraph_sort
+    else:
+        project = partial(bilinear.project_l1_epigraph, ops=ops,
+                          rounds=rounds)
+
     def grads(z, t):
-        r = jnp.vdot(s, z) - t + v
+        r = ops.sum_fn(s * z) - t + v
         return a * (z - w) + rho_b * r * s, -rho_b * r
 
     def body(_, carry):
         z, t, zy, ty, tk = carry
         gz, gt = grads(zy, ty)
-        z_new, t_new = bilinear.project_l1_epigraph(zy - step * gz,
-                                                    ty - step * gt)
+        z_new, t_new = project(zy - step * gz, ty - step * gt)
         tk_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * tk * tk))
         beta = (tk - 1.0) / tk_new
         zy_new = z_new + beta * (z_new - z)
         ty_new = t_new + beta * (t_new - t)
         return z_new, t_new, zy_new, ty_new, tk_new
 
-    z0p, t0p = bilinear.project_l1_epigraph(z0, t0)
+    z0p, t0p = project(z0, t0)
     z, t, *_ = jax.lax.fori_loop(
         0, iters, body, (z0p, t0p, z0p, t0p, jnp.asarray(1.0, z0.dtype)))
     return z, t
@@ -170,6 +189,8 @@ class BiCADMM:
     def __init__(self, loss: Loss | str, cfg: BiCADMMConfig, *,
                  n_classes: int = 1):
         self.loss = get_loss(loss, n_classes) if isinstance(loss, str) else loss
+        if cfg.projection not in ("ladder", "sort"):
+            raise ValueError(f"unknown projection mode {cfg.projection!r}")
         self.cfg = cfg
 
     # -- setup ---------------------------------------------------------------
@@ -255,8 +276,11 @@ class BiCADMM:
 
         w = jnp.mean(x_eff + st.u, axis=0)                 # consensus center
         z_new, t_new = _zt_update(st.z, st.t, w, st.s, st.v,
-                                  float(N), rho_c, rho_b, cfg.zt_iters)
-        s_new = bilinear.s_update(z_new, t_new, st.v, params.kappa)
+                                  float(N), rho_c, rho_b, cfg.zt_iters,
+                                  projection=cfg.projection)
+        s_new = bilinear.s_update(
+            z_new, t_new, st.v, params.kappa,
+            method=("sort" if cfg.projection == "sort" else "ladder"))
         u_new = st.u + x_eff - z_new[None]
         gval = bilinear.g(z_new, s_new, t_new)
         v_new = st.v + gval

@@ -9,96 +9,272 @@ needs:
 
 * ``support_skappa(z, kappa)`` — the LP value ``max_{s in S^kappa} z^T s``
   (= sum of the kappa largest ``|z|``; fractional kappa handled exactly) and
-  an argmax ``s*``.
+  an argmax ``s*``. ``jax.lax.top_k`` based for static kappa; the retired
+  double-argsort implementation survives as ``support_skappa_sort`` (the
+  test oracle and the traced-kappa fallback).
 * ``s_update(z, t, v, kappa)`` — closed-form solution of ADMM step (7c)/(12):
-  ``argmin_{s in S^kappa} (z^T s - t + v)^2``.
-* ``project_l1_epigraph(z0, t0)`` — Euclidean projection onto the cone
-  ``C = {(z, t): ||z||_1 <= t}`` (sort-based, exact).
-* ``project_l1_epigraph_bisect`` — same projection via monotone threshold
-  bisection: only *scalar* reductions per step, so it distributes with
-  scalar-only collectives (beyond-paper; see DESIGN.md §3.3).
+  ``argmin_{s in S^kappa} (z^T s - t + v)^2``, built on the sort-free
+  ``support_skappa_ladder``.
+* ``project_l1_epigraph(z0, t0)`` — *exact* Euclidean projection onto the
+  cone ``C = {(z, t): ||z||_1 <= t}``, sort-free via :func:`ladder_refine`.
+  The previous O(d log d) sort implementation survives as
+  ``project_l1_epigraph_sort`` (the test oracle).
+* ``project_l1_epigraph_bisect`` / ``support_skappa_bisect`` — approximate
+  scalar-bisection variants (kept as the ``projection="bisect"`` opt-in).
 * ``g(z, s, t)`` — the bi-linear residual.
 
-All functions are pure jnp and jit/vmap/shard_map-safe.
+Exactness of the sort-free path (why "ladder" does not mean "approximate")
+--------------------------------------------------------------------------
+All three projections reduce to finding the root of a piecewise-linear,
+convex, strictly decreasing KKT function of one threshold variable,
+
+    h(theta) = sum_i max(|z_i| - theta, 0) - t0 - theta,
+
+whose breakpoints are the data values ``|z_i|``. Inside any breakpoint-free
+bracket ``(lo, hi]`` — certified by ``count(|z| > lo) == count(|z| > hi)`` —
+h is *linear* with slope ``-(count + 1)``, so its root has the closed form
+``theta* = (sum_above - t0) / (count + 1)``. :func:`ladder_refine` therefore
+(a) optionally narrows the bracket xB per data pass with the B-rung
+``repro.kernels.bisect_proj.ladder_stats`` Pallas kernel (each round yields
+``h(theta_b)`` and ``count(theta_b)`` for the whole ladder in ONE pass),
+then (b) polishes with the monotone closed-form iteration
+``theta <- theta + h(theta) / (count(theta) + 1)``. Because h is convex and
+decreasing, each polish step lands at the root of the current linear
+segment's extension, never overshoots, and crosses at least one breakpoint
+per step until the segment containing the root is reached — at which point
+the step IS the exact root. Tie clusters (many equal |z_i|) collapse to a
+single breakpoint and resolve in one extra step; the iteration is run to
+its floating-point fixpoint, so the result matches the sort-based oracle to
+the oracle's own rounding. Counts are exact in f32 up to n = 2^24.
+
+All functions are pure jnp and jit/vmap/shard_map-safe. The ``LadderOps``
+bundle makes the reductions injectable, so the identical code runs
+replicated (defaults) or under ``shard_map`` with psum/pmax over the
+feature axis — per bracketing round the wire then carries a single
+(2*B,)-vector psum and per polish step a (2,)-psum, instead of the O(n)
+gather the sort needs (see repro.core.sharded).
 """
 from __future__ import annotations
 
-from functools import partial
+import math
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 Array = jax.Array
 
-
-def g(z: Array, s: Array, t: Array | float) -> Array:
-    """Bi-linear constraint residual g(z, s, t) = z^T s - t."""
-    return jnp.vdot(z, s) - t
+LADDER_B = 128     # rungs per bracketing round (one (2, B) stats pass each)
+NEWTON_CAP = 64    # hard cap on polish steps; the fp fixpoint hits far below
 
 
-def support_skappa(z: Array, kappa: float) -> tuple[Array, Array]:
-    """LP over the unit-box-capped l1 ball S^kappa.
+def g(z: Array, s: Array, t: Array | float, *, sum_fn=None) -> Array:
+    """Bi-linear constraint residual g(z, s, t) = z^T s - t.
 
-    Returns ``(u_max, s_star)`` with ``u_max = max_{s in S^kappa} z^T s`` and
-    ``s_star`` an attaining vertex: sign(z) on the top-floor(kappa)
-    coordinates of |z| plus a fractional entry on the next one.
+    ``sum_fn`` is injectable (psum under shard_map) and the replicated
+    default uses the same elementwise-multiply + reduce form, so sharded
+    and reference engines produce bit-identical residuals on one device.
     """
-    az = jnp.abs(z)
-    n = z.shape[0]
-    kf = jnp.floor(jnp.asarray(kappa, az.dtype))
-    frac = jnp.asarray(kappa, az.dtype) - kf
-    order = jnp.argsort(-az)  # descending |z|
-    ranks = jnp.argsort(order)  # rank of each coordinate, 0 = largest
-    ranks_f = ranks.astype(az.dtype)
-    w = jnp.clip(kf - ranks_f, 0.0, 1.0)  # 1 on top-floor(kappa), 0 after
-    w = w + frac * ((ranks_f >= kf) & (ranks_f < kf + 1.0)).astype(az.dtype)
-    s_star = jnp.sign(z) * w
-    u_max = jnp.sum(az * w)
-    return u_max, s_star
+    sum_fn = jnp.sum if sum_fn is None else sum_fn
+    return sum_fn(z * s) - t
 
 
-def s_update(z: Array, t: Array | float, v: Array | float,
-             kappa: float) -> Array:
-    """Closed-form ADMM s-step (12): argmin_{s in S^kappa} (z^T s - (t - v))^2.
+# --------------------------------------------------------------------------
+# ladder statistics plumbing
+# --------------------------------------------------------------------------
+class LadderOps(NamedTuple):
+    """Injectable reductions for the exact sort-free projections.
 
-    The achievable range of ``z^T s`` over ``S^kappa`` is ``[-u_max, u_max]``.
-    Clamp the target ``c = t - v`` into it; then ``s = (c_cl / u_max) s*`` is
-    feasible (scaling a vertex keeps both norms in bounds) and attains
-    ``z^T s = c_cl`` exactly.
+    The defaults run replicated; ``repro.core.sharded`` wraps them in
+    psum/pmax over the ``feat`` axis so every consumer of
+    :func:`ladder_refine` distributes with O(B) collectives per round.
+
+    sum_fn   — global scalar sum of a (local) array
+    max_fn   — global max of a (local) nonnegative array
+    stats_fn — (az, thetas (B,)) -> (2, B) global ladder stats (one pass;
+               the Pallas ``ladder_stats`` kernel)
+    point_fn — (az, thetas (k,)) with k small/static -> (2, k) global stats
+               via k fused O(n) reductions (no (n, B) broadcast)
+    band_fn  — (az, lo, hi) -> (2,) global [sum; count] of az in (lo, hi].
+               Computed as a DIRECT masked reduction: deriving it from two
+               point stats would subtract O(sum) quantities to recover an
+               O(ulp) bracket and lose the pivot to cancellation.
     """
-    u_max, s_star = support_skappa(z, kappa)
-    c = jnp.asarray(t - v, z.dtype)
-    c_cl = jnp.clip(c, -u_max, u_max)
-    theta = jnp.where(u_max > 0, c_cl / jnp.where(u_max > 0, u_max, 1.0), 0.0)
-    return theta * s_star
+    sum_fn: Callable[[Array], Array]
+    max_fn: Callable[[Array], Array]
+    stats_fn: Callable[[Array, Array], Array]
+    point_fn: Callable[[Array, Array], Array]
+    band_fn: Callable[[Array, Array, Array], Array]
 
 
+def _stats_kernel(az: Array, thetas: Array) -> Array:
+    from ..kernels.bisect_proj import ladder_stats
+    return ladder_stats(az, thetas)
+
+
+def point_stats(az: Array, thetas: Array) -> Array:
+    """(2, k) [sum max(az - theta, 0); count(az > theta)] for a few rungs.
+
+    Unrolled over the (static, tiny) k so each rung is a fused
+    bandwidth-bound reduction — the cheap building block of the polish
+    steps, where a B-wide broadcast would be wasted.
+    """
+    k = thetas.shape[0]
+    cols = []
+    for i in range(k):
+        d = az - thetas[i]
+        pos = d > 0
+        cols.append(jnp.stack([jnp.sum(jnp.maximum(d, 0.0)),
+                               jnp.sum(pos.astype(az.dtype))]))
+    return jnp.stack(cols, axis=1)
+
+
+def band_stats(az: Array, lo: Array, hi: Array) -> Array:
+    """(2,) [sum; count] of the az falling in (lo, hi] — one fused pass."""
+    m = (az > lo) & (az <= hi)
+    return jnp.stack([jnp.sum(jnp.where(m, az, 0.0)),
+                      jnp.sum(m.astype(az.dtype))])
+
+
+DEFAULT_OPS = LadderOps(sum_fn=jnp.sum, max_fn=jnp.max,
+                        stats_fn=_stats_kernel, point_fn=point_stats,
+                        band_fn=band_stats)
+
+
+def default_rounds() -> int:
+    """Bracketing rounds before the closed-form polish.
+
+    On TPU the Pallas kernel evaluates all B = 128 rungs in one data pass,
+    so 2 rounds narrow the bracket x16384 and leave the polish ~2 steps.
+    Elsewhere the (n, B) broadcast costs more than the handful of O(n)
+    polish passes it would save, so we go straight to the polish (which is
+    exact on its own — the rounds only shorten it).
+    """
+    return 2 if jax.default_backend() == "tpu" else 0
+
+
+def _bracket_rounds(lo, hi, rounds, B, crossing_fn):
+    """Narrow [lo, hi] xB per round; ``crossing_fn(thetas) -> idx`` returns
+    the number of leading rungs on the h>0 / count>kappa side (the data
+    array is closed over by crossing_fn)."""
+    def round_fn(carry, _):
+        lo, hi = carry
+        th = lo + (hi - lo) * jnp.arange(1, B + 1, dtype=lo.dtype) / B
+        idx = crossing_fn(th)
+        new_lo = jnp.where(idx == 0, lo, th[jnp.maximum(idx - 1, 0)])
+        new_hi = jnp.where(idx == B, hi, th[jnp.minimum(idx, B - 1)])
+        return (new_lo, new_hi), None
+
+    (lo, hi), _ = jax.lax.scan(round_fn, (lo, hi), None, length=rounds)
+    return lo, hi
+
+
+# --------------------------------------------------------------------------
+# the shared exact primitive
+# --------------------------------------------------------------------------
+def ladder_refine(az: Array, h_target: Array | float, *,
+                  ops: LadderOps = DEFAULT_OPS, hi: Array | None = None,
+                  rounds: int | None = None, B: int = LADDER_B,
+                  newton_cap: int = NEWTON_CAP) -> Array:
+    """Exact root of ``h(theta) = sum max(az - theta, 0) - h_target - theta``.
+
+    See the module docstring for the exactness argument. ``rounds`` ladder
+    passes (B rungs each, one ``ops.stats_fn`` call = one (2, B) psum when
+    sharded) bracket the root; the monotone closed-form polish then runs to
+    its floating-point fixpoint (one ``ops.point_fn`` call = one (2,)-psum
+    per step), which generically takes 2-4 steps after bracketing and is
+    capped at ``newton_cap`` as a safety net.
+
+    Degenerate inputs are safe: if ``h(0) <= 0`` the polish is an immediate
+    fixpoint at 0 (the caller's "inside" case); if no feasible theta exists
+    below ``max(az)`` the iteration converges to ``-h_target`` (the caller's
+    "apex" case discards it).
+    """
+    dt = az.dtype
+    t0 = jnp.asarray(h_target, dt)
+    if rounds is None:
+        rounds = default_rounds()
+    if hi is None:
+        hi = ops.max_fn(az)
+    lo = jnp.zeros_like(hi)
+
+    if rounds:
+        def crossing(th):
+            st = ops.stats_fn(az, th)
+            hv = st[0].astype(dt) - t0 - th
+            return jnp.sum((hv > 0).astype(jnp.int32))
+        lo, hi = _bracket_rounds(lo, hi, rounds, B, crossing)
+
+    def propose(th):
+        st = ops.point_fn(az, th[None]).astype(dt)
+        hv = st[0, 0] - t0 - th
+        return jnp.maximum(th + hv / (st[1, 0] + 1.0), th)
+
+    def cond(c):
+        k, th, prev = c
+        return (th > prev) & (k < newton_cap)
+
+    def body(c):
+        k, th, _ = c
+        return k + 1, propose(th), th
+
+    _, theta, _ = jax.lax.while_loop(
+        cond, body, (jnp.asarray(1, jnp.int32), propose(lo), lo))
+    return theta
+
+
+# --------------------------------------------------------------------------
+# l1-epigraph projection
+# --------------------------------------------------------------------------
 def _soft(z: Array, thr: Array | float) -> Array:
     return jnp.sign(z) * jnp.maximum(jnp.abs(z) - thr, 0.0)
 
 
-def project_l1_epigraph(z0: Array, t0: Array | float) -> tuple[Array, Array]:
-    """Exact Euclidean projection onto ``{(z, t): ||z||_1 <= t}`` (sorting).
+def project_l1_epigraph(z0: Array, t0: Array | float, *,
+                        ops: LadderOps = DEFAULT_OPS,
+                        rounds: int | None = None, B: int = LADDER_B,
+                        newton_cap: int = NEWTON_CAP) -> tuple[Array, Array]:
+    """Exact Euclidean projection onto ``{(z, t): ||z||_1 <= t}`` (sort-free).
 
     KKT: the projection is ``z = soft(z0, theta), t = t0 + theta`` for the
-    smallest ``theta >= 0`` with ``||soft(z0, theta)||_1 <= t0 + theta``.
-    ``h(theta) = ||soft(z0,theta)||_1 - t0 - theta`` is piecewise linear and
-    strictly decreasing until z hits 0, so the root is found from the sorted
-    breakpoints in closed form.
+    smallest ``theta >= 0`` with ``||soft(z0, theta)||_1 <= t0 + theta`` —
+    the root :func:`ladder_refine` computes exactly without sorting. |z0| is
+    computed once and reused for both the refinement passes and the final
+    soft-threshold (the fused hot path of the (7b) FISTA loop).
 
     Handles the apex case (projection = origin) when ``t0`` is so negative
     that no ``theta`` with ``soft(z0, theta) != 0`` satisfies feasibility.
+    """
+    t0 = jnp.asarray(t0, z0.dtype)
+    az = jnp.abs(z0)
+    abs_sum = ops.sum_fn(az)
+    hi0 = ops.max_fn(az)
+    inside = abs_sum <= t0
+    apex = (-t0 - hi0) > 0
+    theta = ladder_refine(az, t0, ops=ops, hi=hi0, rounds=rounds, B=B,
+                          newton_cap=newton_cap)
+    theta = jnp.where(inside, 0.0, theta)
+    z = jnp.where(apex & ~inside, 0.0,
+                  jnp.sign(z0) * jnp.maximum(az - theta, 0.0))
+    t = jnp.where(apex & ~inside, jnp.maximum(t0, 0.0), t0 + theta)
+    return z, t
+
+
+def project_l1_epigraph_sort(z0: Array, t0: Array | float
+                             ) -> tuple[Array, Array]:
+    """Sort-based exact projection — the test oracle for the ladder path.
+
+    Identical closed form: for theta in the j-th sorted segment,
+    ``h(theta) = csum[j-1] - j*theta - t0 - theta`` and the root is
+    ``theta_j = (csum[j-1] - t0) / (j + 1)``, valid if inside its segment.
+    O(d log d) device sort + cumsum; retired from the hot path by
+    :func:`project_l1_epigraph`.
     """
     t0 = jnp.asarray(t0, z0.dtype)
     az = jnp.sort(jnp.abs(z0))[::-1]  # descending
     csum = jnp.cumsum(az)
     n = z0.shape[0]
     k = jnp.arange(1, n + 1, dtype=z0.dtype)
-    # For theta in [az[j], az[j-1]] exactly j entries survive (az sorted
-    # descending, 1-indexed j):  h(theta) = csum[j-1] - j*theta - t0 - theta.
-    # Root: theta_j = (csum[j-1] - t0) / (j + 1); valid if inside its segment.
-    # With idx = j-1 the segment is [lower, upper] = [az[idx+1], az[idx]]
-    # (lower = 0 for the last segment).
     theta_j = (csum - t0) / (k + 1.0)
     lower = jnp.concatenate([az[1:], jnp.zeros((1,), az.dtype)])
     upper = az
@@ -123,7 +299,9 @@ def project_l1_epigraph_bisect(
     ``sum_fn`` / ``max_fn`` are injectable reductions so the same code runs
     inside ``shard_map`` with ``psum`` / ``pmax`` over the feature axis —
     every bisection step then costs a *scalar* collective instead of an
-    all-gather + sort (DESIGN.md §3.3).
+    all-gather + sort (DESIGN.md §3.3). Accurate to ``max|z0| / 2^iters``
+    (NOT exact — see :func:`project_l1_epigraph` for the exact sort-free
+    path); kept as the ``projection="bisect"`` opt-in.
     """
     t0 = jnp.asarray(t0, z0.dtype)
     abs_sum = sum_fn(jnp.abs(z0))
@@ -152,19 +330,152 @@ def project_l1_epigraph_bisect(
     return z, t
 
 
+# --------------------------------------------------------------------------
+# S^kappa support function
+# --------------------------------------------------------------------------
+def support_skappa(z: Array, kappa: float) -> tuple[Array, Array]:
+    """LP over the unit-box-capped l1 ball S^kappa.
+
+    Returns ``(u_max, s_star)`` with ``u_max = max_{s in S^kappa} z^T s`` and
+    ``s_star`` an attaining vertex: sign(z) on the top-floor(kappa)
+    coordinates of |z| plus a fractional entry on the next one.
+
+    For a static Python ``kappa`` this sorts only the top-ceil(kappa)
+    magnitudes via ``jax.lax.top_k`` (ties broken toward lower indices,
+    matching the stable argsort of the retired rank-trick implementation,
+    which survives as :func:`support_skappa_sort` — also the fallback here
+    when ``kappa`` is traced, since ``top_k`` needs a static k).
+    """
+    if isinstance(kappa, (int, float)) and not isinstance(kappa, bool):
+        return _support_skappa_topk(z, float(kappa))
+    return support_skappa_sort(z, kappa)
+
+
+def _support_skappa_topk(z: Array, kappa: float) -> tuple[Array, Array]:
+    az = jnp.abs(z)
+    n = z.shape[0]
+    kf = math.floor(kappa)
+    frac = kappa - kf
+    if kf >= n:
+        return jnp.sum(az), jnp.sign(z)
+    k_take = min(n, kf + (1 if frac > 0 else 0))
+    if k_take == 0:
+        return jnp.zeros((), az.dtype), jnp.zeros_like(z)
+    vals, idx = jax.lax.top_k(az, k_take)
+    wts = jnp.ones((k_take,), az.dtype)
+    if frac > 0 and k_take == kf + 1:
+        wts = wts.at[-1].set(frac)
+    u_max = jnp.sum(vals * wts)
+    w = jnp.zeros((n,), az.dtype).at[idx].set(wts)
+    return u_max, jnp.sign(z) * w
+
+
+def support_skappa_sort(z: Array, kappa: float) -> tuple[Array, Array]:
+    """Double-argsort rank-trick implementation — the test oracle, and the
+    traced-kappa fallback (ranks compare against a traced scalar; top_k
+    cannot)."""
+    az = jnp.abs(z)
+    kf = jnp.floor(jnp.asarray(kappa, az.dtype))
+    frac = jnp.asarray(kappa, az.dtype) - kf
+    order = jnp.argsort(-az)  # descending |z|
+    ranks = jnp.argsort(order)  # rank of each coordinate, 0 = largest
+    ranks_f = ranks.astype(az.dtype)
+    w = jnp.clip(kf - ranks_f, 0.0, 1.0)  # 1 on top-floor(kappa), 0 after
+    w = w + frac * ((ranks_f >= kf) & (ranks_f < kf + 1.0)).astype(az.dtype)
+    s_star = jnp.sign(z) * w
+    u_max = jnp.sum(az * w)
+    return u_max, s_star
+
+
+def support_skappa_ladder(z: Array, kappa: Array | float, *,
+                          ops: LadderOps = DEFAULT_OPS,
+                          rounds: int | None = None, B: int = LADDER_B,
+                          cap: int = NEWTON_CAP) -> tuple[Array, Array]:
+    """Exact sort-free :func:`support_skappa` (traced kappa welcome).
+
+    The LP optimum is governed by the (floor(kappa)+1)-th largest magnitude
+    tau* — the smallest tau with ``count(|z| > tau) <= kappa``. After the
+    optional ladder bracketing rounds, an interpolation search pivots on the
+    *mean* of the magnitudes still inside the bracket (a guaranteed-interior
+    pivot) and probes the adjacent-float pair around it in one fused pass:
+    the crossing ``count(> tau - ulp) > kappa >= count(> tau)`` certifies
+    that tau is EXACTLY a data value and exactly tau*. Tie clusters collapse
+    to a single distinct value, for which the mean pivot IS the cluster
+    value, so ties terminate the search rather than stalling it. Leftover
+    budget ``kappa - count(> tau*)`` is spread over the coordinates equal to
+    tau* (same optimal value as the oracle's arbitrary tie pick; u_max is
+    returned as ``sum |z| * w`` so it is exactly consistent with ``s_star``).
+    """
+    az = jnp.abs(z)
+    dt = az.dtype
+    kap = jnp.asarray(kappa, dt)
+    if rounds is None:
+        rounds = default_rounds()
+    hi0 = ops.max_fn(az)
+    st0 = ops.point_fn(az, jnp.zeros((1,), dt)).astype(dt)
+    c0 = st0[1, 0]
+    all_in = c0 <= kap  # fewer than kappa nonzeros: tau* = 0, w = 1{|z|>0}
+
+    lo = jnp.zeros_like(hi0)
+    hi = hi0
+
+    if rounds:
+        def crossing(th):
+            st = ops.stats_fn(az, th)
+            return jnp.sum((st[1].astype(dt) > kap).astype(jnp.int32))
+        lo, hi = _bracket_rounds(lo, hi, rounds, B, crossing)
+
+    neg_inf = jnp.asarray(-jnp.inf, dt)
+    pos_inf = jnp.asarray(jnp.inf, dt)
+
+    def cond(c):
+        k, done, *_ = c
+        return (~done) & (~all_in) & (k < cap)
+
+    def body(c):
+        k, _, lo, hi, *_ = c
+        band = ops.band_fn(az, lo, hi).astype(dt)   # (sum, count) in (lo, hi]
+        a = band[0] / jnp.maximum(band[1], 1.0)     # interior mean pivot
+        a = jnp.clip(a, jnp.nextafter(lo, pos_inf), hi)
+        am = jnp.nextafter(a, neg_inf)
+        ap = jnp.nextafter(a, pos_inf)
+        st = ops.point_fn(az, jnp.stack([am, a, ap])).astype(dt)
+        c3 = st[1]
+        done1 = (c3[0] > kap) & (kap >= c3[1])   # crossing inside (am, a]
+        done2 = (c3[1] > kap) & (kap >= c3[2])   # crossing inside (a, ap]
+        done = done1 | done2
+        tau = jnp.where(done2, ap, a)
+        c_tau = jnp.where(done2, c3[2], c3[1])
+        ceq = jnp.where(done2, c3[1] - c3[2], c3[0] - c3[1])
+        go_lo = (~done) & (c3[1] > kap)
+        lo_n = jnp.where(go_lo, a, lo)
+        hi_n = jnp.where((~done) & (~go_lo), am, hi)
+        return k + 1, done, lo_n, hi_n, tau, c_tau, ceq
+
+    zero = jnp.zeros_like(c0)
+    init = (jnp.asarray(0, jnp.int32), jnp.asarray(False), lo, hi,
+            hi, zero, zero)
+    _, _, _, _, tau, c_tau, ceq = jax.lax.while_loop(cond, body, init)
+
+    tau = jnp.where(all_in, 0.0, tau)
+    c_tau = jnp.where(all_in, c0, c_tau)
+    ceq = jnp.where(all_in, 0.0, ceq)
+    above = (az > tau).astype(dt)
+    at_tau = ((az == tau) & (tau > 0)).astype(dt)
+    leftover = jnp.clip(kap - c_tau, 0.0, jnp.maximum(ceq, 0.0))
+    bnd_w = jnp.where(ceq > 0, leftover / jnp.where(ceq > 0, ceq, 1.0), 0.0)
+    w = above + bnd_w * at_tau
+    s_star = jnp.sign(z) * w
+    u_max = ops.sum_fn(az * w)
+    return u_max, s_star
+
+
 def support_skappa_bisect(
     z: Array, kappa: float, iters: int = 60, sum_fn=jnp.sum, max_fn=jnp.max,
 ) -> tuple[Array, Array]:
-    """Distributed-friendly version of :func:`support_skappa`.
-
-    Finds the threshold tau with ``sum_i min(1, relu(|z_i| - tau)/eps...)``
-    — concretely we use the exact LP dual: maximize ``z^T s`` over the box
-    ∩ l1-ball; the optimum is ``s_i = sign(z_i) * min(1, relu(|z_i|-tau)/0+)``
-    i.e. indicator of |z_i| > tau with a fractional coordinate at the
-    boundary. We bisect tau so that ``count(|z| > tau) <= kappa`` and
-    assign the leftover mass ``kappa - count`` to boundary coordinates.
-    Only scalar reductions per step.
-    """
+    """Scalar-bisection variant of :func:`support_skappa` (approximate to
+    ladder resolution; kept as the ``projection="bisect"`` opt-in — the
+    exact sort-free path is :func:`support_skappa_ladder`)."""
     az = jnp.abs(z)
     kap = jnp.asarray(kappa, az.dtype)
     hi0 = max_fn(az)
@@ -192,8 +503,56 @@ def support_skappa_bisect(
     return u_max, s_star
 
 
+# --------------------------------------------------------------------------
+# s-step and hard thresholding
+# --------------------------------------------------------------------------
+def s_update(z: Array, t: Array | float, v: Array | float, kappa: float, *,
+             ops: LadderOps = DEFAULT_OPS, method: str = "ladder",
+             rounds: int | None = None) -> Array:
+    """Closed-form ADMM s-step (12): argmin_{s in S^kappa} (z^T s - (t - v))^2.
+
+    The achievable range of ``z^T s`` over ``S^kappa`` is ``[-u_max, u_max]``.
+    Clamp the target ``c = t - v`` into it; then ``s = (c_cl / u_max) s*`` is
+    feasible (scaling a vertex keeps both norms in bounds) and attains
+    ``z^T s = c_cl`` exactly. The support function is evaluated sort-free
+    through :func:`support_skappa_ladder` (``method="sort"`` selects the
+    retired sort oracle for differential testing / benchmarking).
+    """
+    if method == "sort":
+        u_max, s_star = support_skappa_sort(z, kappa)
+    else:
+        u_max, s_star = support_skappa_ladder(z, kappa, ops=ops,
+                                              rounds=rounds)
+    c = jnp.asarray(t - v, z.dtype)
+    c_cl = jnp.clip(c, -u_max, u_max)
+    theta = jnp.where(u_max > 0, c_cl / jnp.where(u_max > 0, u_max, 1.0), 0.0)
+    return theta * s_star
+
+
 def hard_threshold(z: Array, kappa: int) -> Array:
-    """Project z onto {||x||_0 <= kappa} (keep top-kappa magnitudes)."""
+    """Project z onto {||x||_0 <= kappa} (keep top-kappa magnitudes).
+
+    Static kappa sorts only the top-ceil(kappa) via ``jax.lax.top_k`` (ties
+    broken toward lower indices, matching the stable double-argsort it
+    replaced); traced kappa (the path engine's scan/vmap axes) falls back to
+    :func:`hard_threshold_sort`, whose rank comparison accepts tracers.
+    """
+    if isinstance(kappa, (int, float)) and not isinstance(kappa, bool):
+        n = z.shape[0]
+        k = min(n, max(0, math.ceil(kappa)))
+        if k == 0:
+            return jnp.zeros_like(z)
+        if k >= n:
+            return z
+        _, idx = jax.lax.top_k(jnp.abs(z), k)
+        mask = jnp.zeros((n,), bool).at[idx].set(True)
+        return jnp.where(mask, z, 0.0)
+    return hard_threshold_sort(z, kappa)
+
+
+def hard_threshold_sort(z: Array, kappa: int) -> Array:
+    """Double-argsort rank-trick top-kappa mask — the test oracle and the
+    traced-kappa fallback of :func:`hard_threshold`."""
     az = jnp.abs(z)
     ranks = jnp.argsort(jnp.argsort(-az))
     return jnp.where(ranks < kappa, z, 0.0)

@@ -11,23 +11,54 @@ Device (i, j) holds the data block A_ij (m_i, n_j) *exactly* as in the
 paper's hierarchical layout. Per outer iteration the collectives are:
 
   inner loop (Algorithm 2), x ``inner_iters``:
-      psum over `feat` of the partial predictions A_ij x_ij   [(m_i, K) each]
+      reduction over `feat` of the partial predictions A_ij x_ij — a psum
+      in the approximate modes; the two exact modes instead all-gather the
+      (m_i, K) prediction stack (2x per inner step, O(M*m_i) bytes) and
+      take the replicated mean, mirroring the oracle's reduction order
   consensus center:
       psum over `nodes` of (x_ij + u_ij)                      [(n_j, K)]
-  (z,t) FISTA + s-update — selected by ``projection``:
-      * ``"exact"`` (default): all-gather z/s/w over `feat` and run the
-        *identical* sort-based projections of ``repro.core.bicadmm`` /
-        ``repro.core.bilinear`` on the full vector, replicated on every
-        device. O(n) on the wire per outer iteration (the paper's
-        "Collect"), but the iterate trajectory — and hence the iteration
-        count — agrees with the single-process reference oracle exactly.
-      * ``"batched"``: batched threshold-ladder bisection — ONE (B,)-vector
-        psum per round instead of the gather+sort. This is the beyond-paper
-        communication optimization #2: per outer iteration the bytes on the
-        wire drop from O(n) to O(n_j) + O(scalars), at the cost of
-        projection results that match the exact ones only to ladder
-        resolution (~|z|_max / 32^3).
-      * ``"bisect"``: naive scalar-bisection (one scalar psum per step).
+  (z,t) FISTA + s-update — selected by ``projection``.
+
+Projection modes and their wire cost over the `feat` axis per OUTER
+iteration (d = n*K global features, B = 128 ladder rungs, F = ``zt_iters``
+FISTA steps, p = polish steps/projection — generically 2-4 after the
+ladder rounds, <= 15 with rounds = 0):
+
+  mode           exact?  (z,t,s)-block bytes/outer-iteration on `feat`
+  -------------  ------  ------------------------------------------------
+  ladder_exact   yes     O(F * (rounds*2B + p*2 + 3)) scalars   [DEFAULT]
+  exact          yes     O(3d) all-gather (the paper's "Collect")
+  batched        ~B^-3   O(F * rounds * 2B) scalars
+  bisect         ~2^-60  O(F * 60) scalars
+
+(The table covers the projection block; on top of it, BOTH exact modes pay
+the inner loop's prediction-stack gathers — 2 * inner_iters * O(M * m_i)
+bytes per outer iteration, see above — which the approximate modes replace
+with psums. fig4_transfer.py models every term.)
+
+* ``"ladder_exact"`` (default): the sort-free exact projection engine
+  (repro.core.bilinear.ladder_refine) with every reduction psum/pmax-
+  wrapped: each bracketing round is ONE (2*B,)-vector psum, each
+  closed-form polish step ONE (2,)-psum — and the result is *exact*, so
+  iterate trajectories (and iteration counts) still agree with the
+  single-process reference oracle. The O(n) gather is gone from the
+  default hot path. Honest crossover: the ladder term is d-INDEPENDENT
+  (~F*(rounds*2B + p*2 + 3) scalars ~ 250 KB/outer at TPU defaults), so
+  on pure wire *bytes* it beats the O(3d) gather for d >~ 2e5 — the
+  regime the paper targets — while below that the gather moves fewer
+  bytes but serializes a full device sort per FISTA step on every
+  replica; see benchmarks/proj_bench.py + fig4_transfer.py for both
+  terms.
+* ``"exact"``: all-gather z/s/w over `feat` and run the identical
+  full-vector projections of ``repro.core.bicadmm`` replicated on every
+  device. O(n) on the wire per outer iteration; kept as the opt-in
+  reference for differential testing.
+* ``"batched"``: batched threshold-ladder bisection through the same
+  audited ``repro.kernels.bisect_proj.ladder_stats`` Pallas kernel, but
+  WITHOUT the exact closing step: results match the exact ones only to
+  ladder resolution (~|z|_max / 32^3).
+* ``"bisect"``: naive scalar-bisection (one scalar psum per step),
+  accurate to ~|z|_max / 2^60.
 
 The paper's global coordinator node does not exist here: every device runs
 the identical (z, t, s, v) update on psum'd / gathered statistics (symmetric
@@ -64,6 +95,8 @@ from jax.experimental.shard_map import shard_map
 from . import bilinear
 from .bicadmm import BiCADMMConfig, _zt_update
 from .losses import Loss, get_loss
+from ..kernels.bisect_proj import ladder_stats
+from ..kernels.ops import gram_auto
 
 Array = jax.Array
 
@@ -128,21 +161,28 @@ class ShardedPathResult(NamedTuple):
 # batched-threshold reductions (collective-efficient projections)
 # --------------------------------------------------------------------------
 def _psum(ax):
-    return (lambda x: jax.lax.psum(x, ax)) if ax else jnp.sum
+    # ax=None means "single shard holding the full data": the cross-shard
+    # reduction is the identity (a blanket jnp.sum would collapse
+    # array-valued ladder statistics, not just scalars)
+    return (lambda x: jax.lax.psum(x, ax)) if ax else (lambda x: x)
 
 
 def _pmax(ax):
-    return (lambda x: jax.lax.pmax(x, ax)) if ax else jnp.max
+    return (lambda x: jax.lax.pmax(x, ax)) if ax else (lambda x: x)
 
 
 def batched_epigraph_project(z0: Array, t0: Array, feat_axis: str | None,
                              rounds: int = 3, B: int = 32) -> tuple[Array, Array]:
     """Projection onto {(z,t): ||z||_1 <= t} with batched-ladder bisection.
 
-    Each round evaluates h(theta) on a ladder of B thresholds with ONE
-    (B,)-vector psum, then exact-solves the root inside the final bracket
-    (h is linear once the active set is fixed). z0 is the local feature
-    shard; the returned z is the local shard of the projection.
+    Each round evaluates h(theta) on a ladder of B thresholds through the
+    audited ``repro.kernels.bisect_proj.ladder_stats`` Pallas kernel (the
+    same one-pass kernel the exact ``ladder_exact`` engine mode uses) with
+    ONE (2*B,)-vector psum, then solves the root inside the final bracket
+    as if it were breakpoint-free (h is linear once the active set is
+    fixed) — WITHOUT the exact engine's certification/polish, so the result
+    is only ladder-resolution accurate. z0 is the local feature shard; the
+    returned z is the local shard of the projection.
     """
     sum_fn = _psum(feat_axis)
     max_fn = _pmax(feat_axis)
@@ -153,26 +193,17 @@ def batched_epigraph_project(z0: Array, t0: Array, feat_axis: str | None,
     hi0 = max_fn(jnp.max(az, initial=0.0))
     apex = (-t0 - hi0) > 0
 
-    def round_fn(carry, _):
-        lo, hi = carry
-        thetas = lo + (hi - lo) * jnp.arange(1, B + 1, dtype=z0.dtype) / B
-        # partial sums for the whole ladder in one pass + one psum
-        part = jnp.sum(jnp.maximum(az[:, None] - thetas[None, :], 0.0), axis=0)
-        h = sum_fn(part) - t0 - thetas
-        # h decreasing: find last ladder point with h > 0
-        pos = h > 0
-        idx = jnp.sum(pos.astype(jnp.int32))  # thetas[idx-1] > 0 >= thetas[idx]
-        new_lo = jnp.where(idx == 0, lo, thetas[jnp.maximum(idx - 1, 0)])
-        new_hi = jnp.where(idx == B, hi, thetas[jnp.minimum(idx, B - 1)])
-        return (new_lo, new_hi), None
+    def crossing(thetas):
+        # ladder stats for the whole round in one data pass + one psum;
+        # h decreasing: count the leading rungs with h > 0
+        st = sum_fn(ladder_stats(az, thetas))
+        h = st[0].astype(z0.dtype) - t0 - thetas
+        return jnp.sum((h > 0).astype(jnp.int32))
 
-    (lo, hi), _ = jax.lax.scan(round_fn, (jnp.zeros_like(hi0), hi0), None,
-                               length=rounds)
-    # exact root inside [lo, hi]: active set ~ constant => h linear
-    stats = sum_fn(jnp.stack([
-        jnp.sum(jnp.maximum(az - lo, 0.0)),
-        jnp.sum((az > lo).astype(z0.dtype)),
-    ]))
+    lo, hi = bilinear._bracket_rounds(jnp.zeros_like(hi0), hi0, rounds,
+                                      B, crossing)
+    # root inside [lo, hi] assuming the active set is constant (h linear)
+    stats = sum_fn(bilinear.point_stats(az, lo[None]))[:, 0]
     S_lo, cnt = stats[0], stats[1]
     theta = lo + jnp.maximum(S_lo - t0 - lo, 0.0) / (cnt + 1.0)
     theta = jnp.clip(theta, lo, hi)
@@ -187,27 +218,21 @@ def batched_epigraph_project(z0: Array, t0: Array, feat_axis: str | None,
 def batched_support_skappa(z: Array, kappa: Array | float,
                            feat_axis: str | None,
                            rounds: int = 3, B: int = 32) -> tuple[Array, Array]:
-    """Distributed LP over S^kappa via batched-count bisection on tau."""
+    """Distributed LP over S^kappa via batched-count bisection on tau,
+    through the shared ``ladder_stats`` Pallas kernel (count row)."""
     sum_fn = _psum(feat_axis)
     max_fn = _pmax(feat_axis)
     az = jnp.abs(z)
     kap = jnp.asarray(kappa, az.dtype)
     hi0 = max_fn(jnp.max(az, initial=0.0))
 
-    def round_fn(carry, _):
-        lo, hi = carry
-        taus = lo + (hi - lo) * jnp.arange(1, B + 1, dtype=z.dtype) / B
-        cnt = sum_fn(jnp.sum((az[:, None] > taus[None, :]).astype(z.dtype),
-                             axis=0))
+    def crossing(taus):
         # cnt decreasing in tau; want largest tau with cnt > kappa as lo
-        over = cnt > kap
-        idx = jnp.sum(over.astype(jnp.int32))
-        new_lo = jnp.where(idx == 0, lo, taus[jnp.maximum(idx - 1, 0)])
-        new_hi = jnp.where(idx == B, hi, taus[jnp.minimum(idx, B - 1)])
-        return (new_lo, new_hi), None
+        cnt = sum_fn(ladder_stats(az, taus))[1].astype(z.dtype)
+        return jnp.sum((cnt > kap).astype(jnp.int32))
 
-    (lo, tau), _ = jax.lax.scan(round_fn, (jnp.zeros_like(hi0), hi0), None,
-                                length=rounds)
+    lo, tau = bilinear._bracket_rounds(jnp.zeros_like(hi0), hi0, rounds,
+                                       B, crossing)
     above = (az > tau).astype(z.dtype)
     boundary = ((az > lo) & (az <= tau)).astype(z.dtype)
     cnts = sum_fn(jnp.stack([jnp.sum(above), jnp.sum(boundary)]))
@@ -238,13 +263,22 @@ class ShardedBiCADMM:
     nodes_axis: str | tuple[str, ...] = "nodes"
     feat_axis: str = "feat"
     n_classes: int = 1
-    projection: str = "exact"        # "exact" | "batched" | "bisect"
+    # "ladder_exact" | "exact" | "batched" | "bisect" (see module docstring)
+    projection: str = "ladder_exact"
 
     def __post_init__(self):
         if isinstance(self.loss, str):
             self.loss = get_loss(self.loss, self.n_classes)
-        if self.projection not in ("exact", "batched", "bisect"):
+        if self.projection not in ("ladder_exact", "exact", "batched",
+                                   "bisect"):
             raise ValueError(f"unknown projection mode {self.projection!r}")
+        if self.cfg.projection not in ("ladder", "sort"):
+            raise ValueError(
+                f"unknown cfg.projection mode {self.cfg.projection!r}")
+        if self.cfg.projection == "sort" and self.projection != "exact":
+            raise ValueError(
+                'cfg.projection="sort" needs the full gathered vector; use '
+                'the gather-based engine mode (projection="exact")')
         # jitted shard_map programs, keyed on the python values the closures
         # bake in — reused across calls so repeated fits/sweeps don't
         # re-trace (shapes/dtypes are handled by jit's own cache)
@@ -304,8 +338,9 @@ class ShardedBiCADMM:
         c = sigma + cfg.rho_c
         m_loc, nb = A_blk.shape
 
-        # --- setup: per-device cached Cholesky (constant across iterations)
-        G = A_blk.T @ A_blk
+        # --- setup: per-device cached Cholesky (constant across iterations);
+        # the Gram runs through the tiled Pallas kernel on TPU (gram_auto)
+        G = gram_auto(A_blk)
         H = cfg.rho_l * G + c * jnp.eye(nb, dtype=A_blk.dtype)
         chol = jnp.linalg.cholesky(H)
 
@@ -313,14 +348,16 @@ class ShardedBiCADMM:
             y = jax.scipy.linalg.solve_triangular(chol, rhs, lower=True)
             return jax.scipy.linalg.solve_triangular(chol.T, y, lower=False)
 
-        exact = self.projection == "exact"
+        mode = self.projection
+        exact = mode in ("exact", "ladder_exact")
         if exact:
-            # Reference-faithful linear algebra: the sub-solver oracle
-            # (repro.core.subsolver) computes every block through *batched*
-            # (leading block axis) einsums / vmapped triangular solves, and
-            # XLA lowers batched and unbatched matmuls differently at the
-            # ulp level. Mirror the batched forms with a unit leading axis
-            # so a (1,1)-mesh trajectory is bit-identical to the oracle.
+            # Reference-faithful linear algebra (both exact modes): the
+            # sub-solver oracle (repro.core.subsolver) computes every block
+            # through *batched* (leading block axis) einsums / vmapped
+            # triangular solves, and XLA lowers batched and unbatched
+            # matmuls differently at the ulp level. Mirror the batched
+            # forms with a unit leading axis so a (1,1)-mesh trajectory is
+            # bit-identical to the oracle.
             from .subsolver import _block_solve
             A1 = A_blk[None]                       # (1, m_loc, nb)
             chol1 = chol[None]
@@ -388,6 +425,16 @@ class ShardedBiCADMM:
                                           length=cfg.inner_iters)
             return x, nu, om
 
+        # every reduction of the exact sort-free engine, psum/pmax-wrapped:
+        # bracketing rounds are one (2*B,)-psum, polish steps one (2,)-psum
+        lops = bilinear.LadderOps(
+            sum_fn=lambda x: psum_f(jnp.sum(x)),
+            max_fn=lambda x: _pmax(feat)(jnp.max(x, initial=0.0)),
+            stats_fn=lambda az, th: psum_f(ladder_stats(az, th)),
+            point_fn=lambda az, th: psum_f(bilinear.point_stats(az, th)),
+            band_fn=lambda az, lo, hi: psum_f(bilinear.band_stats(az, lo, hi)),
+        )
+
         def project(z0f, t0):
             if self.projection == "batched":
                 return batched_epigraph_project(z0f, t0, feat)
@@ -423,9 +470,10 @@ class ShardedBiCADMM:
             return z, t
 
         def outer_step_exact(st: ShardedState, kappa) -> ShardedState:
-            """Reference-faithful outer iteration: the (z,t,s,v) block runs
-            the *same* sort-based code as repro.core.bicadmm on the gathered
-            full vector, replicated on every device."""
+            """Reference-faithful outer iteration via the paper's "Collect":
+            all-gather the (z,t,s,v) block over `feat` and run the *same*
+            full-vector projections as repro.core.bicadmm, replicated on
+            every device. O(n) on the wire; opt-in (projection="exact")."""
             q = st.z - st.u
             x_new, nu, om = inner_admm(st.x, st.nu, st.omega, q)
             if cfg.over_relax != 1.0:
@@ -436,8 +484,11 @@ class ShardedBiCADMM:
             zg_old = gather_full(st.z)
             zg, t_new = _zt_update(zg_old, st.t, gather_full(wc),
                                    gather_full(st.s), st.v,
-                                   float(N), cfg.rho_c, rho_b, cfg.zt_iters)
-            sg = bilinear.s_update(zg, t_new, st.v, kappa)
+                                   float(N), cfg.rho_c, rho_b, cfg.zt_iters,
+                                   projection=cfg.projection)
+            sg = bilinear.s_update(
+                zg, t_new, st.v, kappa,
+                method=("sort" if cfg.projection == "sort" else "ladder"))
             gval = bilinear.g(zg, sg, t_new)
             z_new, s_new = slice_local(zg), slice_local(sg)
             u_new = st.u + x_eff - z_new
@@ -446,6 +497,36 @@ class ShardedBiCADMM:
             p_r = psum_n(jnp.linalg.norm(gather_full(x_new - z_new)))
             d_r = jnp.sqrt(jnp.asarray(N, zg.dtype)) * cfg.rho_c * \
                 jnp.linalg.norm(zg - zg_old)
+            b_r = jnp.abs(gval)
+            return ShardedState(x_new, u_new, z_new, t_new, s_new, v_new,
+                                nu, om, st.k + 1, p_r, d_r, b_r)
+
+        def outer_step_ladder(st: ShardedState, kappa) -> ShardedState:
+            """Default outer iteration: the exact sort-free projection
+            engine on the local feature shard. Identical math to the
+            reference oracle — the shared ``_zt_update`` / ``s_update`` run
+            here with psum-wrapped reductions, so the only wire traffic of
+            the (z,t,s,v) block is O(B)-sized ladder/polish statistics."""
+            q = st.z - st.u
+            x_new, nu, om = inner_admm(st.x, st.nu, st.omega, q)
+            if cfg.over_relax != 1.0:
+                x_eff = cfg.over_relax * x_new + (1.0 - cfg.over_relax) * st.z
+            else:
+                x_eff = x_new
+            wc = psum_n(x_eff + st.u) / N
+            zf, t_new = _zt_update(flat(st.z), st.t, flat(wc), flat(st.s),
+                                   st.v, float(N), cfg.rho_c, rho_b,
+                                   cfg.zt_iters, ops=lops)
+            z_new = unflat(zf)
+            sf = bilinear.s_update(zf, t_new, st.v, kappa, ops=lops)
+            s_new = unflat(sf)
+            u_new = st.u + x_eff - z_new
+            gval = bilinear.g(zf, sf, t_new, sum_fn=lops.sum_fn)
+            v_new = st.v + gval
+            # residuals (14): p_r = sum_i ||x_i - z||; local: ssq over feat
+            p_r = psum_n(jnp.sqrt(psum_f(jnp.sum((x_new - z_new) ** 2))))
+            d_r = jnp.sqrt(jnp.asarray(N, zf.dtype)) * cfg.rho_c * \
+                jnp.sqrt(psum_f(jnp.sum((z_new - st.z) ** 2)))
             b_r = jnp.abs(gval)
             return ShardedState(x_new, u_new, z_new, t_new, s_new, v_new,
                                 nu, om, st.k + 1, p_r, d_r, b_r)
@@ -483,7 +564,12 @@ class ShardedBiCADMM:
             return ShardedState(x_new, u_new, z_new, t_new, s_new, v_new,
                                 nu, om, st.k + 1, p_r, d_r, b_r)
 
-        outer_step = outer_step_exact if exact else outer_step_sharded
+        if mode == "exact":
+            outer_step = outer_step_exact
+        elif mode == "ladder_exact":
+            outer_step = outer_step_ladder
+        else:
+            outer_step = outer_step_sharded
 
         big = jnp.asarray(jnp.inf, A_blk.dtype)
 

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from .losses import Loss
+from ..kernels.ops import gram_auto
 
 Array = jax.Array
 
@@ -88,13 +89,15 @@ def subsolver_setup(A: Array, sigma: float, rho_c: float, rho_l: float,
                     M: int, gram_fn=None) -> SubsolverFactors:
     """Pad + block A, build per-block Gram matrices and factorize.
 
-    ``gram_fn(Aj) -> Aj^T Aj`` is injectable so the Pallas tiled Gram kernel
-    (repro.kernels.gram) can be swapped in on TPU.
+    ``gram_fn(Aj) -> Aj^T Aj`` is injectable; the default is
+    ``repro.kernels.ops.gram_auto`` — the MXU-tiled Pallas Gram kernel on
+    TPU, plain jnp elsewhere — so the dominant setup cost of the
+    feature-split engine runs through the kernels layer.
     """
     m, n = A.shape
     A_pad, nb = pad_features(A, M)
     A_blocks = jnp.moveaxis(A_pad.reshape(m, M, nb), 1, 0)  # (M, m, nb)
-    gram = gram_fn if gram_fn is not None else (lambda Aj: Aj.T @ Aj)
+    gram = gram_fn if gram_fn is not None else gram_auto
     G = jax.vmap(gram)(A_blocks)                             # (M, nb, nb)
     c = sigma + rho_c
     H = rho_l * G + c * jnp.eye(nb, dtype=A.dtype)[None]

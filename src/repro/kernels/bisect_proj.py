@@ -1,13 +1,20 @@
 """Pallas TPU kernel: batched-threshold ladder statistics in one data pass.
 
-The distributed l1-epigraph / S^kappa projections (repro.core.sharded) need,
-per bisection round, ``h(theta_b) = sum_i max(|z_i| - theta_b, 0)`` and
+The exact sort-free projections (repro.core.bilinear.ladder_refine) and the
+distributed l1-epigraph / S^kappa projections (repro.core.sharded) need,
+per bracketing round, ``h(theta_b) = sum_i max(|z_i| - theta_b, 0)`` and
 ``c(theta_b) = #{i : |z_i| > theta_b}`` for a whole ladder of B candidate
 thresholds. A GPU implementation sorts; our TPU-native scheme evaluates the
 full ladder in ONE pass over the feature shard (DESIGN §3.3): each grid step
 streams one VMEM block of |z| and accumulates a (2, B) f32 statistics tile
 that stays resident. Collective cost per round is then a single (2*B,)-psum
 instead of an O(n) gather.
+
+This kernel is the single audited implementation shared by every ladder
+consumer: ``bilinear.ladder_refine`` bracketing rounds (TPU path),
+``sharded.batched_epigraph_project`` / ``sharded.batched_support_skappa``,
+and the ``projection="ladder_exact"`` engine mode. The pure-jnp oracle it
+is tested against lives in ``repro.kernels.ref.ladder_stats_ref``.
 """
 from __future__ import annotations
 
@@ -20,6 +27,9 @@ from jax.experimental import pallas as pl
 Array = jax.Array
 
 _LANE = 128
+# Cap on the per-grid-step broadcast (block, LANE, B) f32 so the working set
+# stays comfortably inside VMEM even at B = 128 rungs (~4 MB budget).
+_VMEM_ELEMS = 1 << 20
 
 
 def _ladder_kernel(az_ref, th_ref, o_ref):
@@ -39,26 +49,35 @@ def ladder_stats(az: Array, thetas: Array, *, block: int = 2048,
     """az (n,) nonnegative; thetas (B,). Returns (2, B) f32:
     row 0 = sum_i max(az_i - theta_b, 0); row 1 = count(az_i > theta_b).
 
-    Padding uses -inf so padded entries contribute zero to both rows.
+    Data padding uses -inf and ladder padding uses +inf, so padded entries
+    and padded rungs contribute zero to both rows. The theta ladder is
+    padded to a lane multiple and the row block is clamped so the per-step
+    (block, LANE, B) broadcast fits the VMEM budget at any B.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     n = az.shape[0]
     B = thetas.shape[0]
+    Bp = -(-B // _LANE) * _LANE
     cols = _LANE
+    if 8 * cols * Bp > _VMEM_ELEMS:
+        raise ValueError(
+            f"ladder of B={B} rungs cannot fit the VMEM budget even at the "
+            f"minimum row block; keep B <= {_VMEM_ELEMS // (8 * cols)}")
     rows = -(-n // cols)
     block = min(block, -(-rows // 8) * 8)
+    block = max(8, min(block, _VMEM_ELEMS // (cols * Bp) // 8 * 8))
     rows_p = -(-rows // block) * block
     azp = jnp.full((rows_p * cols,), -jnp.inf, az.dtype).at[:n].set(az)
     azp = azp.reshape(rows_p, cols)
-    th2 = thetas.reshape(1, B)
+    thp = jnp.full((1, Bp), jnp.inf, thetas.dtype).at[0, :B].set(thetas)
     out = pl.pallas_call(
         _ladder_kernel,
         grid=(rows_p // block,),
         in_specs=[pl.BlockSpec((block, cols), lambda i: (i, 0)),
-                  pl.BlockSpec((1, B), lambda i: (0, 0))],
-        out_specs=pl.BlockSpec((2, B), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((2, B), jnp.float32),
+                  pl.BlockSpec((1, Bp), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((2, Bp), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((2, Bp), jnp.float32),
         interpret=interpret,
-    )(azp, th2)
-    return out
+    )(azp, thp)
+    return out[:, :B]

@@ -17,8 +17,22 @@ from .gram import gram, gram_xy
 
 Array = jax.Array
 
-__all__ = ["gram", "gram_xy", "ladder_stats", "flash_attention",
+__all__ = ["gram", "gram_auto", "gram_xy", "ladder_stats", "flash_attention",
            "flash_attention_flat"]
+
+
+def gram_auto(a: Array) -> Array:
+    """A^T A through the MXU-tiled Pallas kernel on TPU, plain jnp elsewhere.
+
+    This is the Gram entry point the solver setup paths use
+    (``repro.core.prox.ridge_setup`` / ``repro.core.subsolver``): on TPU the
+    tiled kernel keeps the f32 accumulator tile resident across the sample
+    dimension; off-TPU the XLA matmul is already optimal and interpret-mode
+    Pallas would only add overhead, so we fall back to ``a.T @ a``.
+    """
+    if jax.default_backend() == "tpu":
+        return gram(a).astype(a.dtype)
+    return a.T @ a
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",

@@ -123,5 +123,7 @@ def test_rho_b_controls_bilinear_residual():
                             rho_b=rho_b)
         res = BiCADMM("squared", cfg).fit_with_history(As, bs, iters=60)
         traces[rho_b] = np.array(res.history["b_r"])
-    # average bilinear residual over the run is smaller for larger rho_b
-    assert traces[1.0][10:40].mean() <= traces[0.125][10:40].mean()
+    # average bilinear residual over the transient is smaller for larger
+    # rho_b (both runs converge to the ~1e-6 rounding floor by iteration
+    # ~10, so later windows would only compare floating-point dust)
+    assert traces[1.0][1:15].mean() <= traces[0.125][1:15].mean()

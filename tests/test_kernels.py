@@ -48,14 +48,34 @@ def test_gram_property(m, n, seed):
 
 
 # ------------------------------------------------------- ladder stats ----
-@pytest.mark.parametrize("n,B", [(100, 8), (4096, 32), (5000, 64), (1, 4)])
+@pytest.mark.parametrize("n,B", [
+    (100, 8), (4096, 32), (5000, 64), (1, 4),
+    # non-aligned shapes: B = 1 (polish probes), B above one lane (pads to
+    # 256), n straddling row/block boundaries, full-ladder B = 128
+    (129, 1), (127, 128), (1025, 200), (8200, 128), (3, 3),
+])
 def test_ladder_stats(n, B):
     key = jax.random.PRNGKey(n + B)
     az = jnp.abs(jax.random.normal(key, (n,)))
     thetas = jnp.linspace(0.0, 2.0, B)
     got = ops.ladder_stats(az, thetas, interpret=True)
+    assert got.shape == (2, B)
     want = ref.ladder_stats_ref(az, thetas)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_ladder_stats_unsorted_thetas_and_small_block():
+    """Rung order must not matter, and the VMEM clamp (small block at big
+    B) must not change results."""
+    az = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (3000,)))
+    thetas = jax.random.uniform(jax.random.PRNGKey(1), (128,), maxval=2.0)
+    got = ops.ladder_stats(az, thetas, interpret=True)
+    got_small = ops.ladder_stats(az, thetas, block=8, interpret=True)
+    want = ref.ladder_stats_ref(az, thetas)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(got_small), np.asarray(want),
                                rtol=1e-5, atol=1e-3)
 
 

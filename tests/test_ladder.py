@@ -1,0 +1,224 @@
+"""Differential tests for the sort-free exact projection engine.
+
+Every ladder-refinement primitive is checked against its retired sort-based
+oracle on adversarial inputs: tie clusters, apex/inside cases, t0 <= 0,
+denormal-scale data, fractional kappa, and traced-kappa fallbacks. The
+engines' trajectory agreement (ladder vs sort end-to-end) is asserted too.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st  # per-test skip when absent
+
+from repro.core import BiCADMM, BiCADMMConfig, bilinear
+
+settings.register_profile("ci", deadline=None, max_examples=30)
+settings.load_profile("ci")
+
+
+def _rand(seed, n):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,))
+
+
+# ------------------------------------------------ epigraph: ladder == sort --
+@given(st.integers(0, 10_000), st.integers(2, 300),
+       st.floats(-20.0, 20.0))
+def test_ladder_projection_matches_sort(seed, n, t0):
+    z0 = _rand(seed % 200, n)
+    zl, tl = bilinear.project_l1_epigraph(z0, t0)
+    zs, ts = bilinear.project_l1_epigraph_sort(z0, t0)
+    np.testing.assert_allclose(np.array(zl), np.array(zs), atol=1e-5)
+    assert abs(float(tl) - float(ts)) < 1e-5
+
+
+@given(st.integers(0, 10_000), st.integers(1, 8), st.integers(2, 40),
+       st.floats(-3.0, 3.0))
+def test_ladder_projection_tie_clusters(seed, n_vals, reps, t0):
+    """Repeated magnitudes — the breakpoints collapse to tie clusters, the
+    adversarial case the closed-form polish must resolve in one extra step."""
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(size=n_vals)
+    z0 = jnp.asarray(np.repeat(vals, reps).astype(np.float32))
+    zl, tl = bilinear.project_l1_epigraph(z0, t0)
+    zs, ts = bilinear.project_l1_epigraph_sort(z0, t0)
+    np.testing.assert_allclose(np.array(zl), np.array(zs), atol=1e-5)
+    assert abs(float(tl) - float(ts)) < 1e-5
+
+
+@pytest.mark.parametrize("t0", [-10.0, -1.0, 0.0])
+def test_ladder_projection_apex_and_nonpositive_t0(t0):
+    z0 = jnp.asarray([0.1, -0.2, 0.05])
+    zl, tl = bilinear.project_l1_epigraph(z0, t0)
+    zs, ts = bilinear.project_l1_epigraph_sort(z0, t0)
+    np.testing.assert_allclose(np.array(zl), np.array(zs), atol=1e-7)
+    assert abs(float(tl) - float(ts)) < 1e-7
+    # feasibility always holds
+    assert float(jnp.sum(jnp.abs(zl))) <= float(tl) + 1e-6
+
+
+def test_ladder_projection_inside_is_identity():
+    z0 = jnp.asarray([0.5, -0.25])
+    z, t = bilinear.project_l1_epigraph(z0, 2.0)
+    np.testing.assert_allclose(np.array(z), np.array(z0), atol=1e-7)
+    assert abs(float(t) - 2.0) < 1e-7
+
+
+def test_ladder_projection_tiny_scale_exact():
+    """Small-but-normal scale (1e-30): ladder still matches the oracle."""
+    z0 = jnp.asarray((np.random.default_rng(0).normal(size=80) * 1e-30
+                      ).astype(np.float32))
+    zl, tl = bilinear.project_l1_epigraph(z0, jnp.float32(1e-31))
+    zs, ts = bilinear.project_l1_epigraph_sort(z0, jnp.float32(1e-31))
+    np.testing.assert_allclose(np.array(zl), np.array(zs), atol=1e-36)
+    assert abs(float(tl) - float(ts)) < 1e-36
+
+
+def test_ladder_projection_denormal_feasible():
+    """At f32-denormal scale the SORT oracle itself breaks (declares apex
+    and returns an infeasible point); the ladder result must at least stay
+    feasible, which is the strongest property available down there."""
+    z0 = jnp.asarray((np.random.default_rng(1).normal(size=50) * 1e-38
+                      ).astype(np.float32))
+    zl, tl = bilinear.project_l1_epigraph(z0, jnp.float32(-1e-40))
+    assert float(jnp.sum(jnp.abs(zl)) - tl) <= 1e-43
+
+
+def test_ladder_projection_with_bracketing_rounds():
+    """rounds > 0 exercises the Pallas ladder_stats kernel (interpret on
+    CPU) ahead of the polish; the result must still be exact."""
+    z0 = _rand(3, 513)
+    for t0 in [-2.0, 0.3, 7.0]:
+        zl, tl = bilinear.project_l1_epigraph(z0, t0, rounds=2)
+        zs, ts = bilinear.project_l1_epigraph_sort(z0, t0)
+        np.testing.assert_allclose(np.array(zl), np.array(zs), atol=1e-5)
+        assert abs(float(tl) - float(ts)) < 1e-5
+
+
+# ------------------------------------------------- S^kappa support / s-step --
+@given(st.integers(0, 10_000), st.integers(2, 200), st.floats(0.02, 1.3))
+def test_support_ladder_matches_sort(seed, n, kfrac):
+    z = _rand(seed % 200, n)
+    kappa = max(0.5, kfrac * n)  # fractional and > n cases included
+    u1, s1 = bilinear.support_skappa_ladder(z, kappa)
+    u2, s2 = bilinear.support_skappa_sort(z, kappa)
+    assert abs(float(u1) - float(u2)) < 1e-4 * max(1.0, abs(float(u2)))
+    np.testing.assert_allclose(np.array(s1), np.array(s2), atol=1e-5)
+
+
+def test_support_ladder_tie_cluster_straddles_budget():
+    """6 copies of |z| = 0.5 with kappa = 3: the sort oracle picks 3
+    arbitrary tie members, the ladder spreads the budget — same LP value,
+    both feasible."""
+    z = jnp.asarray(np.array([0.5] * 6 + [0.2] * 4, np.float32))
+    u1, s1 = bilinear.support_skappa_ladder(z, 3.0)
+    u2, _ = bilinear.support_skappa_sort(z, 3.0)
+    assert abs(float(u1) - float(u2)) < 1e-6
+    assert float(jnp.sum(jnp.abs(s1))) <= 3.0 + 1e-5
+    assert float(jnp.max(jnp.abs(s1))) <= 1.0 + 1e-6
+
+
+@given(st.integers(0, 10_000), st.integers(2, 100), st.floats(0.05, 1.2))
+def test_support_topk_matches_sort(seed, n, kfrac):
+    z = _rand(seed % 200, n)
+    kappa = float(max(1, int(kfrac * n)))
+    u1, s1 = bilinear.support_skappa(z, kappa)       # top_k path
+    u2, s2 = bilinear.support_skappa_sort(z, kappa)
+    assert abs(float(u1) - float(u2)) < 1e-5 * max(1.0, abs(float(u2)))
+    np.testing.assert_allclose(np.array(s1), np.array(s2), atol=1e-6)
+
+
+def test_support_topk_fractional_and_overbudget():
+    z = jnp.asarray([3.0, -2.0, 1.0, 0.5])
+    for kap in [2.5, 0.3, 6.0]:
+        u1, s1 = bilinear.support_skappa(z, kap)
+        u2, s2 = bilinear.support_skappa_sort(z, kap)
+        assert abs(float(u1) - float(u2)) < 1e-6
+        np.testing.assert_allclose(np.array(s1), np.array(s2), atol=1e-7)
+
+
+@given(st.integers(0, 10_000), st.integers(4, 120), st.floats(0.1, 0.9))
+def test_s_update_ladder_matches_sort(seed, n, kfrac):
+    z = _rand(seed % 200, n)
+    kappa = max(1.0, float(int(kfrac * n)))
+    s_l = bilinear.s_update(z, 1.7, 0.3, kappa)
+    s_s = bilinear.s_update(z, 1.7, 0.3, kappa, method="sort")
+    np.testing.assert_allclose(np.array(s_l), np.array(s_s), atol=1e-5)
+
+
+def test_s_update_traced_kappa_under_vmap():
+    """The path engine scans/vmaps traced kappas through the s-step."""
+    zs = _rand(7, 120).reshape(3, 40)
+    kaps = jnp.asarray([5.0, 9.0, 13.0])
+    out = jax.vmap(lambda zz, kk: bilinear.s_update(zz, 1.2, 0.1, kk))(
+        zs, kaps)
+    ref = jnp.stack([
+        bilinear.s_update(zs[i], 1.2, 0.1, float(kaps[i]), method="sort")
+        for i in range(3)])
+    np.testing.assert_allclose(np.array(out), np.array(ref), atol=1e-5)
+
+
+# --------------------------------------------------------- hard threshold --
+@given(st.integers(0, 10_000), st.integers(2, 100), st.floats(0.05, 1.2))
+def test_hard_threshold_topk_matches_sort(seed, n, kfrac):
+    z = _rand(seed % 200, n)
+    kappa = max(1, int(kfrac * n))
+    got = bilinear.hard_threshold(z, kappa)          # top_k path
+    want = bilinear.hard_threshold_sort(z, kappa)
+    np.testing.assert_array_equal(np.array(got), np.array(want))
+
+
+def test_hard_threshold_ties_and_fractional():
+    z = jnp.asarray([0.5, -0.5, 0.5, 0.2, -0.2])
+    for kap in [2, 2.5, 4, 7]:
+        got = bilinear.hard_threshold(z, kap)
+        want = bilinear.hard_threshold_sort(z, kap)
+        np.testing.assert_array_equal(np.array(got), np.array(want))
+    # traced kappa falls back to the rank trick (bit-identical by def.)
+    out = jax.vmap(bilinear.hard_threshold)(
+        jnp.stack([z, z]), jnp.asarray([2.0, 3.0]))
+    np.testing.assert_array_equal(
+        np.array(out[0]), np.array(bilinear.hard_threshold_sort(z, 2)))
+
+
+# ------------------------------------- batched (approximate) ladder modes --
+def test_batched_modes_track_exact_within_ladder_resolution():
+    """The approximate batched-ladder helpers now run through the same
+    audited Pallas kernel; they must still track the exact results to
+    ladder resolution (they have no closing polish)."""
+    from repro.core.sharded import (batched_epigraph_project,
+                                    batched_support_skappa)
+    z0 = _rand(11, 400)
+    for t0 in [-1.0, 0.5, 8.0]:
+        zb, tb = batched_epigraph_project(z0, jnp.asarray(t0), None)
+        zs, ts = bilinear.project_l1_epigraph_sort(z0, t0)
+        np.testing.assert_allclose(np.array(zb), np.array(zs), atol=1e-3)
+        assert abs(float(tb) - float(ts)) < 1e-3
+    u_b, s_b = batched_support_skappa(z0, 40.0, None)
+    u_s, _ = bilinear.support_skappa_sort(z0, 40.0)
+    assert abs(float(u_b) - float(u_s)) < 1e-2 * abs(float(u_s))
+    assert float(jnp.sum(jnp.abs(s_b))) <= 40.0 + 1e-3
+
+
+# ------------------------------------------------- end-to-end trajectories --
+def test_solver_trajectory_ladder_matches_sort():
+    """Full Bi-cADMM solves under projection="ladder" vs "sort" must agree:
+    same iteration count, matching iterates (the sort-free engine is exact,
+    not a relaxation)."""
+    from repro.data import SyntheticSpec, make_sparse_regression
+    spec = SyntheticSpec(2, 120, 60, sparsity_level=0.75, noise=1e-3)
+    As, bs, _ = make_sparse_regression(5, spec)
+    kw = dict(kappa=spec.kappa, gamma=10.0, rho_c=1.0, alpha=0.5,
+              max_iter=200, tol=1e-5, polish=False)
+    res_l = BiCADMM("squared", BiCADMMConfig(**kw)).fit(As, bs)
+    res_s = BiCADMM("squared", BiCADMMConfig(
+        **kw, projection="sort")).fit(As, bs)
+    assert int(res_l.iters) == int(res_s.iters)
+    np.testing.assert_allclose(np.array(res_l.z), np.array(res_s.z),
+                               atol=2e-4)
+    assert np.array_equal(np.array(res_l.support), np.array(res_s.support))
+
+
+def test_unknown_projection_mode_rejected():
+    with pytest.raises(ValueError):
+        BiCADMM("squared", BiCADMMConfig(kappa=3, projection="quantum"))
