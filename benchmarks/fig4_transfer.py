@@ -30,7 +30,7 @@ def host_to_device(nbytes: int, reps: int = 5) -> float:
 
 def modelled_ici(n: int, m_per_node: int, inner_iters: int = 15,
                  M: int = 16, link_gbps: float = 50e9,
-                 zt_iters: int = 120) -> dict:
+                 zt_iters: int = 120, cg_iters: int = 8) -> dict:
     """Per-outer-iteration wire bytes of the sharded engine.
 
     The *default* mode is ``projection="ladder_exact"`` — the exact
@@ -39,13 +39,21 @@ def modelled_ici(n: int, m_per_node: int, inner_iters: int = 15,
     also pay an inner-loop all-gather of the (m_i, K) prediction stack
     (2x per inner step, to mirror the oracle's reduction order), which the
     approximate modes replace with a psum — both inner terms are modeled.
-    The opt-in ``projection="exact"`` mode additionally all-gathers the
-    O(n) iterate (the paper's "Collect"); its gather term is reported for
-    contrast, as are the approximate batched-ladder scalars."""
+    The matrix-free ``x_update="cg"`` engine replaces the inner loop
+    entirely: per CG step one (m_i,) prediction psum + three scalar psums
+    (``cg_iters`` ~ a handful once warm-started), gather-free in every
+    projection mode. The opt-in ``projection="exact"`` mode additionally
+    all-gathers the O(n) iterate (the paper's "Collect"); its gather term
+    is reported for contrast, as are the approximate batched-ladder
+    scalars."""
     from repro.core.bilinear import LADDER_B
     inner_psum = 4 * m_per_node * inner_iters      # psum of (m_i,) f32
     # exact modes: 2 all-gathers of the (M, m_i) stack per inner step
     inner_gather = 4 * m_per_node * inner_iters * 2 * M
+    # x_update="cg": one (m_i,) psum + 3 scalar psums per CG step, plus
+    # the warm-start residual's (m_i,) psum + 3 scalars (r0.z0, the
+    # rhs.rhs tolerance reference, r0.r0)
+    x_cg = 4 * ((m_per_node + 3) * cg_iters + m_per_node + 3)
     consensus = 4 * (n // M)                       # psum of the z shard
     # ladder_exact: per FISTA step, 2 bracketing rounds (the TPU default of
     # bilinear.default_rounds) x (2*B,)-psum + ~4 polish (2,)-psums + 3
@@ -57,9 +65,11 @@ def modelled_ici(n: int, m_per_node: int, inner_iters: int = 15,
     exact_gathers = 4 * n * 4                      # z/w/s/x-diff all-gathers
     return {"inner_allreduce_batched": inner_psum,
             "inner_gather_exact_modes": inner_gather,
+            "x_update_cg_psums": x_cg,
             "consensus": consensus,
             "projection_ladder_exact": ladder,
             "projection_scalars_batched": batched_scalars, "total": total,
+            "cg_mode_total": x_cg + consensus + ladder,
             "exact_mode_extra_gathers": exact_gathers,
             "exact_mode_total": inner_gather + consensus + exact_gathers,
             "seconds_at_link": total / link_gbps}

@@ -2,6 +2,10 @@
 
     PYTHONPATH=src python -m benchmarks.run            # CPU-scaled sizes
     PYTHONPATH=src python -m benchmarks.run --full     # paper sizes
+    PYTHONPATH=src python -m benchmarks.run --smoke    # CI-sized subset
+
+``--smoke`` runs only the CI-sized benchmarks (projection + x-update
+engines) without touching the committed result baselines.
 
 Each line is ``name,us_per_call,derived``. The roofline section reads the
 dry-run records (benchmarks/results/dryrun_all.json) if present.
@@ -12,16 +16,25 @@ import argparse
 import time
 
 from . import (fig1_convergence, fig23_scaling, fig4_transfer, path_sweep,
-               proj_bench, roofline, table1_compare)
+               proj_bench, roofline, table1_compare, xupdate_bench)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (hours on CPU)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized subset (projection + x-update engines)")
     args = ap.parse_args()
 
     t0 = time.time()
+    if args.smoke:
+        print("# Projection engine — sort vs bisect vs ladder-exact (smoke)")
+        proj_bench.main(smoke=True)
+        print("# x-update engine — dense vs woodbury vs pcg (smoke)")
+        xupdate_bench.main(smoke=True)
+        print(f"# total {time.time() - t0:.1f}s")
+        return
     print("# Fig 1 — residual convergence vs rho_b")
     fig1_convergence.main(full=args.full)
     print("# Table 1 — Bi-cADMM vs exact (B&B) vs Lasso (FISTA)")
@@ -34,6 +47,8 @@ def main() -> None:
     path_sweep.main(full=args.full)
     print("# Projection engine — sort vs bisect vs ladder-exact")
     proj_bench.main(full=args.full)
+    print("# x-update engine — dense vs woodbury vs pcg")
+    xupdate_bench.main(full=args.full)
     print("# Roofline — from dry-run records")
     roofline.main()
     print(f"# total {time.time() - t0:.1f}s")

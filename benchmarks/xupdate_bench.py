@@ -1,0 +1,214 @@
+"""x-update engine benchmark — setup + per-iteration cost of the three
+exact squared-loss backends (dense Cholesky / Woodbury dual / matrix-free
+PCG) across feature dimensions, plus the end-to-end effect.
+
+The (7a) x-update used to be the last structural O(n^2) term in the
+solver: an n x n Gram plus an O(n^3) factorization per node. The Woodbury
+backend factors the m x m dual matrix instead (exact, m << n regime) and
+the PCG backend is factorization-free, so large-d fits become
+matvec-bound. This benchmark measures, per backend:
+
+* ``setup``   — factor build time (Gram + Cholesky / A A^T + Cholesky /
+  column norms)
+* ``solve``   — one prox solve (the per-ADMM-iteration cost)
+
+and two fit-level comparisons:
+
+* ``fit_compare`` — full ``BiCADMM.fit`` wall time, forced-dense vs auto,
+  at the largest shape where the dense factorization is still feasible;
+  iteration counts must agree (the backends are exact).
+* ``fit_large``   — the acceptance shape n = 1e5, m = 2e3: the auto
+  engine (Woodbury) measured end-to-end; the dense cost at that shape is
+  *projected* from the measured dense sweep via the t ~ a*m*n^2 + b*n^3
+  setup model (the 40 GB Gram + 3e14-flop Cholesky cannot run on a test
+  box — which is the point of this PR).
+
+Results land in ``benchmarks/results/xupdate_bench.json``:
+
+    PYTHONPATH=src python -m benchmarks.xupdate_bench            # CPU-scaled
+    PYTHONPATH=src python -m benchmarks.xupdate_bench --full     # bigger dims
+    PYTHONPATH=src python -m benchmarks.xupdate_bench --smoke    # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BiCADMM, BiCADMMConfig, prox
+from repro.data.synthetic import SyntheticSpec, make_sparse_regression
+
+from .common import emit, save_json, timeit
+
+SIGMA, RHO_C = 0.5, 1.0
+
+
+def _bench_prox(n: int, m: int, reps: int, dense_max: int) -> dict:
+    key = jax.random.PRNGKey(n % (2 ** 31 - 1))
+    k1, k2, k3 = jax.random.split(key, 3)
+    A = jax.random.normal(k1, (m, n), jnp.float32) / np.sqrt(m)
+    b = jax.random.normal(k2, (m,), jnp.float32)
+    q = jax.random.normal(k3, (n,), jnp.float32)
+
+    out = dict(n=n, m=m)
+    # setup functions take (A, b) as jit ARGUMENTS — closing over the
+    # concrete arrays would let XLA constant-fold the Gram at compile time
+    # and the measurement would time an empty program
+    backends = {
+        "woodbury": (lambda A, b: prox.woodbury_setup(A, b, SIGMA, RHO_C),
+                     lambda f, q: prox.woodbury_prox(f, q, RHO_C)),
+        "pcg": (lambda A, b: prox.cg_setup(A, b, iters=200, tol=1e-6),
+                lambda f, q: prox.pcg_prox(f, q, RHO_C, SIGMA, x0=q)),
+    }
+    if n <= dense_max:
+        backends["dense"] = (
+            lambda A, b: prox.ridge_setup(A, b, SIGMA, RHO_C),
+            lambda f, q: prox.ridge_prox_factorized(f, q, RHO_C))
+    else:
+        out["dense"] = None
+
+    sol = {}
+    for name, (setup, solve) in backends.items():
+        setup_j = jax.jit(setup)
+        f = jax.block_until_ready(setup_j(A, b))
+        solve_j = jax.jit(solve)
+        out[name] = dict(setup=timeit(setup_j, A, b, reps=reps),
+                         solve=timeit(solve_j, f, q, reps=reps))
+        sol[name] = solve_j(f, q)
+        emit(f"xupdate.n{n}.{name}.setup", out[name]["setup"], "")
+        emit(f"xupdate.n{n}.{name}.solve", out[name]["solve"], "")
+    ref = sol.get("dense", sol["woodbury"])
+    for name, x in sol.items():
+        err = float(jnp.max(jnp.abs(x - ref)))
+        assert err < 1e-3, f"{name} diverged from the exact solve: {err}"
+    return out
+
+
+def _timed_fit(As, bs, kappa, x_solver, max_iter=100, tol=1e-4):
+    """Wall-seconds of setup + solve with a WARM compile cache: the first
+    call pays tracing/XLA compilation (not what the engine policy trades
+    off), then the setup-factor cache is cleared so the timed second call
+    re-pays the factorization + the full while-loop."""
+    import time
+    cfg = BiCADMMConfig(kappa=kappa, gamma=10.0, rho_c=1.0, alpha=0.5,
+                        max_iter=max_iter, tol=tol, polish=False,
+                        x_solver=x_solver)
+    solver = BiCADMM("squared", cfg)
+    jax.block_until_ready(solver.fit(As, bs))
+    solver._setup_cache.clear()
+    t0 = time.perf_counter()
+    res = jax.block_until_ready(solver.fit(As, bs))
+    return time.perf_counter() - t0, res
+
+
+def _bench_fit_compare(n: int, m_per: int) -> dict:
+    """Forced dense vs auto at the largest dense-feasible shape; total
+    wall time includes the setup/factorization (cleared factor cache),
+    which is exactly what the engine policy trades off."""
+    spec = SyntheticSpec(n_nodes=2, m_per_node=m_per, n_features=n,
+                         sparsity_level=0.99, noise=1e-3)
+    As, bs, _ = make_sparse_regression(0, spec)
+    kappa = max(8, n // 100)
+    out = dict(n=n, m=2 * m_per)
+    # generous max_iter + looser tol so BOTH runs actually converge: an
+    # iteration-count comparison between two max_iter-saturated runs would
+    # be vacuously true and hide a diverging backend
+    max_iter = 400
+    for xs in ("dense", "auto"):
+        out[f"total_{xs}"], res = _timed_fit(As, bs, kappa, xs,
+                                             max_iter=max_iter, tol=3e-4)
+        out[f"iters_{xs}"] = int(res.iters)
+        emit(f"xupdate.fit{n}.{xs}", out[f"total_{xs}"],
+             f"iters={out[f'iters_{xs}']}")
+        assert out[f"iters_{xs}"] < max_iter, \
+            f"{xs} fit did not converge; the count comparison is meaningless"
+    out["auto_backend"] = BiCADMM(
+        "squared", BiCADMMConfig(kappa=kappa))._x_engine(m_per, n, False).kind
+    out["speedup_auto_vs_dense"] = out["total_dense"] / out["total_auto"]
+    assert abs(out["iters_dense"] - out["iters_auto"]) <= 1, \
+        "exact backends must agree with the dense oracle's iteration count"
+    return out
+
+
+def _bench_fit_large(n: int, m_per: int, sweep: list[dict]) -> dict:
+    """The acceptance shape, auto engine measured; dense projected from
+    the sweep's measured setup times via t ~ a*m*n^2 + b*n^3 (Gram +
+    Cholesky flops at the sweep's m, rescaled to this shape's m)."""
+    spec = SyntheticSpec(n_nodes=2, m_per_node=m_per, n_features=n,
+                         sparsity_level=0.999, noise=1e-3)
+    As, bs, _ = make_sparse_regression(1, spec)
+    kappa = max(16, n // 200)
+    total, res = _timed_fit(As, bs, kappa, "auto")
+    eng = BiCADMM("squared", BiCADMMConfig(kappa=kappa))._x_engine(
+        m_per, n, False)
+
+    # dense projection via an effective-throughput model: calibrate the
+    # achieved flops/sec on the LARGEST measured dense setup (Gram 2mn^2 +
+    # Cholesky n^3/3 flops) and evaluate the same flop count at the target
+    # shape — monotone by construction and conservative (the real 40 GB
+    # Gram would run further below peak, and the model omits the dense
+    # per-iteration O(n^2) solves entirely).
+    pts = [(p["n"], p["m"], p["dense"]["setup"]) for p in sweep
+           if p.get("dense")]
+    proj = None
+    if pts:
+        nn, mm, t_meas = max(pts, key=lambda p: p[0])
+        rate = (2 * mm * nn ** 2 + nn ** 3 / 3) / t_meas
+        proj = float(2 * (2 * m_per * n ** 2 + n ** 3 / 3) / rate)
+    out = dict(n=n, m=2 * m_per, backend=eng.kind, total_auto=total,
+               iters=int(res.iters),
+               dense_projected_setup=proj,
+               dense_model="(2 m n^2 + n^3/3) setup flops at the throughput "
+                           "of the largest measured dense setup, per node x "
+                           "2 nodes; excludes the dense per-iteration solves",
+               speedup_vs_dense_projected=(proj / total) if proj else None)
+    emit(f"xupdate.large{n}.auto", total,
+         f"backend={eng.kind};iters={out['iters']}")
+    if proj:
+        emit(f"xupdate.large{n}.dense_projected", proj,
+             f"speedup={out['speedup_vs_dense_projected']:.1f}x")
+    return out
+
+
+def main(full: bool = False, smoke: bool = False):
+    if smoke:
+        dims, m, reps, dense_max = [512, 2048], 128, 2, 2048
+        # n=3000 > DENSE_MAX_N so auto resolves to woodbury in the compare
+        cmp_shape, large_shape = (3000, 128), (20_000, 120)
+    elif full:
+        dims, m, reps, dense_max = [1024, 4096, 16384, 65536], 512, 3, 8192
+        cmp_shape, large_shape = (4096, 256), (100_000, 1000)
+    else:
+        dims, m, reps, dense_max = [1024, 4096, 16384], 512, 3, 4096
+        cmp_shape, large_shape = (4096, 256), (100_000, 1000)
+
+    out = {"backend": jax.default_backend(), "prox_sweep": []}
+    for n in dims:
+        out["prox_sweep"].append(_bench_prox(n, m, reps, dense_max))
+
+    out["fit_compare"] = _bench_fit_compare(*cmp_shape)
+    print(f"#   fit n={cmp_shape[0]}: auto({out['fit_compare']['auto_backend']}) "
+          f"{out['fit_compare']['speedup_auto_vs_dense']:.1f}x vs dense "
+          f"(iters {out['fit_compare']['iters_auto']} vs "
+          f"{out['fit_compare']['iters_dense']})")
+
+    out["fit_large"] = _bench_fit_large(*large_shape, out["prox_sweep"])
+    fl = out["fit_large"]
+    spd = fl["speedup_vs_dense_projected"]
+    print(f"#   fit n={fl['n']} m={fl['m']}: {fl['backend']} "
+          f"{fl['total_auto']:.1f}s"
+          + (f" (~{spd:.0f}x vs projected dense setup alone)" if spd else ""))
+
+    if not smoke:  # CI smoke must not clobber the committed baseline
+        save_json("xupdate_bench.json", out)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: small dims + tiny end-to-end")
+    a = ap.parse_args()
+    main(full=a.full, smoke=a.smoke)

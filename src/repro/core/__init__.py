@@ -16,6 +16,7 @@ from .bicadmm import (BiCADMM, BiCADMMConfig, BiCADMMResult, SolveParams,
 from .losses import get_loss
 from . import bilinear, losses, path, prox, subsolver
 from .path import PathResult, fit_grid, fit_path, kappa_ladder
+from .prox import NodeProxEngine
 from .sharded import ShardedBiCADMM, ShardedPathResult, ShardedResult
 
 

@@ -35,10 +35,16 @@ hyperparameter-path engine in ``repro.core.path``) possible:
 
 ``kappa`` / ``gamma`` / ``rho_c`` overrides may be traced scalars, so whole
 hyperparameter grids run inside one ``lax.scan`` / ``vmap`` (see
-``repro.core.path``). Dynamic ``gamma`` / ``rho_c`` on the squared loss
-switch the cached Cholesky to a spectral (eigh) factorization whose shift is
-applied at solve time; the feature-split inner ADMM bakes the penalties into
-its per-block factors and therefore only supports dynamic ``kappa``.
+``repro.core.path``). The squared-loss x-update runs through the
+:class:`repro.core.prox.NodeProxEngine` backends selected by
+``cfg.x_solver`` ("auto" picks dense Cholesky for small n, the m x m
+Woodbury dual factor when m << n, matrix-free warm-started PCG when both
+axes are large — no n x n array exists off the dense path). Dynamic
+``gamma`` / ``rho_c`` switch the factorization backends to their spectral
+(eigh) variants whose shift is applied at solve time; the feature-split
+inner ADMM bakes the penalties into its per-block factors and therefore
+only supports dynamic ``kappa``. Setup factors are cached on the data
+arrays so repeated ``run_from`` calls factorize once.
 
 The distributed (shard_map) engine with identical semantics lives in
 ``repro.core.sharded``; this module is the oracle it is tested against.
@@ -52,13 +58,12 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from . import bilinear
+from . import bilinear, prox
 from .losses import Loss, get_loss
-from .prox import (EighRidgeFactors, RidgeFactors, direct_prox,
-                   newton_cg_prox, ridge_prox_eigh, ridge_setup,
-                   ridge_setup_eigh)
+from .prox import (NodeProxEngine, newton_cg_prox, x_solve)
 from .subsolver import (SubsolverFactors, SubsolverState, node_prox_feature_split,
                         subsolver_init, subsolver_setup)
+from ..kernels.ops import matvec_auto, normal_matvec_auto, rmatvec_auto
 
 Array = jax.Array
 
@@ -81,6 +86,12 @@ class BiCADMMConfig:
     over_relax: float = 1.0         # 1.0 = paper-faithful; 1.5-1.8 typical
     force_feature_split: bool = False  # use Algorithm 2 even when M == 1
     projection: str = "ladder"      # "ladder" (sort-free exact) | "sort"
+    # squared-loss x-update backend (repro.core.prox.NodeProxEngine):
+    # "auto" picks dense Cholesky/eigh for small n, the m x m Woodbury dual
+    # factor when m << n, matrix-free Jacobi-PCG when both axes are large.
+    x_solver: str = "auto"          # "auto" | "dense" | "woodbury" | "pcg"
+    cg_iters: int = 200             # PCG max iterations per x-update
+    cg_tol: float = 1e-6            # PCG relative-residual tolerance
 
     @property
     def rho_b_eff(self) -> float:
@@ -128,9 +139,14 @@ class BiCADMMResult(NamedTuple):
 
 def reset_for_resume(st: BiCADMMState) -> BiCADMMState:
     """Zero the iteration counter and residuals so a (possibly converged)
-    state re-enters the while-loop; the iterates (x,u,z,t,s,v) are kept."""
-    big = jnp.asarray(jnp.inf, st.z.dtype)
-    return st._replace(k=jnp.asarray(0), p_r=big, d_r=big, b_r=big)
+    state re-enters the while-loop; the iterates (x,u,z,t,s,v) are kept.
+
+    Each residual gets its own buffer (no aliasing) so the state stays a
+    valid donation argument for the jitted while-loop drivers."""
+    dt = st.z.dtype
+    return st._replace(k=jnp.asarray(0), p_r=jnp.asarray(jnp.inf, dt),
+                       d_r=jnp.asarray(jnp.inf, dt),
+                       b_r=jnp.asarray(jnp.inf, dt))
 
 
 def _zt_update(z0: Array, t0: Array, w: Array, s: Array, v: Array,
@@ -186,12 +202,40 @@ class BiCADMM:
     """Reference Bi-cADMM solver. Data: stacked (N, m, n) features and
     (N, m) targets — the paper's equal sample decomposition."""
 
+    _SETUP_CACHE_MAX = 4
+
     def __init__(self, loss: Loss | str, cfg: BiCADMMConfig, *,
                  n_classes: int = 1):
         self.loss = get_loss(loss, n_classes) if isinstance(loss, str) else loss
         if cfg.projection not in ("ladder", "sort"):
             raise ValueError(f"unknown projection mode {cfg.projection!r}")
+        if cfg.x_solver not in prox.XSOLVERS:
+            raise ValueError(f"unknown x_solver {cfg.x_solver!r}; expected "
+                             f"one of {prox.XSOLVERS}")
         self.cfg = cfg
+        # setup factors (Gram / Cholesky / eigh / Woodbury) keyed on the
+        # data arrays, so repeated warm-started run_from calls — the
+        # resumable-state workflow — pay the factorization once. Entries
+        # hold strong references to the keyed arrays, which keeps their
+        # ids valid for the lifetime of the entry.
+        self._setup_cache: dict = {}
+        # per-INSTANCE jitted while-loop driver for run_from (built lazily):
+        # a module-level jit with the solver as a static argument would pin
+        # every instance — and its data-holding setup cache — in the global
+        # jit cache forever; a closure stored on self dies with the solver.
+        # The incoming state pytree is donated, so XLA reuses the iterate
+        # buffers (x, u, z, ...) in place instead of copying them — the
+        # peak live footprint of a resumed solve is one state, not two.
+        self._run_while_donated = jax.jit(
+            lambda factors, As, bs, params, st0:
+                self._run_while(factors, As, bs, params, st0),
+            donate_argnums=(4,))
+
+    def _x_engine(self, m: int, n: int, dynamic: bool) -> NodeProxEngine:
+        cfg = self.cfg
+        return NodeProxEngine.choose(m, n, x_solver=cfg.x_solver,
+                                     dynamic=dynamic, cg_iters=cfg.cg_iters,
+                                     cg_tol=cfg.cg_tol)
 
     # -- setup ---------------------------------------------------------------
     def _setup(self, As: Array, bs: Array, *, dynamic_penalties: bool = False):
@@ -199,6 +243,12 @@ class BiCADMM:
         N, m, n = As.shape
         sigma = 1.0 / (N * cfg.gamma)
         K = self.loss.n_classes
+        cacheable = not (isinstance(As, jax.core.Tracer)
+                         or isinstance(bs, jax.core.Tracer))
+        key = (id(As), id(bs), As.shape, bs.shape, str(As.dtype),
+               bool(dynamic_penalties))
+        if cacheable and key in self._setup_cache:
+            return self._setup_cache[key][-1]
         if cfg.use_feature_split:
             if dynamic_penalties:
                 raise ValueError(
@@ -210,14 +260,17 @@ class BiCADMM:
                 lambda A: subsolver_setup(A, sigma, cfg.rho_c, cfg.rho_l,
                                           cfg.n_feature_blocks))(As)
         elif self.loss.name == "squared":
-            if dynamic_penalties:
-                factors = jax.vmap(ridge_setup_eigh)(As, bs)
-            else:
-                factors = jax.vmap(
-                    lambda A, b: ridge_setup(A, b, sigma, cfg.rho_c))(As, bs)
+            eng = self._x_engine(m, n, dynamic_penalties)
+            factors = jax.vmap(
+                lambda A, b: eng.setup(A, b, sigma, cfg.rho_c))(As, bs)
         else:
             factors = None
-        return factors, N, n, K
+        out = (factors, N, n, K)
+        if cacheable:
+            if len(self._setup_cache) >= self._SETUP_CACHE_MAX:
+                self._setup_cache.pop(next(iter(self._setup_cache)))
+            self._setup_cache[key] = (As, bs, out)
+        return out
 
     def _make_params(self, N: int, *, kappa=None, gamma=None, rho_c=None
                      ) -> SolveParams:
@@ -229,8 +282,10 @@ class BiCADMM:
         return SolveParams(kappa=kappa, rho_c=rho_c, rho_b=rho_b,
                            sigma=1.0 / (N * gamma))
 
-    def _x_update(self, factors, params: SolveParams, As, bs, q, inner):
-        """q: (N, n*K) prox centers -> (N, n*K), new inner state."""
+    def _x_update(self, factors, params: SolveParams, As, bs, q, x_prev,
+                  inner):
+        """q: (N, n*K) prox centers, x_prev: (N, n*K) previous outer
+        iterates (PCG warm start) -> (N, n*K), new inner state."""
         cfg, loss = self.cfg, self.loss
         N, m, n = As.shape
         K = loss.n_classes
@@ -243,14 +298,9 @@ class BiCADMM:
             return jax.vmap(one)(factors, bs, q, inner)
 
         if loss.name == "squared":
-            if isinstance(factors, EighRidgeFactors):
-                def one(f, qi):
-                    return ridge_prox_eigh(f, qi, params.rho_c, params.sigma)
-            else:
-                def one(f, qi):
-                    return direct_prox(loss, None, None, qi, params.sigma,
-                                       params.rho_c, ridge=f)
-            return jax.vmap(one)(factors, q), inner
+            def one(f, qi, xi):
+                return x_solve(f, qi, params.rho_c, params.sigma, x0=xi)
+            return jax.vmap(one)(factors, q, x_prev), inner
 
         def one(A, b, qi):
             qx = qi.reshape(n, K) if K > 1 else qi
@@ -267,7 +317,8 @@ class BiCADMM:
         rho_c, rho_b = params.rho_c, params.rho_b
 
         q = st.z[None] - st.u                              # (N, d)
-        x_new, inner = self._x_update(factors, params, As, bs, q, st.inner)
+        x_new, inner = self._x_update(factors, params, As, bs, q, st.x,
+                                      st.inner)
 
         if cfg.over_relax != 1.0:                          # optional relaxation
             x_eff = cfg.over_relax * x_new + (1.0 - cfg.over_relax) * st.z[None]
@@ -304,12 +355,13 @@ class BiCADMM:
                 x_blocks=jnp.zeros((N, M, nb, K), dt),
                 nu=jnp.zeros((N, m, K), dt),
                 omega_bar=jnp.zeros((N, m, K), dt))
-        big = jnp.asarray(jnp.inf, dt)
         return BiCADMMState(
             x=jnp.zeros((N, d), dt), u=jnp.zeros((N, d), dt),
             z=jnp.zeros((d,), dt), t=jnp.asarray(0.0, dt),
             s=jnp.zeros((d,), dt), v=jnp.asarray(0.0, dt),
-            k=jnp.asarray(0), p_r=big, d_r=big, b_r=big, inner=inner)
+            k=jnp.asarray(0), p_r=jnp.asarray(jnp.inf, dt),
+            d_r=jnp.asarray(jnp.inf, dt), b_r=jnp.asarray(jnp.inf, dt),
+            inner=inner)
 
     # -- drivers ---------------------------------------------------------------
     def init_state(self, As: Array, bs: Array) -> BiCADMMState:
@@ -335,11 +387,18 @@ class BiCADMM:
 
         ``kappa`` / ``gamma`` / ``rho_c`` override the config per-solve and
         may be traced scalars — this is the primitive the path engine scans.
+
+        The setup factors are cached on the data arrays (repeated
+        warm-started calls factorize once) and the while-loop runs as one
+        jitted program whose state input is donated — ``state`` is
+        consumed: its buffers are reused for the result iterates, so keep
+        using the returned ``result.state``, not the object passed in.
         """
         dyn = gamma is not None or rho_c is not None
         factors, N, n, K = self._setup(As, bs, dynamic_penalties=dyn)
         params = self._make_params(N, kappa=kappa, gamma=gamma, rho_c=rho_c)
-        st = self._run_while(factors, As, bs, params, reset_for_resume(state))
+        st = self._run_while_donated(factors, As, bs, params,
+                                     reset_for_resume(state))
         return self._finalize(As, bs, st, params, history=None)
 
     def fit(self, As: Array, bs: Array) -> BiCADMMResult:
@@ -379,7 +438,12 @@ class BiCADMM:
         """Debias: re-fit restricted to the recovered support (masked ridge).
 
         Implemented as the full regularized problem plus a large quadratic
-        penalty off-support — keeps shapes static under jit.
+        penalty off-support — keeps shapes static under jit. For the
+        squared loss the dense masked-ridge solve is kept only while the
+        n x n Gram is small (the ``dense`` x-solver regime); beyond that
+        the solve is matrix-free Jacobi-PCG on (A^T A + diag(pen + sigma)),
+        warm-started at the thresholded iterate — no n x n array exists
+        anywhere in a large-d fit.
         """
         cfg, loss = self.cfg, self.loss
         N, m, n = As.shape
@@ -391,9 +455,16 @@ class BiCADMM:
         A_all = As.reshape(N * m, n)
         b_all = bs.reshape(-1)
         if loss.name == "squared":
-            G = A_all.T @ A_all
-            H = G + jnp.diag(pen + sigma)
-            x = jnp.linalg.solve(H, A_all.T @ b_all)
+            if n <= prox.DENSE_MAX_N and cfg.x_solver in ("auto", "dense"):
+                G = A_all.T @ A_all
+                H = G + jnp.diag(pen + sigma)
+                x = jnp.linalg.solve(H, A_all.T @ b_all)
+                return jnp.where(support, x, 0.0)
+            shift = pen + sigma
+            inv = 1.0 / (prox.col_sumsq(A_all) + shift)
+            x = prox.pcg(lambda p: normal_matvec_auto(A_all, p, shift),
+                         rmatvec_auto(A_all, b_all), z0, lambda r: inv * r,
+                         max(200, 2 * cfg.cg_iters), cfg.cg_tol)
             return jnp.where(support, x, 0.0)
 
         # Newton-CG on the masked problem (penalty keeps off-support ~ 0)
@@ -401,17 +472,17 @@ class BiCADMM:
 
         def obj_grad(xf):
             x = xf.reshape(xshape)
-            pred = A_all @ x
-            g = A_all.T @ loss.grad(pred, b_all)
+            pred = matvec_auto(A_all, x)
+            g = rmatvec_auto(A_all, loss.grad(pred, b_all))
             return (g + sigma * x).reshape(-1) + pen * xf
 
         def hvp(xf, p):
             x = xf.reshape(xshape)
             pv = p.reshape(xshape)
-            pred = A_all @ x
+            pred = matvec_auto(A_all, x)
             _, dlg = jax.jvp(lambda pr: loss.grad(pr, b_all), (pred,),
-                             (A_all @ pv,))
-            return (A_all.T @ dlg + sigma * pv).reshape(-1) + pen * p
+                             (matvec_auto(A_all, pv),))
+            return (rmatvec_auto(A_all, dlg) + sigma * pv).reshape(-1) + pen * p
 
         from .prox import _cg
         xf = z0

@@ -13,11 +13,13 @@ pick a model. This module fits an *entire* path in a single compiled call:
   until every lane converges).
 
 Both accept optional per-point ``gammas`` / ``rho_cs`` grids next to
-``kappas``. Penalty grids on the squared loss switch the x-update to the
-spectral ridge factorization (``repro.core.prox.ridge_setup_eigh``) so the
-shift ``sigma + rho_c`` can be a traced scalar; the feature-split sub-solver
-bakes penalties into its cached Cholesky factors and therefore supports
-kappa grids only (a ``ValueError`` explains this at call time).
+``kappas``. Penalty grids on the squared loss switch the x-update backend
+to its dynamic-shift variant (``repro.core.prox.NodeProxEngine`` with
+``dynamic=True``: spectral eigh factors of A^T A or A A^T, or shift-at-
+solve-time PCG) so ``sigma + rho_c`` can be a traced scalar; the
+feature-split sub-solver bakes penalties into its cached Cholesky factors
+and therefore supports kappa grids only (a ``ValueError`` explains this at
+call time).
 
 The sharded (shard_map) counterpart is ``ShardedBiCADMM.fit_path`` in
 ``repro.core.sharded`` — same scan-of-while-loops structure, run
@@ -112,13 +114,15 @@ def fit_path(solver: BiCADMM, As: Array, bs: Array, kappas, *,
     # plain fit (and as the sharded engine's path), keeping the trajectories
     # comparable at full precision.
     xs = (kaps, gams, rhos) if dyn else kaps
-    last, outs = _path_scan(solver, N, dyn, warm_start, As, bs, xs,
-                            factors, st0)
+    # Warm paths donate the initial state: its iterate buffers are reused
+    # in place as the scan carry instead of copied. The cold baseline
+    # re-reads st0 at every grid point, so its buffers cannot be donated.
+    scan = _path_scan_donated if warm_start else _path_scan
+    last, outs = scan(solver, N, dyn, warm_start, As, bs, xs, factors, st0)
     return _pack(outs, kaps, gams, rhos, last)
 
 
-@partial(jax.jit, static_argnums=(0, 1, 2, 3))
-def _path_scan(solver, N, dyn, warm_start, As, bs, xs, factors, st0):
+def _path_scan_impl(solver, N, dyn, warm_start, As, bs, xs, factors, st0):
     """Module-level jitted scan: the compile cache persists across calls
     (keyed on the solver instance + grid kind + shapes), so repeated sweeps
     pay tracing once instead of per call."""
@@ -132,6 +136,11 @@ def _path_scan(solver, N, dyn, warm_start, As, bs, xs, factors, st0):
         return (st if warm_start else st0), out
 
     return jax.lax.scan(solve_one, st0, xs)
+
+
+_path_scan = jax.jit(_path_scan_impl, static_argnums=(0, 1, 2, 3))
+_path_scan_donated = jax.jit(_path_scan_impl, static_argnums=(0, 1, 2, 3),
+                             donate_argnums=(8,))
 
 
 def fit_grid(solver: BiCADMM, As: Array, bs: Array, kappas, *,

@@ -3,15 +3,40 @@
 x_i^{k+1} = argmin_x  l(A x, b) + sigma/2 ||x||^2 + rho_c/2 ||x - q||^2
 with q = z^k - u_i^k, sigma = 1/(N gamma).
 
-Two engines:
+For the squared loss the update is the linear solve
+``(A^T A + c I) x = A^T b + rho_c q`` with c = sigma + rho_c constant
+across all ADMM iterations. :class:`NodeProxEngine` unifies three *exact*
+backends behind an ``x_solver="auto"`` policy, chosen per (m, n,
+dynamic-penalty) regime:
 
-* ``ridge_prox_factorized`` — closed form for the squared loss via a cached
-  Cholesky of (A^T A + (sigma + rho_c) I). The factorization is constant
-  across *all* ADMM iterations (beyond-paper optimization #3 in DESIGN.md —
-  the penalty coefficients never change), so it is computed once at setup.
-* ``newton_cg_prox`` — matrix-free guarded Newton-CG for any smooth loss
-  (logistic / smoothed hinge / softmax). Strong convexity (sigma + rho_c)
-  makes CG well conditioned; fixed iteration bounds keep it jit-able.
+================  =============  ==========  ===========  =================
+backend           setup          per-solve   memory       regime
+================  =============  ==========  ===========  =================
+``dense``         O(m n^2+n^3)   O(n^2)      O(n^2)       n <= DENSE_MAX_N
+``woodbury``      O(m^2 n+m^3)   O(m n)      O(m n+m^2)   m << n
+``pcg``           O(m n)         O(k m n)    O(m n)       both large
+================  =============  ==========  ===========  =================
+
+* ``dense``    — cached Cholesky of (A^T A + c I) (``ridge_setup``), or the
+  spectral eigh factorization when sigma/rho_c are traced scalars on a
+  hyperparameter path (``ridge_setup_eigh``).
+* ``woodbury`` — the dual/Woodbury identity
+  ``(A^T A + c I)^{-1} = (I - A^T (A A^T + c I)^{-1} A) / c``: factor the
+  m x m matrix once, every solve is two matvecs on A plus an m x m
+  triangular (or spectral, for traced c) solve. The n x n Gram never
+  exists — this is the regime the paper's large-d experiments live in.
+* ``pcg``      — matrix-free Jacobi-preconditioned conjugate gradients,
+  warm-started from the previous outer iterate carried in
+  ``BiCADMMState.x``; the Hessian-vector product A^T (A p) + c p runs
+  through the tiled Pallas normal-equation matvec kernel
+  (``repro.kernels.matvec``) on TPU and plain jnp elsewhere. Exact in the
+  sense that the tolerance is driven to the f32 floor; iteration counts of
+  the outer ADMM loop match the dense oracle (tests/test_xsolver.py).
+
+All backend solves dispatch through :func:`x_solve` on the factor pytree
+type, so the solver loops stay backend-agnostic. The non-squared losses use
+``newton_cg_prox`` — matrix-free guarded Newton-CG whose matvecs route
+through the same kernel layer.
 
 Conventions: A is (m, n); for multiclass, x is (n, C) and prox operates on
 the flattened vector.
@@ -25,9 +50,17 @@ import jax
 import jax.numpy as jnp
 
 from .losses import Loss
-from ..kernels.ops import gram_auto
+from ..kernels.ops import (gram_auto, matvec_auto, normal_matvec_auto,
+                           rmatvec_auto)
 
 Array = jax.Array
+
+# x_solver="auto" policy thresholds: largest n for the O(n^2)-memory dense
+# factorization, largest m for the O(m^2)-memory Woodbury dual factor.
+DENSE_MAX_N = 2048
+WOODBURY_MAX_M = 8192
+
+_static = dict(metadata=dict(static=True))
 
 
 @jax.tree_util.register_dataclass
@@ -36,7 +69,7 @@ class RidgeFactors:
     """Cached Cholesky factors for the squared-loss prox."""
     chol: Array        # (n, n) lower factor of A^T A + c I
     Atb: Array         # (n,) A^T b
-    c: float = dataclasses.field(metadata=dict(static=True))  # sigma + rho_c
+    c: float = dataclasses.field(**_static)  # sigma + rho_c
 
 
 def ridge_setup(A: Array, b: Array, sigma: float, rho_c: float) -> RidgeFactors:
@@ -79,6 +112,212 @@ def ridge_prox_eigh(f: EighRidgeFactors, q: Array, rho_c: Array | float,
     return f.V @ ((f.V.T @ rhs) / (f.evals + sigma + rho_c))
 
 
+# ------------------------------------------------------------ woodbury ----
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class WoodburyFactors:
+    """Dual (m x m) factors: exact squared-loss prox in O(m n) per solve
+    without ever forming the n x n Gram."""
+    A: Array           # (m, n) data, by reference
+    chol: Array        # (m, m) lower factor of A A^T + c I
+    Atb: Array         # (n,)
+    c: float = dataclasses.field(**_static)  # sigma + rho_c
+
+
+class WoodburyEighFactors(NamedTuple):
+    """Spectral dual factors of A A^T: any (traced) shift c at solve time —
+    the Woodbury counterpart of :class:`EighRidgeFactors` for penalty
+    sweeps on the path engine."""
+    A: Array
+    U: Array           # (m, m) orthonormal eigenvectors of A A^T
+    evals: Array       # (m,) eigenvalues (>= 0)
+    Atb: Array         # (n,)
+
+
+def woodbury_setup(A: Array, b: Array, sigma: float,
+                   rho_c: float) -> WoodburyFactors:
+    """Factor (A A^T + c I) once; the m x m outer Gram runs through the
+    tiled Pallas kernel on TPU (gram_auto on A^T)."""
+    m = A.shape[0]
+    c = sigma + rho_c
+    G = gram_auto(A.T) + c * jnp.eye(m, dtype=A.dtype)
+    return WoodburyFactors(A, jnp.linalg.cholesky(G), rmatvec_auto(A, b), c)
+
+
+def woodbury_setup_eigh(A: Array, b: Array) -> WoodburyEighFactors:
+    evals, U = jnp.linalg.eigh(gram_auto(A.T))
+    return WoodburyEighFactors(A, U, evals, rmatvec_auto(A, b))
+
+
+def woodbury_prox(f: WoodburyFactors, q: Array, rho_c: Array | float) -> Array:
+    """x = (rhs - A^T (A A^T + c I)^{-1} A rhs) / c with rhs = A^T b + rho_c q
+    — algebraically identical to the primal Cholesky solve."""
+    rhs = f.Atb + rho_c * q
+    t = matvec_auto(f.A, rhs)
+    y = jax.scipy.linalg.solve_triangular(f.chol, t, lower=True)
+    y = jax.scipy.linalg.solve_triangular(f.chol.T, y, lower=False)
+    return (rhs - rmatvec_auto(f.A, y)) / f.c
+
+
+def woodbury_prox_eigh(f: WoodburyEighFactors, q: Array,
+                       rho_c: Array | float, sigma: Array | float) -> Array:
+    c = sigma + rho_c
+    rhs = f.Atb + rho_c * q
+    t = matvec_auto(f.A, rhs)
+    y = f.U @ ((f.U.T @ t) / (f.evals + c))
+    return (rhs - rmatvec_auto(f.A, y)) / c
+
+
+# ----------------------------------------------------------------- pcg ----
+def col_sumsq(A: Array) -> Array:
+    """Per-column sum of squares — diag(A^T A), the Jacobi preconditioner.
+    Shared by the reference and sharded CG engines so single-device
+    trajectories stay bit-identical."""
+    return jnp.einsum("mn,mn->n", A, A)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CGFactors:
+    """Matrix-free backend state: no factorization, O(m n) setup."""
+    A: Array           # (m, n) data, by reference
+    Atb: Array         # (n,)
+    diag: Array        # (n,) diag(A^T A) — Jacobi preconditioner
+    iters: int = dataclasses.field(**_static)
+    tol: float = dataclasses.field(**_static)
+
+
+def cg_setup(A: Array, b: Array, iters: int = 200,
+             tol: float = 1e-6) -> CGFactors:
+    return CGFactors(A, rmatvec_auto(A, b), col_sumsq(A), iters, tol)
+
+
+def pcg(matvec: Callable[[Array], Array], rhs: Array, x0: Array,
+        precond: Callable[[Array], Array], iters: int, tol: float,
+        dot_fn: Callable[[Array, Array], Array] | None = None) -> Array:
+    """Preconditioned conjugate gradients, warm-started at ``x0``, with a
+    relative-residual stop and fixed max iterations (jit-safe while_loop).
+
+    ``dot_fn`` makes the two reductions per iteration injectable: the
+    reference engine passes the plain vdot default, ``repro.core.sharded``
+    passes a feat-axis psum'd vdot — the SAME loop then runs on local
+    feature shards (the matvec carries its own psum of the partial
+    predictions) and on a single device the two engines are bit-identical.
+    """
+    dot = dot_fn if dot_fn is not None else (lambda u, w: jnp.vdot(u, w))
+    r0 = rhs - matvec(x0)
+    z0 = precond(r0)
+    rz0 = dot(r0, z0)
+    tol2 = tol * tol * jnp.maximum(dot(rhs, rhs), 1e-30)
+
+    def body(state):
+        x, r, p, rz, _, k = state
+        Ap = matvec(p)
+        alpha = rz / jnp.maximum(dot(p, Ap), 1e-30)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        z = precond(r)
+        rz_new = dot(r, z)
+        p = z + (rz_new / jnp.maximum(rz, 1e-30)) * p
+        return x, r, p, rz_new, dot(r, r), k + 1
+
+    def cond(state):
+        *_, rr, k = state
+        return (rr > tol2) & (k < iters)
+
+    x, *_ = jax.lax.while_loop(cond, body,
+                               (x0, r0, z0, rz0, dot(r0, r0), jnp.asarray(0)))
+    return x
+
+
+def pcg_prox(f: CGFactors, q: Array, rho_c: Array | float,
+             sigma: Array | float, x0: Array | None = None) -> Array:
+    """Matrix-free exact prox: solve (A^T A + c I) x = A^T b + rho_c q by
+    Jacobi-PCG, warm-started from the previous outer iterate (``x0``) —
+    after the ADMM transient the prox center moves O(step) per iteration,
+    so warm CG needs a handful of matvecs where cold CG needs dozens."""
+    c = sigma + rho_c
+    rhs = f.Atb + rho_c * q
+    inv = 1.0 / (f.diag + c)
+    x0 = q if x0 is None else x0
+    return pcg(lambda p: normal_matvec_auto(f.A, p, c), rhs, x0,
+               lambda r: inv * r, f.iters, f.tol)
+
+
+# ------------------------------------------------- the unified engine ----
+XSOLVERS = ("auto", "dense", "woodbury", "pcg")
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeProxEngine:
+    """Squared-loss x-update engine: a hashable (jit-static) policy object
+    that builds per-node factors once and solves every ADMM iteration.
+
+    ``kind`` is the resolved backend; ``dynamic`` switches the
+    factorization backends to their spectral variants so sigma / rho_c may
+    be traced scalars (hyperparameter-path sweeps). The factor pytrees it
+    returns dispatch through :func:`x_solve`, so solver loops never branch
+    on the backend themselves.
+    """
+    kind: str                 # "dense" | "woodbury" | "pcg"
+    dynamic: bool = False     # traced sigma/rho_c at solve time
+    cg_iters: int = 200
+    cg_tol: float = 1e-6
+
+    @staticmethod
+    def choose(m: int, n: int, *, x_solver: str = "auto",
+               dynamic: bool = False, cg_iters: int = 200,
+               cg_tol: float = 1e-6) -> "NodeProxEngine":
+        """Resolve the ``x_solver`` policy for an (m, n) node block: dense
+        factorization while the n x n Gram is cheap, the m x m Woodbury
+        dual when samples are the short axis, matrix-free PCG when both
+        axes are large (the only O(m n)-memory option)."""
+        if x_solver not in XSOLVERS:
+            raise ValueError(f"unknown x_solver {x_solver!r}; "
+                             f"expected one of {XSOLVERS}")
+        kind = x_solver
+        if kind == "auto":
+            if n <= DENSE_MAX_N:
+                kind = "dense"
+            elif m <= WOODBURY_MAX_M and m < n:
+                kind = "woodbury"
+            else:
+                kind = "pcg"
+        return NodeProxEngine(kind, bool(dynamic), cg_iters, cg_tol)
+
+    def setup(self, A: Array, b: Array, sigma: float, rho_c: float):
+        """Build the per-node factor pytree (vmap over stacked nodes)."""
+        if self.kind == "dense":
+            return (ridge_setup_eigh(A, b) if self.dynamic
+                    else ridge_setup(A, b, sigma, rho_c))
+        if self.kind == "woodbury":
+            return (woodbury_setup_eigh(A, b) if self.dynamic
+                    else woodbury_setup(A, b, sigma, rho_c))
+        return cg_setup(A, b, self.cg_iters, self.cg_tol)
+
+    def solve(self, factors, q: Array, rho_c, sigma,
+              x0: Array | None = None) -> Array:
+        return x_solve(factors, q, rho_c, sigma, x0)
+
+
+def x_solve(factors, q: Array, rho_c: Array | float, sigma: Array | float,
+            x0: Array | None = None) -> Array:
+    """Backend dispatch on the factor pytree type (vmap-safe: the types
+    survive batching). ``x0`` is the warm start; only PCG consumes it."""
+    if isinstance(factors, RidgeFactors):
+        return ridge_prox_factorized(factors, q, rho_c)
+    if isinstance(factors, EighRidgeFactors):
+        return ridge_prox_eigh(factors, q, rho_c, sigma)
+    if isinstance(factors, WoodburyFactors):
+        return woodbury_prox(factors, q, rho_c)
+    if isinstance(factors, WoodburyEighFactors):
+        return woodbury_prox_eigh(factors, q, rho_c, sigma)
+    if isinstance(factors, CGFactors):
+        return pcg_prox(factors, q, rho_c, sigma, x0)
+    raise TypeError(f"unknown x-update factor pytree {type(factors)!r}")
+
+
+# --------------------------------------------------------- newton-cg ----
 def _cg(matvec: Callable[[Array], Array], rhs: Array, iters: int,
         tol: float = 1e-10) -> Array:
     """Plain conjugate gradients with fixed max iterations (jit-safe)."""
@@ -108,20 +347,21 @@ def newton_cg_prox(loss: Loss, A: Array, b: Array, q: Array, sigma: float,
                    cg_iters: int = 50) -> Array:
     """Matrix-free Newton-CG for argmin_x l(Ax,b) + sigma/2|x|^2 + rho_c/2|x-q|^2.
 
-    For multiclass losses x/q are (n, C); pred = A @ x is (m, C).
+    For multiclass losses x/q are (n, C); pred = A @ x is (m, C). Every
+    A-product routes through the kernels layer (tiled Pallas matvec on TPU,
+    the identical plain contraction elsewhere).
     """
-    multiclass = loss.n_classes > 1
-
     def obj_grad(x):
-        pred = A @ x
+        pred = matvec_auto(A, x)
         lg = loss.grad(pred, b)
-        return A.T @ lg + sigma * x + rho_c * (x - q)
+        return rmatvec_auto(A, lg) + sigma * x + rho_c * (x - q)
 
     def hvp(x, p):
-        pred = A @ x
+        pred = matvec_auto(A, x)
         # Gauss form via jvp of the loss gradient wrt pred
-        _, dlg = jax.jvp(lambda pr: loss.grad(pr, b), (pred,), (A @ p,))
-        return A.T @ dlg + (sigma + rho_c) * p
+        _, dlg = jax.jvp(lambda pr: loss.grad(pr, b), (pred,),
+                         (matvec_auto(A, p),))
+        return rmatvec_auto(A, dlg) + (sigma + rho_c) * p
 
     x0 = q
 

@@ -10,11 +10,19 @@ Mesh mapping (DESIGN.md §5):
 Device (i, j) holds the data block A_ij (m_i, n_j) *exactly* as in the
 paper's hierarchical layout. Per outer iteration the collectives are:
 
-  inner loop (Algorithm 2), x ``inner_iters``:
+  x-update, selected by ``x_update``:
+    "subsolver" (Algorithm 2), x ``inner_iters``:
       reduction over `feat` of the partial predictions A_ij x_ij — a psum
       in the approximate modes; the two exact modes instead all-gather the
       (m_i, K) prediction stack (2x per inner step, O(M*m_i) bytes) and
       take the replicated mean, mirroring the oracle's reduction order
+    "cg" (matrix-free PCG on the squared-loss normal equations), x n_cg
+    CG steps (warm-started: a handful after the ADMM transient):
+      ONE (m_i,) prediction psum (the A p reduction over `feat`) + three
+      scalar psums (p.Ap / r.z / r.r dots) per CG step, plus one (m_i,)
+      psum + three scalars for the warm-start residual — O(n_cg * m_i)
+      bytes, NO gather in any projection mode, and exact (tolerance at
+      the f32 floor), so trajectories still match the reference oracle
   consensus center:
       psum over `nodes` of (x_ij + u_ij)                      [(n_j, K)]
   (z,t) FISTA + s-update — selected by ``projection``.
@@ -92,13 +100,15 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from . import bilinear
+from . import bilinear, prox
 from .bicadmm import BiCADMMConfig, _zt_update
 from .losses import Loss, get_loss
 from ..kernels.bisect_proj import ladder_stats
-from ..kernels.ops import gram_auto
+from ..kernels.ops import block_matvec, block_rmatvec, gram_auto
 
 Array = jax.Array
+
+X_UPDATE_MODES = ("auto", "subsolver", "cg")
 
 
 class ShardedState(NamedTuple):
@@ -265,6 +275,15 @@ class ShardedBiCADMM:
     n_classes: int = 1
     # "ladder_exact" | "exact" | "batched" | "bisect" (see module docstring)
     projection: str = "ladder_exact"
+    # x-update engine: "subsolver" = the paper's feature-split inner ADMM
+    # (per-block nb x nb Cholesky), "cg" = distributed matrix-free
+    # Jacobi-PCG on the squared-loss normal equations (exact node prox, no
+    # factorization, one (m_loc, K) psum + three scalar psums per CG step
+    # — gather-free under projection="ladder_exact"). "auto" picks cg when
+    # the per-device block factor would exceed the dense regime.
+    x_update: str = "auto"
+
+    _FACTOR_CACHE_MAX = 4
 
     def __post_init__(self):
         if isinstance(self.loss, str):
@@ -279,10 +298,29 @@ class ShardedBiCADMM:
             raise ValueError(
                 'cfg.projection="sort" needs the full gathered vector; use '
                 'the gather-based engine mode (projection="exact")')
+        if self.x_update not in X_UPDATE_MODES:
+            raise ValueError(f"unknown x_update mode {self.x_update!r}; "
+                             f"expected one of {X_UPDATE_MODES}")
+        if self.x_update == "cg" and self.loss.name != "squared":
+            raise ValueError('x_update="cg" solves the squared-loss normal '
+                             "equations; other losses use the feature-split "
+                             'sub-solver (x_update="subsolver")')
         # jitted shard_map programs, keyed on the python values the closures
         # bake in — reused across calls so repeated fits/sweeps don't
         # re-trace (shapes/dtypes are handled by jit's own cache)
         self._jit_cache: dict = {}
+        # per-data setup factors (per-device Cholesky / CG preconditioner),
+        # keyed on the data array so repeated warm-started fits — the
+        # resumable-state workflow — pay the setup shard_map program once.
+        # Entries hold strong references to the keyed arrays.
+        self._factor_cache: dict = {}
+
+    def _x_mode(self, nb: int) -> str:
+        if self.x_update != "auto":
+            return self.x_update
+        if self.loss.name == "squared" and nb > prox.DENSE_MAX_N:
+            return "cg"
+        return "subsolver"
 
     # ---- specs -------------------------------------------------------------
     def _sizes(self, n: int):
@@ -300,6 +338,63 @@ class ShardedBiCADMM:
         if n_pad != n:
             A = jnp.pad(A, ((0, 0), (0, n_pad - n)))
         return A
+
+    # ---- cached setup --------------------------------------------------------
+    def _setup_factors(self, A_p: Array, n: int) -> Array:
+        """Per-device x-update factors as one jitted shard_map program:
+        the (nb, nb) block Cholesky for the sub-solver engine — global
+        layout (N, M, nb, nb) — or the (nb,) Jacobi preconditioner diagonal
+        for the CG engine, layout (N, M, nb)."""
+        cfg = self.cfg
+        N, M, nb = self._sizes(n)
+        mode = self._x_mode(nb)
+        nodes, feat = self.nodes_axis, self.feat_axis
+        sigma = 1.0 / (N * cfg.gamma)
+        c = sigma + cfg.rho_c
+
+        if mode == "cg":
+            def setup_run(A_blk):
+                # batched-mirrored col_sumsq (unit leading axis): the
+                # reference engine computes it under vmap over nodes, and
+                # batched/unbatched reductions differ at the ulp level
+                colsq = jnp.einsum("jmn,jmn->jn", A_blk[None], A_blk[None])[0]
+                return colsq[None, None]
+            out_specs = P(nodes, feat, None)
+        else:
+            def setup_run(A_blk):
+                G = gram_auto(A_blk)
+                H = cfg.rho_l * G + c * jnp.eye(A_blk.shape[1],
+                                                dtype=A_blk.dtype)
+                return jnp.linalg.cholesky(H)[None, None]
+            out_specs = P(nodes, feat, None, None)
+
+        key = ("setup", n, mode)
+        if key not in self._jit_cache:
+            self._jit_cache[key] = jax.jit(shard_map(
+                setup_run, mesh=self.mesh, in_specs=(P(nodes, feat),),
+                out_specs=out_specs, check_rep=False))
+        return self._jit_cache[key](A_p)
+
+    def _prepare(self, A_global: Array, n: int) -> tuple[Array, Array]:
+        """Pad + factor once per data array (id-keyed, strong-ref cache):
+        repeated warm-started ``fit``/``fit_path`` calls on the same data
+        skip the Gram + factorization entirely."""
+        N, M, nb = self._sizes(n)
+        n_pad = M * nb
+        if isinstance(A_global, jax.core.Tracer):
+            A_p = self._pad(A_global, n_pad)
+            return A_p, self._setup_factors(A_p, n)
+        key = (id(A_global), A_global.shape, str(A_global.dtype),
+               self._x_mode(nb))
+        hit = self._factor_cache.get(key)
+        if hit is not None:
+            return hit[1], hit[2]
+        A_p = self._pad(A_global, n_pad)
+        xfac = self._setup_factors(A_p, n)
+        if len(self._factor_cache) >= self._FACTOR_CACHE_MAX:
+            self._factor_cache.pop(next(iter(self._factor_cache)))
+        self._factor_cache[key] = (A_global, A_p, xfac)
+        return A_p, xfac
 
     # ---- resumable state -----------------------------------------------------
     def init_state(self, n: int, n_samples: int,
@@ -325,9 +420,11 @@ class ShardedBiCADMM:
             nu=P(nodes, None), omega=P(nodes, None))
 
     # ---- the shard-local program --------------------------------------------
-    def _local_funcs(self, N, M, A_blk, b_blk):
+    def _local_funcs(self, N, M, A_blk, b_blk, xfac):
         """Build the shard-local (init/step/cond) closures. Runs on each
-        device inside shard_map; A_blk is the (m_loc, nb) data block."""
+        device inside shard_map; A_blk is the (m_loc, nb) data block and
+        ``xfac`` its cached setup factors — the (nb, nb) block Cholesky
+        (sub-solver engine) or the (nb,) Jacobi diagonal (CG engine)."""
         cfg, loss = self.cfg, self.loss
         K = loss.n_classes
         nodes, feat = self.nodes_axis, self.feat_axis
@@ -337,12 +434,8 @@ class ShardedBiCADMM:
         sigma = 1.0 / (N * cfg.gamma)
         c = sigma + cfg.rho_c
         m_loc, nb = A_blk.shape
-
-        # --- setup: per-device cached Cholesky (constant across iterations);
-        # the Gram runs through the tiled Pallas kernel on TPU (gram_auto)
-        G = gram_auto(A_blk)
-        H = cfg.rho_l * G + c * jnp.eye(nb, dtype=A_blk.dtype)
-        chol = jnp.linalg.cholesky(H)
+        x_mode = self._x_mode(nb)
+        chol = xfac if x_mode == "subsolver" else None
 
         def chol_solve(rhs):
             y = jax.scipy.linalg.solve_triangular(chol, rhs, lower=True)
@@ -360,20 +453,24 @@ class ShardedBiCADMM:
             # bit-identical to the oracle.
             from .subsolver import _block_solve
             A1 = A_blk[None]                       # (1, m_loc, nb)
-            chol1 = chol[None]
 
             def mm_fwd(x):                         # (nb, K) -> (m_loc, K)
-                return jnp.einsum("jmn,jnk->jmk", A1, x[None])[0]
+                return block_matvec(A1, x[None])[0]
 
             def mm_t(ct):                          # (m_loc, K) -> (nb, K)
-                return jnp.einsum("jmn,jmk->jnk", A1, ct[None])[0]
+                return block_rmatvec(A1, ct[None])[0]
 
-            def x_solve(rhs):
-                return jax.vmap(_block_solve)(chol1, rhs[None])[0]
+            if chol is not None:
+                chol1 = chol[None]
+
+                def x_solve(rhs):
+                    return jax.vmap(_block_solve)(chol1, rhs[None])[0]
+            else:
+                x_solve = None
         else:
             mm_fwd = lambda x: A_blk @ x
             mm_t = lambda ct: A_blk.T @ ct
-            x_solve = chol_solve
+            x_solve = chol_solve if chol is not None else None
 
         def flat(x):  # (nb, K) -> (nbK,) for the projection helpers
             return x.reshape(-1)
@@ -425,6 +522,47 @@ class ShardedBiCADMM:
                                           length=cfg.inner_iters)
             return x, nu, om
 
+        if x_mode == "cg":
+            # Distributed matrix-free x-update: exact squared-loss node prox
+            # by Jacobi-PCG on (A_i^T A_i + c I) x = A_i^T b_i + rho_c q,
+            # run directly on the feature shards. Per CG iteration the wire
+            # carries ONE (m_loc,) prediction psum (the A p reduction over
+            # `feat`) and three scalar psums (the p.Ap / r.z / r.r dots) —
+            # no all-gather, so with projection="ladder_exact" the whole
+            # outer iteration is gather-free. The loop is the SAME
+            # repro.core.prox.pcg the reference engine runs (psum-wrapped
+            # reductions), warm-started from the previous outer iterate, so
+            # a (1,1) mesh matches BiCADMM(x_solver="pcg") with identical
+            # iteration counts. The reference x-update is vmapped over
+            # nodes, so its matvecs/dots lower as BATCHED contractions;
+            # mirror them with a unit leading axis (same trick as the exact
+            # projection modes) so the setup statistics (colsq, Atb) are
+            # bit-identical and the iterates agree to the last ulps of the
+            # CG recurrence itself.
+            A1 = A_blk[None]
+
+            def cg_fwd(p):                                 # (nb,) -> (m_loc,)
+                return jnp.einsum("jmn,jn->jm", A1, p[None])[0]
+
+            def cg_adj(w):                                 # (m_loc,) -> (nb,)
+                return jnp.einsum("jmn,jm->jn", A1, w[None])[0]
+
+            def cg_dot(u2, w2):
+                return psum_f(jnp.einsum("jn,jn->j", u2[None], w2[None])[0])
+
+            Atb = cg_adj(b_blk)                            # (nb,)
+            inv = 1.0 / (xfac + c)                         # Jacobi precond
+
+            def x_update(x0, nu0, om0, q):
+                xf = prox.pcg(
+                    lambda p: cg_adj(psum_f(cg_fwd(p))) + c * p,
+                    Atb + cfg.rho_c * q[:, 0], x0[:, 0],
+                    lambda r: inv * r, cfg.cg_iters, cfg.cg_tol,
+                    dot_fn=cg_dot)
+                return xf[:, None], nu0, om0
+        else:
+            x_update = inner_admm
+
         # every reduction of the exact sort-free engine, psum/pmax-wrapped:
         # bracketing rounds are one (2*B,)-psum, polish steps one (2,)-psum
         lops = bilinear.LadderOps(
@@ -475,7 +613,7 @@ class ShardedBiCADMM:
             full-vector projections as repro.core.bicadmm, replicated on
             every device. O(n) on the wire; opt-in (projection="exact")."""
             q = st.z - st.u
-            x_new, nu, om = inner_admm(st.x, st.nu, st.omega, q)
+            x_new, nu, om = x_update(st.x, st.nu, st.omega, q)
             if cfg.over_relax != 1.0:
                 x_eff = cfg.over_relax * x_new + (1.0 - cfg.over_relax) * st.z
             else:
@@ -508,7 +646,7 @@ class ShardedBiCADMM:
             here with psum-wrapped reductions, so the only wire traffic of
             the (z,t,s,v) block is O(B)-sized ladder/polish statistics."""
             q = st.z - st.u
-            x_new, nu, om = inner_admm(st.x, st.nu, st.omega, q)
+            x_new, nu, om = x_update(st.x, st.nu, st.omega, q)
             if cfg.over_relax != 1.0:
                 x_eff = cfg.over_relax * x_new + (1.0 - cfg.over_relax) * st.z
             else:
@@ -533,7 +671,7 @@ class ShardedBiCADMM:
 
         def outer_step_sharded(st: ShardedState, kappa) -> ShardedState:
             q = st.z - st.u
-            x_new, nu, om = inner_admm(st.x, st.nu, st.omega, q)
+            x_new, nu, om = x_update(st.x, st.nu, st.omega, q)
             if cfg.over_relax != 1.0:
                 x_eff = cfg.over_relax * x_new + (1.0 - cfg.over_relax) * st.z
             else:
@@ -606,23 +744,24 @@ class ShardedBiCADMM:
         n = A_global.shape[1]
         N, M, nb = self._sizes(n)
         n_pad = M * nb
-        A_p = self._pad(A_global, n_pad)
+        A_p, xfac = self._prepare(A_global, n)
         iters = iters if iters is not None else cfg.max_iter
         if state is None:
             state = self.init_state(n, A_global.shape[0], A_p.dtype)
 
         nodes = self.nodes_axis
         st_specs = self._state_specs()
+        fac_spec = P(nodes, self.feat_axis, *([None] * (xfac.ndim - 2)))
         in_specs = (P(nodes, self.feat_axis),
                     P(nodes) if b_global.ndim == 1 else P(nodes, None),
-                    st_specs)
+                    fac_spec, st_specs)
         # z / history / scalars are replicated over `nodes`; z is
         # feat-sharded on its leading dim.
         out_specs = ((P(self.feat_axis, None), P(), P(), P(), P(), P()),
                      P(None, None), st_specs)
 
-        def run(A_blk, b_blk, gs):
-            outer_step, _ = self._local_funcs(N, M, A_blk, b_blk)
+        def run(A_blk, b_blk, xf, gs):
+            outer_step, _ = self._local_funcs(N, M, A_blk, b_blk, xf[0, 0])
             st0 = self._unpack_state(gs, A_blk.dtype)
             kappa = jnp.asarray(float(cfg.kappa), A_blk.dtype)
             step = lambda st: outer_step(st, kappa)
@@ -644,11 +783,14 @@ class ShardedBiCADMM:
 
         key = ("fit", n, b_global.ndim, record_history, iters)
         if key not in self._jit_cache:
+            # the state pytree is donated: its iterate buffers are reused
+            # in place by the while-loop (fit consumes a passed-in state —
+            # keep using the returned result.state)
             self._jit_cache[key] = jax.jit(shard_map(
                 run, mesh=self.mesh, in_specs=in_specs,
-                out_specs=out_specs, check_rep=False))
+                out_specs=out_specs, check_rep=False), donate_argnums=(3,))
         (z, k, p_r, d_r, b_r, t), hist, gs = \
-            self._jit_cache[key](A_p, b_global, state)
+            self._jit_cache[key](A_p, b_global, xfac, state)
 
         zf = self._unpad_flat(z, n, n_pad)
         z_sparse = bilinear.hard_threshold(zf, cfg.kappa)
@@ -668,7 +810,7 @@ class ShardedBiCADMM:
         n = A_global.shape[1]
         N, M, nb = self._sizes(n)
         n_pad = M * nb
-        A_p = self._pad(A_global, n_pad)
+        A_p, xfac = self._prepare(A_global, n)
         kaps = jnp.asarray(kappas, A_p.dtype)
         if kaps.ndim != 1 or kaps.shape[0] == 0:
             raise ValueError("kappas must be a non-empty 1-D grid")
@@ -677,14 +819,16 @@ class ShardedBiCADMM:
 
         nodes = self.nodes_axis
         st_specs = self._state_specs()
+        fac_spec = P(nodes, self.feat_axis, *([None] * (xfac.ndim - 2)))
         in_specs = (P(nodes, self.feat_axis),
                     P(nodes) if b_global.ndim == 1 else P(nodes, None),
-                    P(), st_specs)
+                    fac_spec, P(), st_specs)
         out_specs = ((P(None, self.feat_axis, None), P(None), P(None),
                       P(None), P(None)), st_specs)
 
-        def run(A_blk, b_blk, ks, gs):
-            outer_step, reset = self._local_funcs(N, M, A_blk, b_blk)
+        def run(A_blk, b_blk, xf, ks, gs):
+            outer_step, reset = self._local_funcs(N, M, A_blk, b_blk,
+                                                  xf[0, 0])
             st_init = self._unpack_state(gs, A_blk.dtype)
 
             def cond(st):
@@ -703,11 +847,12 @@ class ShardedBiCADMM:
 
         key = ("path", n, b_global.ndim, warm_start)
         if key not in self._jit_cache:
+            # state donated: path iterate buffers are reused in place
             self._jit_cache[key] = jax.jit(shard_map(
                 run, mesh=self.mesh, in_specs=in_specs,
-                out_specs=out_specs, check_rep=False))
+                out_specs=out_specs, check_rep=False), donate_argnums=(4,))
         (z, k, p_r, d_r, b_r), gs = \
-            self._jit_cache[key](A_p, b_global, kaps, state)
+            self._jit_cache[key](A_p, b_global, xfac, kaps, state)
 
         zf = jax.vmap(lambda zz: self._unpad_flat(zz, n, n_pad))(z)
         x_sparse = jax.vmap(bilinear.hard_threshold)(zf, kaps)

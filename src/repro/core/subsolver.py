@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from .losses import Loss
-from ..kernels.ops import gram_auto
+from ..kernels.ops import block_matvec, block_rmatvec, gram_auto
 
 Array = jax.Array
 
@@ -135,15 +135,17 @@ def subsolver_run(loss: Loss, f: SubsolverFactors, b: Array, q: Array,
     def one_iter(st: SubsolverState, _):
         # ---- x_j-update (23): target for A_j x_j is
         #   c_j = A_j x_j^k + omega_bar^k - mean_j(A_j x_j^k) - nu^k
-        w = jnp.einsum("jmn,jnk->jmk", f.A_blocks, st.x_blocks)  # (M, m, K)
+        # The per-block products run through the kernels layer
+        # (block_matvec / block_rmatvec): tiled Pallas matvecs on TPU, the
+        # historical einsums verbatim elsewhere.
+        w = block_matvec(f.A_blocks, st.x_blocks)                # (M, m, K)
         w_bar = jnp.mean(w, axis=0)                              # AllReduce
         c_j = w + (st.omega_bar - w_bar - st.nu)[None]
-        rhs = (f.rho_l * jnp.einsum("jmn,jmk->jnk", f.A_blocks, c_j)
-               + f.rho_c * qb)
+        rhs = f.rho_l * block_rmatvec(f.A_blocks, c_j) + f.rho_c * qb
         x_new = jax.vmap(_block_solve)(f.chol, rhs)              # (M, nb, K)
 
         # ---- aggregate partial predictions (the paper's AllReduce of w)
-        w_new = jnp.einsum("jmn,jnk->jmk", f.A_blocks, x_new)
+        w_new = block_matvec(f.A_blocks, x_new)
         w_bar_new = jnp.mean(w_new, axis=0)                      # (m, K)
 
         # ---- omega-bar update (21): per-sample prox in pred = M*omega coords

@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
 gram            — tiled Gram matrix (Bi-cADMM per-block setup)
+matvec          — tiled A p / A^T w / normal-equation Hessian-vector
+                  products (the matrix-free x-update hot loop)
 bisect_proj     — batched-threshold ladder stats (distributed projections)
 flash_attention — causal flash attention for the LM zoo
 

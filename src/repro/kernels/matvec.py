@@ -1,0 +1,151 @@
+"""Pallas TPU kernels: tiled matrix-vector products for the matrix-free
+x-update engines (normal-equation Hessian-vector products).
+
+The (7a) prox of the squared loss reduces to solving
+``(A^T A + c I) x = A^T b + rho_c q``; the Woodbury and PCG backends of
+``repro.core.prox`` never materialize ``A^T A`` — their hot loop is the pair
+of matvecs
+
+    w = A p          (forward,  (m, n) @ (n, K))
+    g = A^T w        (adjoint,  (n, m) @ (m, K))
+
+plus an axpy. Both kernels tile A into MXU-aligned VMEM blocks and
+accumulate in f32 with the reduction axis innermost in the grid, so each
+output tile stays resident across the whole sweep of the contracted
+dimension (same structure as ``repro.kernels.gram``). The trailing
+operand dimension K (1 for scalar losses, n_classes for softmax) is padded
+to a single 128-wide lane tile.
+
+Row/column blocks are clamped so one (block_m x block_n) A tile plus the
+operand/accumulator tiles fit a conservative VMEM budget at any input
+shape; off-TPU callers should use the ``*_auto`` dispatchers in
+``repro.kernels.ops`` which fall back to the identical plain-jnp
+contractions (XLA's CPU/GPU matmuls need no hand tiling).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+# f32 elements of VMEM we allow one kernel instance to hold across the A
+# tile, the operand tile and the resident accumulator (~4 MB of the ~16 MB
+# per-core budget, leaving room for double buffering).
+_VMEM_ELEMS = 1 << 20
+_LANE = 128
+
+
+def _rup(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+def _pad2(a: Array, bm: int, bn: int) -> Array:
+    m, n = a.shape
+    return jnp.pad(a, ((0, _rup(m, bm) - m), (0, _rup(n, bn) - n)))
+
+
+def _clamp_blocks(block_m: int, block_n: int, m: int, n: int,
+                  kp: int) -> tuple[int, int]:
+    """Shrink the A-tile rows until A-tile + operand + accumulator tiles fit
+    the VMEM budget. The lane (last) dims stay 128-multiples."""
+    bm = min(block_m, _rup(m, 8))
+    bn = min(block_n, _rup(n, _LANE))
+    while bm > 8 and bm * bn + (bm + bn) * kp > _VMEM_ELEMS:
+        bm = max(8, bm // 2)
+    return bm, bn
+
+
+def _as_2d(x: Array) -> tuple[Array, bool]:
+    return (x[:, None], True) if x.ndim == 1 else (x, False)
+
+
+def _mv_kernel(a_ref, x_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+    o_ref[...] += jnp.dot(a_ref[...], x_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                             "interpret"))
+def matvec(a: Array, x: Array, *, block_m: int = 256, block_n: int = 512,
+           interpret: bool | None = None) -> Array:
+    """w = a @ x in f32. a (m, n); x (n,) or (n, K); returns (m,) / (m, K)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, n = a.shape
+    x2, was_1d = _as_2d(x)
+    k = x2.shape[1]
+    kp = _rup(k, _LANE)
+    bm, bn = _clamp_blocks(block_m, block_n, m, n, kp)
+    ap = _pad2(a, bm, bn)
+    xp = _pad2(x2, bn, kp)
+    mi, nk = ap.shape[0] // bm, ap.shape[1] // bn
+    out = pl.pallas_call(
+        _mv_kernel,
+        grid=(mi, nk),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+                  pl.BlockSpec((bn, kp), lambda i, j: (j, 0))],
+        out_specs=pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ap.shape[0], kp), jnp.float32),
+        interpret=interpret,
+    )(ap, xp)
+    out = out[:m, :k]
+    return out[:, 0] if was_1d else out
+
+
+def _rmv_kernel(a_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+    o_ref[...] += jnp.dot(a_ref[...].T, y_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                             "interpret"))
+def rmatvec(a: Array, y: Array, *, block_m: int = 256, block_n: int = 512,
+            interpret: bool | None = None) -> Array:
+    """g = a^T @ y in f32. a (m, n); y (m,) or (m, K); returns (n,) / (n, K)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, n = a.shape
+    y2, was_1d = _as_2d(y)
+    k = y2.shape[1]
+    kp = _rup(k, _LANE)
+    bm, bn = _clamp_blocks(block_m, block_n, m, n, kp)
+    ap = _pad2(a, bm, bn)
+    yp = _pad2(y2, bm, kp)
+    ni, mk = ap.shape[1] // bn, ap.shape[0] // bm
+    out = pl.pallas_call(
+        _rmv_kernel,
+        grid=(ni, mk),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (j, i)),
+                  pl.BlockSpec((bm, kp), lambda i, j: (j, 0))],
+        out_specs=pl.BlockSpec((bn, kp), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ap.shape[1], kp), jnp.float32),
+        interpret=interpret,
+    )(ap, yp)
+    out = out[:n, :k]
+    return out[:, 0] if was_1d else out
+
+
+def normal_matvec(a: Array, p: Array, shift: Array | float, *,
+                  block_m: int = 256, block_n: int = 512,
+                  interpret: bool | None = None) -> Array:
+    """Normal-equation Hessian-vector product (A^T A + diag(shift)) p.
+
+    Two tiled passes over A (never A^T A): w = A p then A^T w, f32
+    accumulation throughout, plus the shifted axpy. ``shift`` may be a
+    scalar (the prox penalty c = sigma + rho_c, possibly traced) or a
+    vector (the polish engine's masked ridge diagonal).
+    """
+    w = matvec(a, p, block_m=block_m, block_n=block_n, interpret=interpret)
+    g = rmatvec(a, w.astype(a.dtype), block_m=block_m, block_n=block_n,
+                interpret=interpret)
+    return (g + shift * p.astype(jnp.float32)).astype(a.dtype)

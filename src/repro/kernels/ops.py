@@ -14,11 +14,14 @@ import jax.numpy as jnp
 from .bisect_proj import ladder_stats
 from .flash_attention import flash_attention_flat
 from .gram import gram, gram_xy
+from .matvec import matvec, normal_matvec, rmatvec
 
 Array = jax.Array
 
 __all__ = ["gram", "gram_auto", "gram_xy", "ladder_stats", "flash_attention",
-           "flash_attention_flat"]
+           "flash_attention_flat", "matvec", "matvec_auto", "rmatvec",
+           "rmatvec_auto", "normal_matvec", "normal_matvec_auto",
+           "block_matvec", "block_rmatvec"]
 
 
 def gram_auto(a: Array) -> Array:
@@ -33,6 +36,56 @@ def gram_auto(a: Array) -> Array:
     if jax.default_backend() == "tpu":
         return gram(a).astype(a.dtype)
     return a.T @ a
+
+
+def matvec_auto(a: Array, x: Array) -> Array:
+    """a @ x through the tiled Pallas matvec kernel on TPU, plain jnp
+    elsewhere. This is the matvec entry point of the matrix-free x-update
+    engines (``repro.core.prox``): the Woodbury/PCG backends and
+    ``newton_cg_prox`` route every A-product through it, so on TPU the
+    whole (7a) hot path is VMEM-blocked with f32 accumulation while the
+    off-TPU fallback stays bit-identical to the historical ``a @ x``."""
+    if jax.default_backend() == "tpu":
+        return matvec(a, x).astype(a.dtype)
+    return a @ x
+
+
+def rmatvec_auto(a: Array, y: Array) -> Array:
+    """a^T @ y — the adjoint companion of :func:`matvec_auto`."""
+    if jax.default_backend() == "tpu":
+        return rmatvec(a, y).astype(a.dtype)
+    return a.T @ y
+
+
+def normal_matvec_auto(a: Array, p: Array, shift: Array | float) -> Array:
+    """(A^T A + diag(shift)) p without materializing A^T A: the PCG
+    backend's Hessian-vector product. ``shift`` may be a traced scalar
+    (dynamic penalties on a hyperparameter path) or a vector (the polish
+    engine's masked ridge)."""
+    if jax.default_backend() == "tpu":
+        return normal_matvec(a, p, shift)
+    return a.T @ (a @ p) + shift * p
+
+
+def block_matvec(a_blocks: Array, x_blocks: Array) -> Array:
+    """Batched forward matvec (M, m, nb) @ (M, nb, K) -> (M, m, K).
+
+    The feature-split sub-solver's partial-prediction product. On TPU each
+    block runs the tiled Pallas matvec; off-TPU this IS the historical
+    einsum (same expression, so reference/sharded trajectories stay
+    bit-identical on CPU test meshes)."""
+    if jax.default_backend() == "tpu":
+        return jax.vmap(lambda a, x: matvec(a, x).astype(a.dtype))(
+            a_blocks, x_blocks)
+    return jnp.einsum("jmn,jnk->jmk", a_blocks, x_blocks)
+
+
+def block_rmatvec(a_blocks: Array, y_blocks: Array) -> Array:
+    """Batched adjoint matvec (M, m, nb)^T @ (M, m, K) -> (M, nb, K)."""
+    if jax.default_backend() == "tpu":
+        return jax.vmap(lambda a, y: rmatvec(a, y).astype(a.dtype))(
+            a_blocks, y_blocks)
+    return jnp.einsum("jmn,jmk->jnk", a_blocks, y_blocks)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",

@@ -28,6 +28,23 @@ def ladder_stats_ref(az: Array, thetas: Array) -> Array:
                       jnp.sum((diff > 0).astype(jnp.float32), axis=0)])
 
 
+def matvec_ref(a: Array, x: Array) -> Array:
+    """a @ x in f32."""
+    return a.astype(jnp.float32) @ x.astype(jnp.float32)
+
+
+def rmatvec_ref(a: Array, y: Array) -> Array:
+    """a^T @ y in f32."""
+    return a.astype(jnp.float32).T @ y.astype(jnp.float32)
+
+
+def normal_matvec_ref(a: Array, p: Array, shift) -> Array:
+    """(A^T A + diag(shift)) p in f32, cast back to a.dtype."""
+    af = a.astype(jnp.float32)
+    pf = p.astype(jnp.float32)
+    return (af.T @ (af @ pf) + shift * pf).astype(a.dtype)
+
+
 def flash_attention_flat_ref(q: Array, k: Array, v: Array, *,
                              causal: bool = True,
                              sm_scale: float | None = None) -> Array:

@@ -47,6 +47,58 @@ def test_gram_property(m, n, seed):
     np.testing.assert_allclose(got, got.T, rtol=1e-4, atol=1e-4)
 
 
+# ------------------------------------------------------------ matvec ----
+@pytest.mark.parametrize("m,n", [(64, 32), (100, 17), (513, 129), (8, 300)])
+@pytest.mark.parametrize("k", [None, 3])
+def test_matvec_shapes(m, n, k):
+    key = jax.random.PRNGKey(m * 1000 + n)
+    k1, k2, k3 = jax.random.split(key, 3)
+    a = jax.random.normal(k1, (m, n), jnp.float32)
+    x = jax.random.normal(k2, (n,) if k is None else (n, k), jnp.float32)
+    y = jax.random.normal(k3, (m,) if k is None else (m, k), jnp.float32)
+    got = ops.matvec(a, x, block_m=64, block_n=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.matvec_ref(a, x)),
+                               rtol=1e-5, atol=1e-4)
+    got_t = ops.rmatvec(a, y, block_m=64, block_n=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_t),
+                               np.asarray(ref.rmatvec_ref(a, y)),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_normal_matvec_scalar_and_vector_shift():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    a = jax.random.normal(k1, (70, 45), jnp.float32)
+    p = jax.random.normal(k2, (45,), jnp.float32)
+    got = ops.normal_matvec(a, p, 1.5, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.normal_matvec_ref(a, p, 1.5)),
+                               rtol=1e-4, atol=1e-3)
+    shift = jnp.abs(jax.random.normal(k1, (45,))) + 0.1
+    got_v = ops.normal_matvec(a, p, shift, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_v),
+                               np.asarray(ref.normal_matvec_ref(a, p, shift)),
+                               rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 160), n=st.integers(1, 130),
+       seed=st.integers(0, 2**31 - 1))
+def test_matvec_property(m, n, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.normal(k1, (m, n))
+    x = jax.random.normal(k2, (n,))
+    got = np.asarray(ops.matvec(a, x, block_m=32, block_n=64, interpret=True))
+    np.testing.assert_allclose(got, np.asarray(ref.matvec_ref(a, x)),
+                               rtol=1e-4, atol=1e-4)
+    # adjoint identity: <A x, A x> == <x, A^T (A x)>
+    ax = jnp.asarray(got)
+    atax = np.asarray(ops.rmatvec(a, ax, block_m=32, block_n=64,
+                                  interpret=True))
+    np.testing.assert_allclose(float(jnp.vdot(ax, ax)),
+                               float(jnp.vdot(x, jnp.asarray(atax))),
+                               rtol=1e-3)
+
+
 # ------------------------------------------------------- ladder stats ----
 @pytest.mark.parametrize("n,B", [
     (100, 8), (4096, 32), (5000, 64), (1, 4),
