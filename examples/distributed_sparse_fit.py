@@ -1,5 +1,8 @@
-"""Distributed Bi-cADMM on a device mesh via shard_map — the production
-engine with the paper's hierarchical (nodes x feature-blocks) layout.
+"""Distributed sparse fitting through the estimator API with
+``engine="auto"``: hand the estimator a device mesh and it negotiates the
+shard_map engine (falling back to the single-process reference engine when
+the mesh has no real parallelism or the data doesn't tile it — see
+``repro.api.select_engine``).
 
 Run with emulated devices (the launcher does this for you on CPU):
 
@@ -14,11 +17,9 @@ if "--xla_force_host_platform_device_count" not in os.environ.get(
                                + " --xla_force_host_platform_device_count=8")
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bicadmm import BiCADMMConfig
-from repro.core.sharded import ShardedBiCADMM
+from repro.api import SolverOptions, SparseLinearRegression
 from repro.data.synthetic import SyntheticSpec, make_sparse_regression
 
 
@@ -30,19 +31,26 @@ def main():
     spec = SyntheticSpec(n_nodes=4, m_per_node=400, n_features=256,
                          sparsity_level=0.8)
     As, bs, x_true = make_sparse_regression(0, spec)
-    A_global = jnp.asarray(np.asarray(As).reshape(-1, spec.n_features))
-    b_global = jnp.asarray(np.asarray(bs).reshape(-1))
 
-    cfg = BiCADMMConfig(kappa=spec.kappa, gamma=1000.0, rho_c=1.0,
-                        max_iter=300, inner_iters=10)
-    solver = ShardedBiCADMM("squared", cfg, mesh=mesh)
-    res = solver.fit(A_global, b_global)
+    # engine="auto": the mesh is available and the (N, m, n) data tiles it,
+    # so the estimator negotiates the sharded engine; the SAME estimator
+    # code runs single-process if you drop the mesh.
+    opts = SolverOptions(engine="auto", mesh=mesh, max_iter=300,
+                         inner_iters=10)
+    model = SparseLinearRegression(spec.kappa, gamma=1000.0, options=opts)
+    model.fit(As, bs)
 
     sup_true = np.abs(np.asarray(x_true)) > 0
-    sup_hat = np.asarray(res.support)
+    sup_hat = np.asarray(model.support_)
     f1 = 2 * (sup_hat & sup_true).sum() / (sup_hat.sum() + sup_true.sum())
-    print(f"sharded Bi-cADMM: iters={int(res.iters)} support-F1={f1:.3f} "
+    res = model.result_
+    print(f"engine={model.engine_}  iters={model.n_iter_}  "
+          f"R^2={model.score(As, bs):.4f}  support-F1={f1:.3f}  "
           f"p_r={float(res.p_r):.2e} b_r={float(res.b_r):.2e}")
+    caps = model.capabilities_
+    print(f"capabilities: gather_free={caps.gather_free}  "
+          f"grid_strategy={caps.grid_strategy!r}  "
+          f"penalty_grids={caps.penalty_grids}")
     print("collectives per outer iteration: one (m_i,) psum over 'feat' "
           "per inner step + one z-shard psum over 'nodes' + scalar ladders")
 

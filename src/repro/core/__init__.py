@@ -1,102 +1,119 @@
-"""Core Bi-cADMM engines and the unified :class:`SolverEngine` front-end.
+"""Core Bi-cADMM engines.
 
 Two interchangeable engines solve the paper's SML problem:
 
 * ``BiCADMM``        — single-process reference oracle (``bicadmm.py``).
 * ``ShardedBiCADMM`` — ``shard_map`` production engine (``sharded.py``).
 
-``SolverEngine`` hides the engine split behind one API (``fit`` /
-``fit_path`` / ``fit_grid``), normalizing the data layout: it always takes
-the paper's node-stacked ``As (N, m, n)`` / ``bs (N, m)`` arrays and
-flattens them for the sharded engine. The hyperparameter-path machinery
-lives in ``repro.core.path``.
+Both return the engine-agnostic :class:`repro.core.results.FitResult` /
+:class:`~repro.core.results.SparsePath`. The user-facing toolbox — the
+declarative :class:`repro.api.SparseProblem` / :class:`repro.api.SolverOptions`
+split, capability-negotiated engine selection, and the four paper-model
+estimators — lives in :mod:`repro.api`; the hyperparameter-path machinery
+in ``repro.core.path``.
+
+``SolverEngine`` and ``fit_sparse_model`` are the pre-redesign entry
+points, kept as deprecation shims over :mod:`repro.api` (bit-identical
+results; they emit ``DeprecationWarning``).
 """
 from .bicadmm import (BiCADMM, BiCADMMConfig, BiCADMMResult, SolveParams,
                       fit_sparse_model, reset_for_resume)
 from .losses import get_loss
-from . import bilinear, losses, path, prox, subsolver
+from . import bilinear, losses, path, prox, results, subsolver
 from .path import PathResult, fit_grid, fit_path, kappa_ladder
 from .prox import NodeProxEngine
+from .results import FitResult, SparsePath
 from .sharded import ShardedBiCADMM, ShardedPathResult, ShardedResult
+
+__all__ = [
+    "BiCADMM",
+    "BiCADMMConfig",
+    "BiCADMMResult",
+    "FitResult",
+    "NodeProxEngine",
+    "PathResult",
+    "ShardedBiCADMM",
+    "ShardedPathResult",
+    "ShardedResult",
+    "SolveParams",
+    "SolverEngine",
+    "SparsePath",
+    "bilinear",
+    "fit_grid",
+    "fit_path",
+    "fit_sparse_model",
+    "get_loss",
+    "kappa_ladder",
+    "losses",
+    "path",
+    "prox",
+    "reset_for_resume",
+    "results",
+    "subsolver",
+]
 
 
 class SolverEngine:
-    """Unified front-end over the reference and sharded Bi-cADMM engines.
+    """DEPRECATED front-end over the two engines — use the
+    :mod:`repro.api` estimators (or ``repro.api.solve*``) instead.
 
-    >>> eng = SolverEngine("squared", cfg)                       # reference
-    >>> eng = SolverEngine("squared", cfg, engine="sharded",
-    ...                    mesh=jax.make_mesh((2, 4), ("nodes", "feat")))
-    >>> res  = eng.fit(As, bs)                    # one (kappa, gamma, rho)
-    >>> path = eng.fit_path(As, bs, kappas=[30, 22, 16, 11, 8])  # warm path
-    >>> grid = eng.fit_grid(As, bs, kappas=[...])  # independent cold fits
+    Kept as a thin shim over the declarative layer: the legacy
+    ``(loss, cfg, engine, mesh)`` arguments are lifted into a
+    :class:`repro.api.SparseProblem` / :class:`repro.api.SolverOptions`
+    pair and dispatched through the same engine adapters the estimators
+    use, so results are bit-identical to both the old behavior and the
+    new API (certified in ``tests/test_path.py`` / ``test_sharded.py``).
 
-    Data is always the paper's stacked layout: ``As (N, m, n)``,
-    ``bs (N, m)``. The sharded engine is fed the flattened
-    ``(N*m, n)`` / ``(N*m,)`` views (its rows shard over the mesh's node
-    axis in the same node order).
+    Data is the paper's stacked layout: ``As (N, m, n)``, ``bs (N, m)``.
     """
 
     def __init__(self, loss, cfg: BiCADMMConfig, *, engine: str = "reference",
                  mesh=None, n_classes: int = 1, **sharded_kw):
-        self.engine = engine
-        self.cfg = cfg
+        import warnings
+
+        from .. import api
+        warnings.warn("SolverEngine is deprecated; use the repro.api "
+                      "estimators (SparseLinearRegression, ...) or "
+                      "repro.api.solve/solve_path/solve_grid",
+                      DeprecationWarning, stacklevel=2)
+        # preserve the legacy constructor contract verbatim
         if engine == "reference":
             if mesh is not None or sharded_kw:
                 raise ValueError("mesh / sharded options require "
                                  "engine='sharded'")
-            self.solver = BiCADMM(loss, cfg, n_classes=n_classes)
         elif engine == "sharded":
             if mesh is None:
                 raise ValueError("engine='sharded' requires a mesh")
-            self.solver = ShardedBiCADMM(loss, cfg, mesh,
-                                         n_classes=n_classes, **sharded_kw)
         else:
             raise ValueError(f"unknown engine {engine!r}")
-
-    @staticmethod
-    def _flat(As, bs):
-        N, m, n = As.shape
-        return As.reshape(N * m, n), bs.reshape(-1)
+        self.engine = engine
+        self.cfg = cfg
+        problem, options = api.from_config(loss, cfg, n_classes=n_classes,
+                                           engine=engine, mesh=mesh,
+                                           **sharded_kw)
+        self._adapter = api.make_adapter(problem, options, engine=engine)
+        self.solver = self._adapter.solver
 
     def fit(self, As, bs, *, kappa=None, gamma=None, rho_c=None, **kw):
-        if self.engine == "reference":
-            overrides = dict(kappa=kappa, gamma=gamma, rho_c=rho_c)
-            if kw:
-                raise TypeError(f"unknown fit option(s) {sorted(kw)} for the "
-                                "reference engine")
-            if all(v is None for v in overrides.values()):
-                return self.solver.fit(As, bs)
-            return self.solver.run_from(As, bs, self.solver.init_state(As, bs),
-                                        **overrides)
-        if not (kappa is None and gamma is None and rho_c is None):
-            raise ValueError("per-solve kappa/gamma/rho_c overrides are "
-                             "reference-engine only; the sharded engine bakes "
-                             "them into its config/factors — use fit_path for "
-                             "kappa sweeps, or a new config")
-        A, b = self._flat(As, bs)
-        return self.solver.fit(A, b, **kw)
+        if self.engine == "reference" and kw:
+            raise TypeError(f"unknown fit option(s) {sorted(kw)} for the "
+                            "reference engine")
+        return self._adapter.fit(As, bs, kappa=kappa, gamma=gamma,
+                                 rho_c=rho_c, **kw)
 
     def fit_path(self, As, bs, kappas, *, warm_start: bool = True,
                  gammas=None, rho_cs=None, **kw):
         """Warm-started hyperparameter path in one compiled scan."""
-        if self.engine == "reference":
-            return fit_path(self.solver, As, bs, kappas, gammas=gammas,
-                            rho_cs=rho_cs, warm_start=warm_start)
-        if gammas is not None or rho_cs is not None:
-            raise ValueError("the sharded engine caches penalty-dependent "
-                             "factors; it sweeps kappa only")
-        A, b = self._flat(As, bs)
-        return self.solver.fit_path(A, b, kappas, warm_start=warm_start, **kw)
+        if self.engine == "reference" and kw:
+            raise TypeError(f"unknown fit_path option(s) {sorted(kw)} for "
+                            "the reference engine")
+        return self._adapter.fit_path(As, bs, kappas, gammas=gammas,
+                                      rho_cs=rho_cs, warm_start=warm_start,
+                                      **kw)
 
     def fit_grid(self, As, bs, kappas, *, gammas=None, rho_cs=None):
-        """Independent cold fits of every grid point in one compiled call
-        (vmap-batched on the reference engine; a cold sequential scan —
-        identical numerics, shared compile — on the sharded engine)."""
-        if self.engine == "reference":
-            return fit_grid(self.solver, As, bs, kappas, gammas=gammas,
-                            rho_cs=rho_cs)
-        if gammas is not None or rho_cs is not None:
-            raise ValueError("the sharded engine caches penalty-dependent "
-                             "factors; it sweeps kappa only")
-        A, b = self._flat(As, bs)
-        return self.solver.fit_path(A, b, kappas, warm_start=False)
+        """Independent cold fits of every grid point; the returned path's
+        ``.strategy`` reports the actual execution (vmap-batched on the
+        reference engine, a sequential cold scan on the sharded one)."""
+        return self._adapter.fit_grid(As, bs, kappas, gammas=gammas,
+                                      rho_cs=rho_cs)

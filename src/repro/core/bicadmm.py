@@ -60,6 +60,7 @@ import jax.numpy as jnp
 
 from . import bilinear, prox
 from .losses import Loss, get_loss
+from .results import FitResult
 from .prox import (NodeProxEngine, newton_cg_prox, x_solve)
 from .subsolver import (SubsolverFactors, SubsolverState, node_prox_feature_split,
                         subsolver_init, subsolver_setup)
@@ -125,16 +126,9 @@ class BiCADMMState(NamedTuple):
     inner: Any        # SubsolverState pytree stacked over nodes (or None)
 
 
-class BiCADMMResult(NamedTuple):
-    x: Array          # final sparse solution (n*K,)
-    z: Array          # consensus iterate before thresholding
-    support: Array    # bool (n*K,)
-    iters: Array
-    p_r: Array
-    d_r: Array
-    b_r: Array
-    history: Any      # dict of (max_iter,) residual traces or None
-    state: Any = None  # final BiCADMMState — warm-start via run_from(state)
+# Both engines return the engine-agnostic result type; the old name is kept
+# as an alias for pre-redesign imports.
+BiCADMMResult = FitResult
 
 
 def reset_for_resume(st: BiCADMMState) -> BiCADMMState:
@@ -422,7 +416,7 @@ class BiCADMM:
         return self._finalize(As, bs, st, params, history=hist)
 
     def _finalize(self, As, bs, st: BiCADMMState, params: SolveParams,
-                  history) -> BiCADMMResult:
+                  history) -> FitResult:
         cfg = self.cfg
         z_sparse = bilinear.hard_threshold(st.z, params.kappa)
         support = jnp.abs(z_sparse) > 0
@@ -430,8 +424,9 @@ class BiCADMM:
             x_final = self._polish(As, bs, support, z_sparse, params)
         else:
             x_final = z_sparse
-        return BiCADMMResult(x_final, st.z, support, st.k,
-                             st.p_r, st.d_r, st.b_r, history, st)
+        coef = x_final.reshape(As.shape[2], self.loss.n_classes)
+        return FitResult(coef, st.z, support, st.k,
+                         st.p_r, st.d_r, st.b_r, history, st)
 
     def _polish(self, As, bs, support: Array, z0: Array,
                 params: SolveParams) -> Array:
@@ -495,7 +490,21 @@ class BiCADMM:
 
 
 def fit_sparse_model(loss: str, As: Array, bs: Array, kappa: int,
-                     n_classes: int = 1, **cfg_kw) -> BiCADMMResult:
-    """One-call convenience API (PsFiT equivalent)."""
-    cfg = BiCADMMConfig(kappa=kappa, **cfg_kw)
-    return BiCADMM(loss, cfg, n_classes=n_classes).fit(As, bs)
+                     n_classes: int = 1, **cfg_kw) -> FitResult:
+    """Deprecated one-call API — use the :mod:`repro.api` estimators.
+
+    Kept as a thin shim over the declarative layer: the kwargs are split
+    into a :class:`repro.api.SparseProblem` and
+    :class:`repro.api.SolverOptions` and solved through the same adapter
+    the estimators use, so the result is bit-identical to both the old
+    direct ``BiCADMM(...).fit(...)`` call and the new estimators.
+    """
+    import warnings
+
+    from .. import api
+    warnings.warn("fit_sparse_model is deprecated; use the repro.api "
+                  "estimators (SparseLinearRegression, ...)",
+                  DeprecationWarning, stacklevel=2)
+    problem, options = api.split_legacy_config(
+        loss, kappa=kappa, n_classes=n_classes, **cfg_kw)
+    return api.solve(problem, As, bs, options=options)

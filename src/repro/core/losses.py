@@ -20,6 +20,15 @@ Each loss implements the three oracles Bi-cADMM needs:
   (closed form where available, guarded Newton otherwise). Callers rescale
   arguments to put (21) in this canonical form.
 
+plus the two inference maps the estimator front-end (``repro.api``) builds
+``predict`` / ``decision_function`` from:
+
+``decision(pred)`` — raw scores ``A x`` to decision values (identity for
+  every paper model: residual fit, margins, or ``(m, C)`` logits).
+``predict(pred)``  — raw scores to predicted targets: the response itself
+  (squared), the {-1, +1} sign of the margin (logistic / SVM hinges), or
+  the argmax over the ``(m, C)`` logit view (softmax).
+
 All oracles are shape-polymorphic and vmap/jit/shard_map safe.
 """
 from __future__ import annotations
@@ -33,6 +42,20 @@ import jax.numpy as jnp
 Array = jax.Array
 
 
+def _identity(pred: Array) -> Array:
+    return pred
+
+
+def _sign_predict(pred: Array) -> Array:
+    """Margin scores -> {-1, +1} labels (ties broken toward +1)."""
+    return jnp.where(pred >= 0, 1.0, -1.0).astype(pred.dtype)
+
+
+def _argmax_predict(pred: Array) -> Array:
+    """(m, C) logits -> integer class labels."""
+    return jnp.argmax(pred, axis=-1)
+
+
 @dataclasses.dataclass(frozen=True)
 class Loss:
     name: str
@@ -42,6 +65,10 @@ class Loss:
     # prox_omega(q, b, c): argmin_w value(w, b) + c/2 ||w - q||^2, separable
     prox_omega: Callable[[Array, Array, Array | float], Array]
     n_classes: int = 1  # >1 => pred is (m, C)
+    # decision(pred): raw scores A x -> decision values (margins / logits)
+    decision: Callable[[Array], Array] = _identity
+    # predict(pred): raw scores A x -> predicted targets
+    predict: Callable[[Array], Array] = _identity
 
     def predict_dim(self, n_features: int) -> int:
         return n_features * self.n_classes
@@ -97,7 +124,8 @@ def _log_prox(q: Array, b: Array, c: Array | float, iters: int = 25) -> Array:
     return jax.lax.fori_loop(0, iters, body, q)
 
 
-logistic = Loss("logistic", _log_value, _log_grad, _log_prox)
+logistic = Loss("logistic", _log_value, _log_grad, _log_prox,
+                predict=_sign_predict)
 
 
 # ------------------------------------------------------------------- hinge --
@@ -122,7 +150,8 @@ def _hinge_prox(q: Array, b: Array, c: Array | float) -> Array:
     return b * out
 
 
-hinge = Loss("hinge", _hinge_value, _hinge_grad, _hinge_prox)
+hinge = Loss("hinge", _hinge_value, _hinge_grad, _hinge_prox,
+             predict=_sign_predict)
 
 
 # --------------------------------------------------------------- smoothed hinge
@@ -158,7 +187,8 @@ def _shinge_prox(q: Array, b: Array, c: Array | float, eps: float = 0.5) -> Arra
     return b * m
 
 
-smoothed_hinge = Loss("smoothed_hinge", _shinge_value, _shinge_grad, _shinge_prox)
+smoothed_hinge = Loss("smoothed_hinge", _shinge_value, _shinge_grad,
+                      _shinge_prox, predict=_sign_predict)
 
 
 # ----------------------------------------------------------------- softmax --
@@ -203,7 +233,8 @@ def make_softmax(n_classes: int) -> Loss:
 
         return jax.lax.fori_loop(0, iters, body, q)
 
-    return Loss(f"softmax{C}", value, grad, prox_omega, n_classes=C)
+    return Loss(f"softmax{C}", value, grad, prox_omega, n_classes=C,
+                predict=_argmax_predict)
 
 
 REGISTRY: dict[str, Loss] = {

@@ -23,36 +23,25 @@ call time).
 
 The sharded (shard_map) counterpart is ``ShardedBiCADMM.fit_path`` in
 ``repro.core.sharded`` — same scan-of-while-loops structure, run
-shard-local. ``SolverEngine`` in ``repro.core`` dispatches between them.
+shard-local. The estimator front-end (``repro.api``) dispatches between
+them; both return the engine-agnostic ``SparsePath``
+(``repro.core.results``), whose ``strategy`` field records how the sweep
+executed ("warm-scan" / "cold-scan" / "vmap").
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from .bicadmm import BiCADMM, BiCADMMState, SolveParams, reset_for_resume
+from .results import SparsePath
 
 Array = jax.Array
 
-
-class PathResult(NamedTuple):
-    """Stacked per-grid-point results; leading axis = grid index."""
-    x: Array            # (P, d) polished sparse solutions
-    z: Array            # (P, d) consensus iterates
-    support: Array      # (P, d) bool
-    iters: Array        # (P,) outer iterations spent per point
-    p_r: Array          # (P,)
-    d_r: Array          # (P,)
-    b_r: Array          # (P,)
-    cardinality: Array  # (P,) ||x_p||_0
-    train_loss: Array   # (P,) sum-loss of the polished solution on the data
-    kappas: Array       # (P,)
-    gammas: Array       # (P,)
-    rho_cs: Array       # (P,)
-    state: Any = None   # final BiCADMMState of the last point (fit_path only)
+# Engine-agnostic path type (repro.core.results); old name kept as an alias.
+PathResult = SparsePath
 
 
 def _grids(solver: BiCADMM, kappas, gammas, rho_cs, dt):
@@ -90,11 +79,15 @@ def _point_outputs(solver: BiCADMM, As, bs, st: BiCADMMState,
                 train_loss=solver.loss.value(pred, bs.reshape(-1)))
 
 
-def _pack(outs: dict, kaps, gams, rhos, state=None) -> PathResult:
-    return PathResult(outs["x"], outs["z"], outs["support"], outs["iters"],
+def _pack(solver: BiCADMM, outs: dict, kaps, gams, rhos, *, state=None,
+          strategy: str) -> SparsePath:
+    P = outs["x"].shape[0]
+    coef = outs["x"].reshape(P, -1, solver.loss.n_classes)
+    return SparsePath(coef, outs["z"], outs["support"], outs["iters"],
                       outs["p_r"], outs["d_r"], outs["b_r"],
-                      outs["cardinality"], outs["train_loss"],
-                      kaps, gams, rhos, state)
+                      outs["cardinality"], kaps, gams, rhos,
+                      train_loss=outs["train_loss"], state=state,
+                      strategy=strategy)
 
 
 def fit_path(solver: BiCADMM, As: Array, bs: Array, kappas, *,
@@ -119,7 +112,8 @@ def fit_path(solver: BiCADMM, As: Array, bs: Array, kappas, *,
     # re-reads st0 at every grid point, so its buffers cannot be donated.
     scan = _path_scan_donated if warm_start else _path_scan
     last, outs = scan(solver, N, dyn, warm_start, As, bs, xs, factors, st0)
-    return _pack(outs, kaps, gams, rhos, last)
+    return _pack(solver, outs, kaps, gams, rhos, state=last,
+                 strategy="warm-scan" if warm_start else "cold-scan")
 
 
 def _path_scan_impl(solver, N, dyn, warm_start, As, bs, xs, factors, st0):
@@ -154,7 +148,7 @@ def fit_grid(solver: BiCADMM, As: Array, bs: Array, kappas, *,
     st0 = solver._init_state(As, bs, n, K)
     outs = _grid_vmap(solver, N, dyn, As, bs,
                       (kaps, gams, rhos) if dyn else kaps, factors, st0)
-    return _pack(outs, kaps, gams, rhos)
+    return _pack(solver, outs, kaps, gams, rhos, strategy="vmap")
 
 
 @partial(jax.jit, static_argnums=(0, 1, 2))

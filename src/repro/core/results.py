@@ -1,0 +1,84 @@
+"""Engine-agnostic result types for the Bi-cADMM solver family.
+
+Before the estimator-API redesign every engine owned its own result tuple
+(``BiCADMMResult.x`` vs ``ShardedResult.x_sparse``, ``PathResult`` vs
+``ShardedPathResult``) and every differential test / benchmark special-cased
+the field names. Both engines now return the same two types:
+
+* :class:`FitResult`  — one solve. ``coef`` is the final sparse solution in
+  the ``(n, K)`` model layout (K = number of classes; K = 1 for the scalar
+  losses), ``z`` the pre-threshold consensus iterate on the flat ``(n*K,)``
+  layout the engines iterate in, ``support`` the flat boolean mask, and
+  ``state`` the resumable solver state for warm starts.
+* :class:`SparsePath` — a stacked hyperparameter sweep (leading axis = grid
+  index). ``strategy`` records how the sweep actually executed —
+  ``"warm-scan"`` (state carried point to point), ``"cold-scan"``
+  (sequential cold fits, shared compile), or ``"vmap"`` (batched
+  independent cold fits) — so grid callers can no longer be handed a
+  sequential scan silently labelled as a batched grid.
+
+The legacy flat accessors ``x`` / ``x_sparse`` are kept as read-only views
+so pre-redesign callers (and the bit-for-bit differential tests) keep
+working unchanged; new code should read ``coef``.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+
+Array = jax.Array
+
+
+class FitResult(NamedTuple):
+    """One solve, from either engine. ``coef`` is ``(n, K)``; the engines'
+    flat iterates (``z``, ``support``) stay on the ``(n*K,)`` layout."""
+    coef: Array       # (n, K) final sparse solution (polished where enabled)
+    z: Array          # (n*K,) consensus iterate before hard-thresholding
+    support: Array    # (n*K,) bool
+    iters: Array      # () outer iterations spent
+    p_r: Array        # primal residual (14)
+    d_r: Array        # dual residual
+    b_r: Array        # bi-linear constraint residual
+    history: Any = None   # residual traces (fit_with_history) or None
+    state: Any = None     # resumable solver state — warm-start the next solve
+
+    @property
+    def x(self) -> Array:
+        """Flat ``(n*K,)`` view of ``coef`` (legacy reference-engine name)."""
+        return self.coef.reshape(-1)
+
+    @property
+    def x_sparse(self) -> Array:
+        """Flat ``(n*K,)`` view of ``coef`` (legacy sharded-engine name)."""
+        return self.coef.reshape(-1)
+
+
+class SparsePath(NamedTuple):
+    """Stacked per-grid-point results; leading axis = grid index."""
+    coef: Array         # (P, n, K) sparse solutions
+    z: Array            # (P, n*K) consensus iterates
+    support: Array      # (P, n*K) bool
+    iters: Array        # (P,) outer iterations spent per point
+    p_r: Array          # (P,)
+    d_r: Array          # (P,)
+    b_r: Array          # (P,)
+    cardinality: Array  # (P,) ||coef_p||_0
+    kappas: Array       # (P,)
+    gammas: Array       # (P,)
+    rho_cs: Array       # (P,)
+    train_loss: Any = None  # (P,) sum-loss on the training data (reference
+    #                         engine; None on the sharded engine, which does
+    #                         not materialize global predictions)
+    state: Any = None       # final solver state of the last point (warm scans)
+    strategy: str | None = None  # "warm-scan" | "cold-scan" | "vmap"
+
+    @property
+    def x(self) -> Array:
+        """Flat ``(P, n*K)`` view of ``coef`` (legacy name)."""
+        return self.coef.reshape(self.coef.shape[0], -1)
+
+    @property
+    def x_sparse(self) -> Array:
+        """Flat ``(P, n*K)`` view of ``coef`` (legacy sharded name)."""
+        return self.coef.reshape(self.coef.shape[0], -1)

@@ -80,8 +80,8 @@ Warm starts are first-class, mirroring ``repro.core.bicadmm``:
 * ``init_state(n, n_samples, dtype)`` — a fresh :class:`ShardedGlobalState`
   (host-side pytree of *global* arrays; shard_map scatters/gathers it).
 * ``fit(A, b, state=...)`` — start the while-loop from a previous solve's
-  state; the returned :class:`ShardedResult` carries the final state in
-  ``.state`` for chaining.
+  state; the returned :class:`repro.core.results.FitResult` carries the
+  final state in ``.state`` for chaining.
 * ``fit_path(A, b, kappas, warm_start=True)`` — the entire kappa-path in
   ONE ``shard_map`` + ``lax.scan`` call: each budget's while-loop is
   warm-started shard-locally from the previous budget's (x, u, z, t, s, v),
@@ -103,6 +103,7 @@ from jax.experimental.shard_map import shard_map
 from . import bilinear, prox
 from .bicadmm import BiCADMMConfig, _zt_update
 from .losses import Loss, get_loss
+from .results import FitResult, SparsePath
 from ..kernels.bisect_proj import ladder_stats
 from ..kernels.ops import block_matvec, block_rmatvec, gram_auto
 
@@ -141,30 +142,10 @@ class ShardedGlobalState(NamedTuple):
     omega: Array
 
 
-class ShardedResult(NamedTuple):
-    z: Array          # (n*K,) consensus iterate (global, unpadded)
-    support: Array
-    x_sparse: Array   # hard-thresholded z
-    iters: Array
-    p_r: Array
-    d_r: Array
-    b_r: Array
-    history: Any
-    state: Any = None  # ShardedGlobalState — warm-start via fit(state=...)
-
-
-class ShardedPathResult(NamedTuple):
-    """Stacked kappa-path results; leading axis = path index."""
-    z: Array          # (P, n*K)
-    support: Array    # (P, n*K) bool
-    x_sparse: Array   # (P, n*K)
-    iters: Array      # (P,)
-    p_r: Array
-    d_r: Array
-    b_r: Array
-    cardinality: Array  # (P,)
-    kappas: Array     # (P,)
-    state: Any = None
+# Both engines return the engine-agnostic result types
+# (repro.core.results); the old names are kept as aliases.
+ShardedResult = FitResult
+ShardedPathResult = SparsePath
 
 
 # --------------------------------------------------------------------------
@@ -795,8 +776,8 @@ class ShardedBiCADMM:
         zf = self._unpad_flat(z, n, n_pad)
         z_sparse = bilinear.hard_threshold(zf, cfg.kappa)
         support = jnp.abs(z_sparse) > 0
-        return ShardedResult(zf, support, z_sparse, k, p_r, d_r,
-                             b_r, hist if record_history else None, gs)
+        return FitResult(z_sparse.reshape(n, K), zf, support, k, p_r, d_r,
+                         b_r, hist if record_history else None, gs)
 
     def fit_path(self, A_global: Array, b_global: Array, kappas, *,
                  state: ShardedGlobalState | None = None,
@@ -857,5 +838,9 @@ class ShardedBiCADMM:
         zf = jax.vmap(lambda zz: self._unpad_flat(zz, n, n_pad))(z)
         x_sparse = jax.vmap(bilinear.hard_threshold)(zf, kaps)
         support = jnp.abs(x_sparse) > 0
-        return ShardedPathResult(zf, support, x_sparse, k, p_r, d_r, b_r,
-                                 jnp.sum(support, axis=1), kaps, gs)
+        npts = kaps.shape[0]
+        fill = lambda v: jnp.full((npts,), v, kaps.dtype)
+        return SparsePath(x_sparse.reshape(npts, n, K), zf, support, k,
+                          p_r, d_r, b_r, jnp.sum(support, axis=1), kaps,
+                          fill(cfg.gamma), fill(cfg.rho_c), state=gs,
+                          strategy="warm-scan" if warm_start else "cold-scan")

@@ -1,0 +1,76 @@
+"""Public-API snapshot: the exported names of ``repro.api`` and
+``repro.core`` are part of the contract. Additions are deliberate (update
+the snapshot in the same PR); removals or accidental leaks of internals
+fail the build here instead of in downstream code."""
+import repro.api as api
+import repro.core as core
+
+API_SURFACE = {
+    "CapabilityError",
+    "Capabilities",
+    "FitResult",
+    "SolverOptions",
+    "SparseEstimator",
+    "SparseLinearRegression",
+    "SparseLogisticRegression",
+    "SparsePath",
+    "SparseProblem",
+    "SparseSVM",
+    "SparseSoftmaxRegression",
+    "engine_capabilities",
+    "select_engine",
+    "solve",
+    "solve_grid",
+    "solve_path",
+    "split_legacy_config",
+}
+
+CORE_SURFACE = {
+    "BiCADMM",
+    "BiCADMMConfig",
+    "BiCADMMResult",
+    "FitResult",
+    "NodeProxEngine",
+    "PathResult",
+    "ShardedBiCADMM",
+    "ShardedPathResult",
+    "ShardedResult",
+    "SolveParams",
+    "SolverEngine",
+    "SparsePath",
+    "bilinear",
+    "fit_grid",
+    "fit_path",
+    "fit_sparse_model",
+    "get_loss",
+    "kappa_ladder",
+    "losses",
+    "path",
+    "prox",
+    "reset_for_resume",
+    "results",
+    "subsolver",
+}
+
+
+def test_api_surface_snapshot():
+    assert set(api.__all__) == API_SURFACE
+    missing = [n for n in api.__all__ if not hasattr(api, n)]
+    assert not missing, f"__all__ names missing from repro.api: {missing}"
+
+
+def test_core_surface_snapshot():
+    assert set(core.__all__) == CORE_SURFACE
+    missing = [n for n in core.__all__ if not hasattr(core, n)]
+    assert not missing, f"__all__ names missing from repro.core: {missing}"
+
+
+def test_legacy_result_names_are_the_unified_types():
+    """The engine-specific result tuples collapsed into one type; the old
+    names must stay importable as aliases of it."""
+    assert core.BiCADMMResult is core.FitResult
+    assert core.ShardedResult is core.FitResult
+    assert core.PathResult is core.SparsePath
+    assert core.ShardedPathResult is core.SparsePath
+    assert api.FitResult is core.FitResult
+    assert api.SparsePath is core.SparsePath

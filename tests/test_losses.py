@@ -87,6 +87,66 @@ def test_softmax_grad_matches_autodiff():
                                atol=1e-5)
 
 
+# ------------------------------------------- predict / decision oracles --
+def test_predict_decision_roundtrip_squared():
+    """SLR: decision and predict are both the raw response."""
+    loss = get_loss("squared")
+    pred, _ = _data(0, 16, False)
+    np.testing.assert_array_equal(np.array(loss.decision(pred)),
+                                  np.array(pred))
+    np.testing.assert_array_equal(np.array(loss.predict(pred)),
+                                  np.array(pred))
+
+
+@pytest.mark.parametrize("name", ["logistic", "hinge", "smoothed_hinge"])
+def test_predict_decision_roundtrip_margin_losses(name):
+    """SLogR / SSVM: decision is the margin, predict its {-1,+1} sign, and
+    predicting from planted noiseless scores recovers the planted labels."""
+    loss = get_loss(name)
+    scores = jnp.asarray([-2.0, -0.1, 0.0, 0.1, 3.0])
+    np.testing.assert_array_equal(np.array(loss.decision(scores)),
+                                  np.array(scores))
+    pred = loss.predict(scores)
+    assert set(np.unique(np.array(pred))) <= {-1.0, 1.0}
+    np.testing.assert_array_equal(np.array(pred),
+                                  np.array([-1.0, -1.0, 1.0, 1.0, 1.0]))
+    # round-trip through the label-generating process of the paper's
+    # classification instances: labels = sign(scores) for noiseless data
+    from repro.data import SyntheticSpec, make_graded_classification
+    spec = SyntheticSpec(2, 60, 20, sparsity_level=0.7, noise=0.0)
+    As, bs, x_true = make_graded_classification(1, spec)
+    planted = jnp.einsum("nmf,f->nm", As, x_true).reshape(-1)
+    np.testing.assert_array_equal(
+        np.array(loss.predict(loss.decision(planted))),
+        np.array(bs.reshape(-1)))
+
+
+def test_predict_decision_roundtrip_softmax():
+    """SSR: decision passes the (m, C) logits through, predict takes the
+    argmax over the class view and recovers planted argmax labels."""
+    C = 4
+    loss = make_softmax(C)
+    logits = jax.random.normal(jax.random.PRNGKey(0), (32, C))
+    np.testing.assert_array_equal(np.array(loss.decision(logits)),
+                                  np.array(logits))
+    pred = loss.predict(logits)
+    assert pred.shape == (32,) and pred.dtype.kind == "i"
+    np.testing.assert_array_equal(np.array(pred),
+                                  np.argmax(np.array(logits), axis=-1))
+    np.testing.assert_array_equal(
+        np.array(loss.predict(loss.decision(logits))), np.array(pred))
+
+
+def test_predict_defaults_cover_registry():
+    """Every registered loss carries inference maps (the estimator layer
+    relies on them unconditionally)."""
+    from repro.core.losses import REGISTRY
+    for name, loss in REGISTRY.items():
+        scores = jnp.asarray([-1.0, 0.5])
+        assert loss.decision(scores).shape == scores.shape, name
+        assert loss.predict(scores).shape == scores.shape, name
+
+
 def test_hinge_prox_closed_form_cases():
     loss = get_loss("hinge")
     c = 2.0

@@ -205,7 +205,8 @@ def test_path_runs_for_hinge_and_softmax():
 # --------------------------------------------------- SolverEngine facade --
 def test_solver_engine_dispatch():
     As, bs, _, cfg = _regression()
-    eng = SolverEngine("squared", cfg)
+    with pytest.warns(DeprecationWarning, match="SolverEngine"):
+        eng = SolverEngine("squared", cfg)
     res = eng.fit(As, bs)
     path = eng.fit_path(As, bs, [10, 6, 3])
     assert int(path.iters[0]) == int(res.iters)
@@ -217,6 +218,60 @@ def test_solver_engine_dispatch():
                                   np.array(path.support))
     with pytest.raises(ValueError, match="mesh"):
         SolverEngine("squared", cfg, engine="sharded")
+
+
+def test_solver_engine_shim_bit_identical_to_estimator():
+    """Satellite: the deprecated facade is a shim over repro.api — its
+    results are bit-identical to the estimator's on the same fixture, and
+    the one-call fit_sparse_model shim matches both."""
+    from repro import api
+    As, bs, _, cfg = _regression()
+    with pytest.warns(DeprecationWarning, match="SolverEngine"):
+        eng = SolverEngine("squared", cfg)
+    res = eng.fit(As, bs)
+    est = api.SparseLinearRegression(
+        cfg.kappa, gamma=cfg.gamma, rho_c=cfg.rho_c, alpha=cfg.alpha,
+        max_iter=cfg.max_iter, tol=cfg.tol).fit(As, bs)
+    assert int(res.iters) == est.n_iter_
+    np.testing.assert_array_equal(np.array(res.x), np.array(est.result_.x))
+    np.testing.assert_array_equal(np.array(res.z), np.array(est.result_.z))
+
+    from repro.core import fit_sparse_model
+    with pytest.warns(DeprecationWarning, match="fit_sparse_model"):
+        legacy = fit_sparse_model("squared", As, bs, kappa=cfg.kappa,
+                                  gamma=cfg.gamma, rho_c=cfg.rho_c,
+                                  alpha=cfg.alpha, max_iter=cfg.max_iter,
+                                  tol=cfg.tol)
+    assert int(legacy.iters) == est.n_iter_
+    np.testing.assert_array_equal(np.array(legacy.x),
+                                  np.array(est.result_.x))
+
+    # the warm path through the shim == the estimator's path, bit for bit
+    shim_path = eng.fit_path(As, bs, [10, 6, 3])
+    est_path = est.fit_path(As, bs, [10, 6, 3])
+    np.testing.assert_array_equal(np.array(shim_path.x),
+                                  np.array(est_path.x))
+    np.testing.assert_array_equal(np.array(shim_path.iters),
+                                  np.array(est_path.iters))
+
+
+def test_solver_engine_grid_reports_strategy():
+    """Satellite: one grid entry point on both engines, honest about how
+    it executed — vmap on the reference engine, cold-scan on sharded."""
+    As, bs, _, cfg = _regression()
+    with pytest.warns(DeprecationWarning):
+        eng = SolverEngine("squared", cfg)
+    grid = eng.fit_grid(As, bs, [10, 6])
+    assert grid.strategy == "vmap"
+    mesh = jax.make_mesh((1, 1), ("nodes", "feat"))
+    with pytest.warns(DeprecationWarning):
+        sh = SolverEngine("squared", dataclasses.replace(cfg, inner_iters=25),
+                          engine="sharded", mesh=mesh)
+    sgrid = sh.fit_grid(As, bs, [10, 6])
+    assert sgrid.strategy == "cold-scan"
+    # identical numerics to the warm facade's cold baseline
+    cold = sh.fit_path(As, bs, [10, 6], warm_start=False)
+    np.testing.assert_array_equal(np.array(sgrid.x), np.array(cold.x))
 
 
 def test_kappa_ladder_properties():

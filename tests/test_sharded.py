@@ -42,6 +42,41 @@ def test_sharded_single_device_mesh_matches_reference(projection):
     assert np.array_equal(np.array(res.support), np.array(ref.support))
 
 
+def test_solver_engine_shim_sharded_bit_identical():
+    """Satellite: the deprecated SolverEngine facade on the sharded engine
+    is a shim over repro.api — DeprecationWarning plus results that are
+    bit-identical to the estimator AND to the raw engine on the same
+    single-device fixture."""
+    from repro import api
+    from repro.core import SolverEngine
+    spec = SyntheticSpec(1, 80, 40, sparsity_level=0.75, noise=1e-3)
+    As, bs, _ = make_sparse_regression(11, spec)
+    kw = dict(kappa=spec.kappa, gamma=10.0, rho_c=1.0, alpha=0.5,
+              max_iter=150, tol=1e-5, inner_iters=25)
+    mesh = jax.make_mesh((1, 1), ("nodes", "feat"))
+    raw = ShardedBiCADMM("squared", BiCADMMConfig(**kw), mesh).fit(
+        As.reshape(-1, 40), bs.reshape(-1))
+    with pytest.warns(DeprecationWarning, match="SolverEngine"):
+        eng = SolverEngine("squared", BiCADMMConfig(**kw),
+                           engine="sharded", mesh=mesh)
+    res = eng.fit(As, bs)
+    est = api.SparseLinearRegression(
+        spec.kappa, gamma=10.0, rho_c=1.0, alpha=0.5,
+        options=api.SolverOptions(engine="sharded", mesh=mesh,
+                                  max_iter=150, tol=1e-5,
+                                  inner_iters=25)).fit(As, bs)
+    for got in (res, est.result_):
+        assert int(got.iters) == int(raw.iters)
+        np.testing.assert_array_equal(np.array(got.z), np.array(raw.z))
+        np.testing.assert_array_equal(np.array(got.support),
+                                      np.array(raw.support))
+        np.testing.assert_array_equal(np.array(got.x_sparse),
+                                      np.array(raw.x_sparse))
+    # legacy state= warm-start passthrough on the facade's fit_path
+    path = eng.fit_path(As, bs, [10, 6], state=res.state)
+    assert path.state is not None and int(path.iters[0]) <= int(raw.iters)
+
+
 _SUBPROC = textwrap.dedent("""
     import os, json
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
