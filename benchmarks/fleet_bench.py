@@ -1,0 +1,126 @@
+"""Fleet-fitting benchmark — B independent small problems through the one
+vmapped masked driver (``repro.core.fleet.fit_many_stacked``) vs a Python
+loop of solo ``BiCADMM.fit`` calls.
+
+The workload this measures is the production shape of sparse ML at small
+n: thousands of per-user / per-layer / per-SKU models, each of which is
+far too small to occupy the accelerator alone. A Python loop pays per-fit
+dispatch (one jitted while-loop launch per problem, host round-trip on
+the convergence flag every fit) — the fleet driver amortizes all of it
+into a single compiled masked while-loop, so per-problem cost approaches
+the marginal cost of one more vmap lane.
+
+The loop baseline is *measured* on a sample of the fleet and linearly
+extrapolated to B (running 10k solo fits on CPU takes tens of minutes —
+exactly the pathology being benchmarked); the sample size and the
+extrapolation are recorded in the JSON. Lane trajectories are identical
+in iteration count either way (certified by ``tests/test_fleet.py``), so
+both sides do the same solver work.
+
+Results land in ``benchmarks/results/fleet_bench.json``:
+
+    PYTHONPATH=src python -m benchmarks.fleet_bench            # B = 10_000
+    PYTHONPATH=src python -m benchmarks.fleet_bench --full     # + bigger lanes
+    PYTHONPATH=src python -m benchmarks.fleet_bench --smoke    # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BiCADMM, BiCADMMConfig
+from repro.core.fleet import fit_many_stacked
+
+from .common import emit, save_json, timeit
+
+CFG = dict(kappa=4, gamma=5.0, rho_c=1.0, max_iter=100, tol=1e-3)
+
+
+def _fleet_data(B: int, N: int, m: int, n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    As = rng.standard_normal((B, N, m, n)).astype(np.float32)
+    xs = rng.standard_normal((B, n)) * (rng.random((B, n)) < 0.3)
+    bs = np.einsum("bnmf,bf->bnm", As, xs).astype(np.float32)
+    bs += 0.01 * rng.standard_normal((B, N, m)).astype(np.float32)
+    return jnp.asarray(As), jnp.asarray(bs)
+
+
+def _bench_one(B: int, N: int, m: int, n: int, loop_sample: int,
+               reps: int) -> dict:
+    solver = BiCADMM("squared", BiCADMMConfig(**CFG))
+    As, bs = _fleet_data(B, N, m, n)
+
+    def fleet():
+        # fresh cold fit per call; factor cache keyed on the same arrays
+        return fit_many_stacked(solver, As, bs).z
+
+    t_fleet = timeit(fleet, warmup=1, reps=reps)
+    res = fit_many_stacked(solver, As, bs)
+    iters = np.asarray(res.iters)
+
+    # loop baseline: measured per-fit cost on a sample, extrapolated. The
+    # sample is spread across the fleet so it sees the same mix of easy
+    # and hard lanes the fleet driver pays for.
+    sample = np.linspace(0, B - 1, min(loop_sample, B)).astype(int)
+    solver.fit(As[sample[0]], bs[sample[0]])          # compile once
+    t0 = time.perf_counter()
+    for i in sample:
+        jax.block_until_ready(solver.fit(As[i], bs[i]).z)
+    per_fit = (time.perf_counter() - t0) / len(sample)
+    t_loop = per_fit * B
+
+    speedup = t_loop / t_fleet
+    row = dict(B=B, N=N, m=m, n=n,
+               fleet_s=t_fleet, loop_s_extrapolated=t_loop,
+               loop_sample=int(len(sample)), loop_per_fit_s=per_fit,
+               speedup=speedup,
+               iters_mean=float(iters.mean()), iters_max=int(iters.max()),
+               fits_per_s_fleet=B / t_fleet, fits_per_s_loop=1.0 / per_fit)
+    emit(f"fleet_B{B}_m{m}_n{n}", t_fleet,
+         f"{speedup:.0f}x vs loop ({B / t_fleet:.0f} fits/s)")
+    return row
+
+
+def main(full: bool = False, smoke: bool = False) -> None:
+    if smoke:
+        shapes = [(64, 1, 24, 12, 8)]
+        reps = 1
+    elif full:
+        shapes = [(10_000, 1, 32, 16, 24), (10_000, 2, 32, 16, 24),
+                  (2_000, 1, 128, 64, 16)]
+        reps = 3
+    else:
+        shapes = [(10_000, 1, 32, 16, 24), (2_000, 1, 128, 64, 16)]
+        reps = 3
+
+    rows = [_bench_one(B, N, m, n, loop_sample, reps)
+            for B, N, m, n, loop_sample in shapes]
+    if not smoke:
+        payload = dict(config=CFG, device=jax.devices()[0].device_kind,
+                       backend=jax.default_backend(), rows=rows,
+                       note=(
+          "The speedup is backend-bound. On CPU, B-wide ops scale "
+          "linearly in B, so the fleet's gain is the amortized per-op "
+          "dispatch overhead of the solo while-loop, MINUS the masked "
+          "driver's overrun (it iterates until the slowest lane "
+          "converges: B * iters_max lane-iterations vs the loop's "
+          "sum(iters)) — a few x end to end. The >100x regime is an "
+          "accelerator, where a 10k-lane op costs roughly the same as a "
+          "1-lane op until the device saturates, and the loop's tiny "
+          "kernels run at ~1% occupancy plus a host round-trip on every "
+          "fit's convergence check. fits_per_s_fleet / fits_per_s_loop "
+          "are recorded separately so either regime can be read off."))
+        path = save_json("fleet_bench.json", payload)
+        print(f"# wrote {path}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    main(full=args.full, smoke=args.smoke)

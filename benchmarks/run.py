@@ -15,8 +15,9 @@ from __future__ import annotations
 import argparse
 import time
 
-from . import (fig1_convergence, fig23_scaling, fig4_transfer, path_sweep,
-               proj_bench, roofline, table1_compare, xupdate_bench)
+from . import (fig1_convergence, fig23_scaling, fig4_transfer, fleet_bench,
+               path_sweep, proj_bench, roofline, table1_compare,
+               xupdate_bench)
 
 
 def main() -> None:
@@ -33,6 +34,8 @@ def main() -> None:
         proj_bench.main(smoke=True)
         print("# x-update engine — dense vs woodbury vs pcg (smoke)")
         xupdate_bench.main(smoke=True)
+        print("# Fleet fitting — vmapped driver vs solo-fit loop (smoke)")
+        fleet_bench.main(smoke=True)
         print(f"# total {time.time() - t0:.1f}s")
         return
     print("# Fig 1 — residual convergence vs rho_b")
@@ -49,6 +52,8 @@ def main() -> None:
     proj_bench.main(full=args.full)
     print("# x-update engine — dense vs woodbury vs pcg")
     xupdate_bench.main(full=args.full)
+    print("# Fleet fitting — vmapped driver vs solo-fit loop")
+    fleet_bench.main(full=args.full)
     print("# Roofline — from dry-run records")
     roofline.main()
     print(f"# total {time.time() - t0:.1f}s")

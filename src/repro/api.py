@@ -48,17 +48,20 @@ from typing import Any
 import jax.numpy as jnp
 
 from .core.bicadmm import BiCADMM, BiCADMMConfig
+from .core.fleet import fit_many as _ref_fit_many
+from .core.fleet import fit_many_stacked as _ref_fit_many_stacked
 from .core.losses import Loss, get_loss
 from .core.path import fit_grid as _ref_fit_grid
 from .core.path import fit_path as _ref_fit_path
 from .core.prox import XSOLVERS
-from .core.results import FitResult, SparsePath
+from .core.results import FitResult, FleetResult, SparsePath
 from .core.sharded import X_UPDATE_MODES, ShardedBiCADMM
 
 __all__ = [
     "CapabilityError",
     "Capabilities",
     "FitResult",
+    "FleetResult",
     "SolverOptions",
     "SparseEstimator",
     "SparseLinearRegression",
@@ -68,6 +71,7 @@ __all__ = [
     "SparseSVM",
     "SparseSoftmaxRegression",
     "engine_capabilities",
+    "fit_many",
     "select_engine",
     "solve",
     "solve_grid",
@@ -233,6 +237,7 @@ class Capabilities:
     grid_strategy: str         # "vmap" | "cold-scan"
     gather_free: bool          # O(B)-collective projections, no O(d) gather
     warm_start: bool = True    # resumable state / warm-started paths
+    fleet: bool = False        # fit_many: vmapped batch of B problems
 
 
 def engine_capabilities(engine: str, options: SolverOptions | None = None
@@ -247,7 +252,7 @@ def engine_capabilities(engine: str, options: SolverOptions | None = None
         return Capabilities(engine="reference", distributed=False,
                             dynamic_penalties=dyn, per_solve_overrides=True,
                             penalty_grids=dyn, grid_strategy="vmap",
-                            gather_free=False)
+                            gather_free=False, fleet=dyn)
     if engine == "sharded":
         return Capabilities(
             engine="sharded", distributed=True, dynamic_penalties=False,
@@ -296,6 +301,15 @@ def _check_sweep(caps: Capabilities, gammas, rho_cs) -> None:
             "(Capabilities.penalty_grids=False)")
 
 
+def _check_fleet(caps: Capabilities) -> None:
+    if not caps.fleet:
+        raise CapabilityError(
+            f"the {caps.engine!r} engine (as configured) does not support "
+            "fleet fitting (Capabilities.fleet=False): fit_many needs the "
+            "vmapped masked batched driver — use the reference engine "
+            "with n_feature_blocks=1")
+
+
 # --------------------------------------------------------------------------
 # engine adapters — one uniform surface over the two engines
 # --------------------------------------------------------------------------
@@ -339,6 +353,19 @@ class _ReferenceAdapter:
         _check_sweep(self.caps, gammas, rho_cs)
         return _ref_fit_grid(self.solver, As, bs, kappas, gammas=gammas,
                              rho_cs=rho_cs)
+
+    def fit_many_stacked(self, As, bs, *, kappas=None, gammas=None,
+                         rho_cs=None, states=None) -> FleetResult:
+        _check_fleet(self.caps)
+        return _ref_fit_many_stacked(self.solver, As, bs, kappas=kappas,
+                                     gammas=gammas, rho_cs=rho_cs,
+                                     states=states)
+
+    def fit_many(self, problems, *, kappas=None, gammas=None,
+                 rho_cs=None) -> list[FitResult]:
+        _check_fleet(self.caps)
+        return _ref_fit_many(self.solver, problems, kappas=kappas,
+                             gammas=gammas, rho_cs=rho_cs)
 
 
 class _ShardedAdapter:
@@ -388,6 +415,14 @@ class _ShardedAdapter:
         A, b = self._flat(As, bs)
         return self.solver.fit_path(A, b, kappas, warm_start=False)
 
+    def fit_many_stacked(self, As, bs, **kw) -> FleetResult:
+        """Fleet fitting is a reference-engine capability: the sharded
+        engine's mesh axes are spent on one problem's rows/features."""
+        _check_fleet(self.caps)
+
+    def fit_many(self, problems, **kw) -> list[FitResult]:
+        _check_fleet(self.caps)
+
 
 def make_adapter(problem: SparseProblem, options: SolverOptions,
                  engine: str | None = None):
@@ -429,6 +464,65 @@ def solve_path(problem: SparseProblem, X, y, kappas, *,
     As, bs = _stack(X, y)
     return _negotiate(problem, options, As).fit_path(
         As, bs, kappas, gammas=gammas, rho_cs=rho_cs, warm_start=warm_start)
+
+
+def _stack_many(Xs, ys):
+    """Stacked fleet data to the (B, N, m, n) / (B, N, m) layout: accept
+    ``(B, samples, n)`` flat (N = 1) or ``(B, N, m, n)`` node-stacked."""
+    Xs, ys = jnp.asarray(Xs), jnp.asarray(ys)
+    if Xs.ndim == 3:
+        Xs = Xs[:, None]
+    if Xs.ndim != 4:
+        raise ValueError(f"stacked fleet data must be (B, samples, n) or "
+                         f"(B, N, m, n); got shape {Xs.shape}")
+    return Xs, ys.reshape(Xs.shape[0], Xs.shape[1], Xs.shape[2])
+
+
+def fit_many(problem: SparseProblem, Xs, ys, *, kappas=None, gammas=None,
+             rho_cs=None, options: SolverOptions | None = None,
+             states=None) -> FleetResult | list[FitResult]:
+    """Fit a FLEET of B independent instances of ``problem`` — one vmapped
+    masked Bi-cADMM driver instead of B compiled calls.
+
+    Two input shapes:
+
+    * stacked arrays — ``Xs (B, samples, n)`` (or node-stacked
+      ``(B, N, m, n)``) with matching ``ys``: one shape signature, one
+      compiled program; returns a :class:`FleetResult` (``result[i]`` is
+      problem i's :class:`FitResult` view). ``states`` warm-starts every
+      lane from a previous fleet's ``.state``.
+    * a sequence — ``Xs`` / ``ys`` are lists of per-problem arrays with
+      possibly mixed shapes: problems are bucketed by ``(N, n)`` signature
+      (zero-padded along the sample axis — exact in exact arithmetic; see
+      ``repro.core.fleet``) and each bucket runs as one compiled fleet;
+      returns a list of :class:`FitResult` in input order.
+
+    ``kappas`` / ``gammas`` / ``rho_cs`` are optional per-problem vectors;
+    heterogeneous penalties ride the dynamic (spectral-factor) x-update
+    backends exactly like a hyperparameter path. Per-problem convergence
+    is masked: each lane matches a solo ``fit`` of that problem exactly in
+    iteration count and support, with iterates equal to fp round-off
+    (``tests/test_fleet.py``).
+
+    Fleet fitting is capability-negotiated (``Capabilities.fleet``): it
+    runs on the reference engine; ``engine="sharded"`` raises
+    :class:`CapabilityError`.
+    """
+    options = options if options is not None else SolverOptions()
+    engine = "reference" if options.engine == "auto" else options.engine
+    adapter = make_adapter(problem, options, engine=engine)
+    if isinstance(Xs, (list, tuple)):
+        if not isinstance(ys, (list, tuple)) or len(ys) != len(Xs):
+            raise ValueError("sequence input needs per-problem ys of the "
+                             "same length as Xs")
+        if states is not None:
+            raise ValueError("states= warm starts require stacked-array "
+                             "input (one shape signature)")
+        return adapter.fit_many(list(zip(Xs, ys)), kappas=kappas,
+                                gammas=gammas, rho_cs=rho_cs)
+    As, bs = _stack_many(Xs, ys)
+    return adapter.fit_many_stacked(As, bs, kappas=kappas, gammas=gammas,
+                                    rho_cs=rho_cs, states=states)
 
 
 def solve_grid(problem: SparseProblem, X, y, kappas, *,

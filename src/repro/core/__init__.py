@@ -19,10 +19,11 @@ results; they emit ``DeprecationWarning``).
 from .bicadmm import (BiCADMM, BiCADMMConfig, BiCADMMResult, SolveParams,
                       fit_sparse_model, reset_for_resume)
 from .losses import get_loss
-from . import bilinear, losses, path, prox, results, subsolver
+from . import bilinear, fleet, losses, path, prox, results, subsolver
+from .fleet import fit_many, fit_many_stacked
 from .path import PathResult, fit_grid, fit_path, kappa_ladder
 from .prox import NodeProxEngine
-from .results import FitResult, SparsePath
+from .results import FitResult, FleetResult, SparsePath
 from .sharded import ShardedBiCADMM, ShardedPathResult, ShardedResult
 
 __all__ = [
@@ -30,6 +31,7 @@ __all__ = [
     "BiCADMMConfig",
     "BiCADMMResult",
     "FitResult",
+    "FleetResult",
     "NodeProxEngine",
     "PathResult",
     "ShardedBiCADMM",
@@ -40,8 +42,11 @@ __all__ = [
     "SparsePath",
     "bilinear",
     "fit_grid",
+    "fit_many",
+    "fit_many_stacked",
     "fit_path",
     "fit_sparse_model",
+    "fleet",
     "get_loss",
     "kappa_ladder",
     "losses",

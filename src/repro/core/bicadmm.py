@@ -131,6 +131,13 @@ class BiCADMMState(NamedTuple):
 BiCADMMResult = FitResult
 
 
+def _is_traced(*pytrees) -> bool:
+    """True when any leaf is a tracer — i.e. we are inside an enclosing
+    jit/vmap/scan trace, where buffer donation is unusable."""
+    return any(isinstance(leaf, jax.core.Tracer)
+               for leaf in jax.tree.leaves(pytrees))
+
+
 def reset_for_resume(st: BiCADMMState) -> BiCADMMState:
     """Zero the iteration counter and residuals so a (possibly converged)
     state re-enters the while-loop; the iterates (x,u,z,t,s,v) are kept.
@@ -374,6 +381,43 @@ class BiCADMM:
         step = partial(self._step, factors, As, bs, params)
         return jax.lax.while_loop(cond, step, st0)
 
+    # -- fleet (batched-problem) driver ------------------------------------
+    def _fleet_active(self, st: BiCADMMState) -> Array:
+        """(B,) mask of lanes still iterating: not converged, budget left.
+        The per-lane predicate is exactly the solo driver's ``cond``."""
+        cfg = self.cfg
+        converged = ((st.p_r < cfg.tol) & (st.d_r < cfg.tol)
+                     & (st.b_r < cfg.tol))
+        return (~converged) & (st.k < cfg.max_iter)
+
+    def _run_while_fleet(self, factors, As, bs, params: SolveParams,
+                         st0: BiCADMMState) -> BiCADMMState:
+        """Masked-step batched while-loop: every argument carries a leading
+        problem axis B (data, factors, per-problem ``SolveParams`` entries,
+        and the state). One compiled loop runs while ANY lane is active;
+        converged lanes freeze — their iterates, residuals, and iteration
+        counters are held by a per-lane select, so each lane's final state
+        is bit-identical to a solo :meth:`run_from` on that problem
+        (certified in ``tests/test_fleet.py``). The wasted step compute of
+        frozen lanes is the price of one fused program; for fleets of
+        similar problems the slowest lane dominates anyway.
+        """
+        step = jax.vmap(self._step, in_axes=(0, 0, 0, 0, 0))
+
+        def cond(st: BiCADMMState):
+            return jnp.any(self._fleet_active(st))
+
+        def body(st: BiCADMMState):
+            active = self._fleet_active(st)
+            new = step(factors, As, bs, params, st)
+
+            def freeze(n, o):
+                mask = active.reshape(active.shape + (1,) * (n.ndim - 1))
+                return jnp.where(mask, n, o)
+            return jax.tree.map(freeze, new, st)
+
+        return jax.lax.while_loop(cond, body, st0)
+
     def run_from(self, As: Array, bs: Array, state: BiCADMMState, *,
                  kappa=None, gamma=None, rho_c=None) -> BiCADMMResult:
         """Run until residual tolerances or max_iter, warm-starting from
@@ -391,8 +435,17 @@ class BiCADMM:
         dyn = gamma is not None or rho_c is not None
         factors, N, n, K = self._setup(As, bs, dynamic_penalties=dyn)
         params = self._make_params(N, kappa=kappa, gamma=gamma, rho_c=rho_c)
-        st = self._run_while_donated(factors, As, bs, params,
-                                     reset_for_resume(state))
+        st0 = reset_for_resume(state)
+        if _is_traced(As, bs, st0):
+            # Inside an outer trace (vmap/jit/scan — e.g. the sparsify
+            # path vmaps whole fits): the state leaves are tracers, which
+            # cannot be donated — the jitted donating driver would emit
+            # "Some donated buffers were not usable" UserWarnings on every
+            # call. Inline the while-loop into the enclosing trace
+            # instead; the outer jit owns buffer reuse there.
+            st = self._run_while(factors, As, bs, params, st0)
+        else:
+            st = self._run_while_donated(factors, As, bs, params, st0)
         return self._finalize(As, bs, st, params, history=None)
 
     def fit(self, As: Array, bs: Array) -> BiCADMMResult:

@@ -73,6 +73,26 @@ class Loss:
     def predict_dim(self, n_features: int) -> int:
         return n_features * self.n_classes
 
+    # -- fleet (batched-problem) maps --------------------------------------
+    # ``decision`` / ``predict`` are elementwise or act on the trailing
+    # class axis, so they already accept a leading problem axis unchanged:
+    # feed them (B, m) margins or (B, m, C) logits directly. ``value``
+    # SUMS over every axis, so fleets need the vmapped form below.
+    def value_many(self, preds: Array, bs: Array) -> Array:
+        """Per-problem training losses for a stacked fleet: ``preds`` is
+        ``(B, m)`` (or ``(B, m, C)``), ``bs`` is ``(B, m)``; returns the
+        ``(B,)`` per-problem sums ``value(preds[i], bs[i])``."""
+        return jax.vmap(self.value)(preds, bs)
+
+    def decision_many(self, preds: Array) -> Array:
+        """Batched ``decision`` map (identity-shaped for stacked fleets)."""
+        return jax.vmap(self.decision)(preds)
+
+    def predict_many(self, preds: Array) -> Array:
+        """Batched ``predict`` map: ``(B, m[, C])`` scores to per-problem
+        predicted targets, one row per fleet member."""
+        return jax.vmap(self.predict)(preds)
+
 
 # ----------------------------------------------------------------- squared --
 def _sq_value(pred: Array, b: Array) -> Array:

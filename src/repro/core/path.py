@@ -67,7 +67,13 @@ def _grids(solver: BiCADMM, kappas, gammas, rho_cs, dt):
 
 def _point_outputs(solver: BiCADMM, As, bs, st: BiCADMMState,
                    params: SolveParams) -> dict:
-    """Finalize one grid point into the stackable output slice."""
+    """Finalize one grid point into the stackable output slice.
+
+    Shared finalizer for every batched driver: the path scan maps it over
+    grid points, ``fit_grid``'s cold vmap over lanes, and the fleet driver
+    (``repro.core.fleet``) vmaps it over independent problems — keeping
+    threshold/polish/train-loss semantics identical across all three.
+    """
     res = solver._finalize(As, bs, st, params, history=None)
     n = As.shape[2]
     K = solver.loss.n_classes

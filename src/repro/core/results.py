@@ -54,6 +54,50 @@ class FitResult(NamedTuple):
         return self.coef.reshape(-1)
 
 
+class FleetResult(NamedTuple):
+    """A batch of B *independent* problems solved in one vmapped driver
+    (``repro.core.fleet`` / ``repro.api.fit_many``); leading axis =
+    problem index. Unlike :class:`SparsePath` (one dataset, many
+    hyperparameter points) every lane here has its own data — and its own
+    ``kappa`` / ``gamma`` / ``rho_c`` and its own convergence point: the
+    masked fleet driver freezes converged lanes, so per-lane ``iters`` /
+    ``support`` match a solo fit exactly (iterates to fp round-off).
+
+    Index it like a sequence: ``result[i]`` is the i-th problem's
+    :class:`FitResult` (with its slice of the batched solver state, so a
+    single problem can be re-fit solo from the fleet's warm state)."""
+    coef: Array         # (B, n, K) sparse solutions
+    z: Array            # (B, n*K) consensus iterates
+    support: Array      # (B, n*K) bool
+    iters: Array        # (B,) outer iterations spent per problem
+    p_r: Array          # (B,)
+    d_r: Array          # (B,)
+    b_r: Array          # (B,)
+    cardinality: Array  # (B,) ||coef_b||_0
+    kappas: Array       # (B,)
+    gammas: Array       # (B,)
+    rho_cs: Array       # (B,)
+    train_loss: Any = None  # (B,) per-problem training loss
+    state: Any = None       # batched solver state — warm-start the refit
+    strategy: str | None = None  # "fleet-vmap"
+
+    def __len__(self) -> int:
+        return int(self.coef.shape[0])
+
+    def __getitem__(self, i: int) -> FitResult:
+        """The i-th problem's solo-shaped :class:`FitResult` view."""
+        state = (None if self.state is None
+                 else jax.tree.map(lambda a: a[i], self.state))
+        return FitResult(self.coef[i], self.z[i], self.support[i],
+                         self.iters[i], self.p_r[i], self.d_r[i],
+                         self.b_r[i], history=None, state=state)
+
+    @property
+    def x(self) -> Array:
+        """Flat ``(B, n*K)`` view of ``coef`` (legacy name)."""
+        return self.coef.reshape(self.coef.shape[0], -1)
+
+
 class SparsePath(NamedTuple):
     """Stacked per-grid-point results; leading axis = grid index."""
     coef: Array         # (P, n, K) sparse solutions

@@ -9,6 +9,7 @@ API_SURFACE = {
     "CapabilityError",
     "Capabilities",
     "FitResult",
+    "FleetResult",
     "SolverOptions",
     "SparseEstimator",
     "SparseLinearRegression",
@@ -18,6 +19,7 @@ API_SURFACE = {
     "SparseSVM",
     "SparseSoftmaxRegression",
     "engine_capabilities",
+    "fit_many",
     "select_engine",
     "solve",
     "solve_grid",
@@ -30,6 +32,7 @@ CORE_SURFACE = {
     "BiCADMMConfig",
     "BiCADMMResult",
     "FitResult",
+    "FleetResult",
     "NodeProxEngine",
     "PathResult",
     "ShardedBiCADMM",
@@ -40,8 +43,11 @@ CORE_SURFACE = {
     "SparsePath",
     "bilinear",
     "fit_grid",
+    "fit_many",
+    "fit_many_stacked",
     "fit_path",
     "fit_sparse_model",
+    "fleet",
     "get_loss",
     "kappa_ladder",
     "losses",

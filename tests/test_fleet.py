@@ -1,0 +1,315 @@
+"""Differential certification of the fleet driver (``repro.core.fleet``).
+
+The contract, certified against the solo reference engine on every test:
+
+* the masked batched while-loop is BIT-identical to JAX's own
+  ``while_loop`` batching rule (a ``vmap`` of the solo loop) — the
+  select-freeze masking is exactly vmap semantics, not an approximation;
+* each lane matches a Python loop of solo fits exactly in iteration
+  count and support, and in iterates up to fp round-off (batched GEMMs
+  accumulate in a different order than solo GEMMs — that ulp-level
+  difference is the only one allowed);
+* heterogeneous per-problem kappa/gamma/rho_c reproduce solo
+  ``run_from`` calls with the same array overrides;
+* zero-row shape padding (the bucketing layer) does not perturb the
+  solver trajectory, and the padded train loss is corrected exactly.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.core import BiCADMM, BiCADMMConfig
+from repro.core import fleet as fleet_mod
+from repro.core.fleet import (bucket_problems, corrected_train_losses,
+                              fit_many, fit_many_stacked, init_fleet_state,
+                              reset_fleet_for_resume)
+
+# A regime where lanes genuinely converge at different iteration counts
+# (recovery problems of mixed difficulty), so the per-lane masking is
+# exercised rather than every lane riding to max_iter together.
+B, N, M, NFEAT = 5, 2, 30, 12
+CFG = dict(kappa=5, gamma=5.0, rho_c=1.0, max_iter=600, tol=5e-3)
+
+Z_TOL = dict(rtol=0.0, atol=5e-5)   # fp round-off band for f32 iterates
+
+
+def _fleet_data(seed=1, B=B, N=N, m=M, n=NFEAT):
+    rng = np.random.default_rng(seed)
+    As = rng.standard_normal((B, N, m, n)).astype(np.float32)
+    xs = rng.standard_normal((B, n)) * (rng.random((B, n)) < 0.4)
+    bs = np.einsum("bnmf,bf->bnm", As, xs).astype(np.float32)
+    bs += 0.01 * rng.standard_normal((B, N, m)).astype(np.float32)
+    return jnp.asarray(As), jnp.asarray(bs)
+
+
+@pytest.fixture(scope="module")
+def solver():
+    return BiCADMM("squared", BiCADMMConfig(**CFG))
+
+
+@pytest.fixture(scope="module")
+def data():
+    return _fleet_data()
+
+
+def _assert_lane_matches_solo(fleet, i, solo):
+    assert int(fleet.iters[i]) == int(solo.iters), f"lane {i} iters"
+    assert bool(jnp.array_equal(fleet.support[i], solo.support)), \
+        f"lane {i} support"
+    np.testing.assert_allclose(fleet.z[i], solo.z, **Z_TOL,
+                               err_msg=f"lane {i} z")
+    np.testing.assert_allclose(fleet.coef[i], solo.coef, **Z_TOL,
+                               err_msg=f"lane {i} coef")
+
+
+# --------------------------------------------------------------------------
+# the driver itself
+# --------------------------------------------------------------------------
+def test_masked_driver_bit_matches_vmap_batching_rule(solver, data):
+    """The explicit masked while-loop IS the vmap batching rule: running
+    ``vmap(solo while-loop)`` over the same batched operands produces a
+    bit-identical final state, lane counters included."""
+    As, bs = data
+    kaps, gams, rhos, dyn = fleet_mod._fleet_grids(
+        solver, B, None, None, None, As.dtype)
+    factors = fleet_mod._fleet_setup(solver, As, bs, dyn)
+    params = fleet_mod._fleet_params(solver, N, kaps, gams, rhos, dyn)
+    st0 = reset_fleet_for_resume(init_fleet_state(solver, B, N, NFEAT,
+                                                  As.dtype))
+    mine = jax.jit(solver._run_while_fleet)(factors, As, bs, params, st0)
+    ref = jax.jit(jax.vmap(solver._run_while,
+                           in_axes=(0, 0, 0, 0, 0)))(factors, As, bs,
+                                                     params, st0)
+    for name, a, b in zip(mine._fields, mine, ref):
+        if a is None:
+            continue
+        assert bool(jnp.array_equal(a, b)), f"field {name} diverged"
+
+
+def test_fleet_matches_solo_loop(solver, data):
+    """fit_many_stacked == Python loop of solver.fit, per lane."""
+    As, bs = data
+    fleet = fit_many_stacked(solver, As, bs)
+    assert fleet.strategy == "fleet-vmap"
+    assert len(fleet) == B
+    for i in range(B):
+        _assert_lane_matches_solo(fleet, i, solver.fit(As[i], bs[i]))
+
+
+def test_lanes_converge_independently(solver, data):
+    """The masking must actually bite: lanes stop at different counts,
+    every converged lane's residuals are below tol, and no lane ran past
+    its own convergence point."""
+    As, bs = data
+    fleet = fit_many_stacked(solver, As, bs)
+    iters = np.asarray(fleet.iters)
+    assert len(set(iters.tolist())) > 1, "test regime degenerate: " \
+        "all lanes converged at the same count"
+    tol = solver.cfg.tol
+    done = iters < solver.cfg.max_iter
+    assert done.any()
+    for i in np.nonzero(done)[0]:
+        assert float(fleet.p_r[i]) < tol
+        assert float(fleet.d_r[i]) < tol
+        assert float(fleet.b_r[i]) < tol
+
+
+def test_fleet_heterogeneous_hyperparameters(solver, data):
+    """Per-problem kappa/gamma/rho_c vectors reproduce solo ``run_from``
+    calls with the same (array-valued) overrides."""
+    As, bs = data
+    kappas = jnp.asarray([3, 4, 5, 6, 7])
+    gammas = jnp.asarray([2.0, 5.0, 5.0, 10.0, 20.0], jnp.float32)
+    rho_cs = jnp.asarray([1.0, 1.0, 2.0, 1.0, 0.5], jnp.float32)
+    fleet = fit_many_stacked(solver, As, bs, kappas=kappas, gammas=gammas,
+                             rho_cs=rho_cs)
+    np.testing.assert_array_equal(np.asarray(fleet.cardinality),
+                                  np.asarray(kappas))
+    for i in range(B):
+        solo = solver.run_from(As[i], bs[i],
+                               solver.init_state(As[i], bs[i]),
+                               kappa=kappas[i], gamma=gammas[i],
+                               rho_c=rho_cs[i])
+        _assert_lane_matches_solo(fleet, i, solo)
+
+
+def test_fleet_warm_refit_resumes(solver, data):
+    """states= warm-starts every lane: a budget-capped fleet resumed once
+    matches a solo run_from continuation, lane by lane."""
+    As, bs = data
+    capped = BiCADMM("squared", BiCADMMConfig(**{**CFG, "max_iter": 40}))
+    first = fit_many_stacked(capped, As, bs)
+    assert np.asarray(first.iters).max() == 40
+    second = fit_many_stacked(capped, As, bs, states=first.state)
+    for i in range(B):
+        s1 = capped.fit(As[i], bs[i])
+        s2 = capped.run_from(As[i], bs[i], s1.state)
+        _assert_lane_matches_solo(second, i, s2)
+
+
+def test_fleet_result_lane_view(solver, data):
+    """result[i] is a solo-shaped FitResult whose state slice can seed a
+    solo run_from."""
+    As, bs = data
+    fleet = fit_many_stacked(solver, As, bs)
+    one = fleet[2]
+    assert one.coef.shape == (NFEAT, 1)
+    assert one.z.shape == (NFEAT,)
+    resumed = solver.run_from(As[2], bs[2], one.state)
+    # already converged: the resume re-checks residuals and stops
+    assert bool(jnp.array_equal(resumed.support, fleet.support[2]))
+
+
+def test_fleet_runs_warning_free(solver, data):
+    """No "donated buffers were not usable" (or any other) UserWarning from
+    the fleet path — cold and warm."""
+    As, bs = data
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        first = fit_many_stacked(solver, As, bs)
+        fit_many_stacked(solver, As, bs, states=first.state)
+
+
+# --------------------------------------------------------------------------
+# bucketing / padding
+# --------------------------------------------------------------------------
+def test_zero_row_padding_is_exact(solver):
+    """A problem padded with zero rows follows the identical solver
+    trajectory: same iteration count, same support, iterates equal."""
+    As, bs = _fleet_data(seed=3, B=1, m=24)
+    A, b = As[0], bs[0]
+    pad = ((0, 0), (0, 8), (0, 0))
+    Ap, bp = jnp.pad(A, pad), jnp.pad(b, pad[:2])
+    r0, r1 = solver.fit(A, b), solver.fit(Ap, bp)
+    assert int(r0.iters) == int(r1.iters)
+    assert bool(jnp.array_equal(r0.support, r1.support))
+    np.testing.assert_allclose(r0.z, r1.z, **Z_TOL)
+
+
+def test_bucketing_round_trip(solver):
+    """A heterogeneous list (two m's, one n) buckets into one signature
+    and scatters back in caller order, each matching its solo fit."""
+    rng = np.random.default_rng(7)
+    ms = [20, 28, 20, 24, 28]
+    problems = []
+    for i, m in enumerate(ms):
+        As, bs = _fleet_data(seed=10 + i, B=1, m=m)
+        problems.append((As[0], bs[0]))
+    buckets = bucket_problems(problems)
+    assert len(buckets) == 1
+    assert buckets[0].signature == (N, 28, NFEAT)
+    assert buckets[0].m_orig == tuple(ms)
+
+    results = fit_many(solver, problems)
+    assert len(results) == len(problems)
+    for res, (A, b) in zip(results, problems):
+        solo = solver.fit(A, b)
+        assert int(res.iters) == int(solo.iters)
+        assert bool(jnp.array_equal(res.support, solo.support))
+        np.testing.assert_allclose(res.z, solo.z, **Z_TOL)
+
+
+def test_bucketing_multiple_signatures(solver):
+    """Different n's cannot share a bucket; results still scatter back to
+    the caller's order."""
+    p1 = _fleet_data(seed=20, B=1, n=12)
+    p2 = _fleet_data(seed=21, B=1, n=8)
+    p3 = _fleet_data(seed=22, B=1, n=12)
+    problems = [(p[0][0], p[1][0]) for p in (p1, p2, p3)]
+    assert len(bucket_problems(problems)) == 2
+    results = fit_many(solver, problems)
+    assert [r.z.shape[0] for r in results] == [12, 8, 12]
+    for res, (A, b) in zip(results, problems):
+        solo = solver.fit(A, b)
+        assert int(res.iters) == int(solo.iters)
+        assert bool(jnp.array_equal(res.support, solo.support))
+
+
+def test_corrected_train_losses():
+    """The padded-row correction makes the reported loss equal the true
+    loss of the *returned* coefficients on the *unpadded* data — checked
+    for a loss with l(0,0) != 0 (logistic), where padding otherwise
+    inflates the summed loss by log(2) per padded row."""
+    rng = np.random.default_rng(5)
+    solver = BiCADMM("logistic", BiCADMMConfig(kappa=4, gamma=5.0,
+                                               rho_c=1.0, max_iter=150,
+                                               tol=1e-3))
+    m1, m2, n = 20, 30, 10
+    X1 = rng.standard_normal((N, m1, n)).astype(np.float32)
+    X2 = rng.standard_normal((N, m2, n)).astype(np.float32)
+    y1 = np.sign(rng.standard_normal((N, m1))).astype(np.float32)
+    y2 = np.sign(rng.standard_normal((N, m2))).astype(np.float32)
+    problems = [(X1, y1), (X2, y2)]
+    [bucket] = bucket_problems(problems)
+    fleet = fit_many_stacked(solver, bucket.As, bucket.bs)
+    raw = np.asarray(fleet.train_loss)
+    corrected = np.asarray(corrected_train_losses(solver, fleet, bucket))
+    pads = np.asarray([bucket.signature[1] - m for m in bucket.m_orig])
+    # the padded member's loss shrinks by N * pad * log 2; the member that
+    # set the bucket width is untouched
+    np.testing.assert_allclose(raw - corrected, N * pads * np.log(2.0),
+                               rtol=1e-5)
+    for j, (X, y) in enumerate([problems[i] for i in bucket.indices]):
+        pred = np.asarray(X).reshape(-1, n) @ np.asarray(fleet.coef[j])
+        true_loss = float(solver.loss.value(jnp.asarray(pred[:, 0]),
+                                            jnp.asarray(y.reshape(-1))))
+        np.testing.assert_allclose(corrected[j], true_loss, rtol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# api front-end / capability negotiation
+# --------------------------------------------------------------------------
+def test_api_fit_many_stacked(data):
+    As, bs = data
+    prob = api.SparseProblem(loss="squared", kappa=CFG["kappa"],
+                             gamma=CFG["gamma"], rho_c=CFG["rho_c"])
+    opts = api.SolverOptions(max_iter=CFG["max_iter"], tol=CFG["tol"])
+    res = api.fit_many(prob, As, bs, options=opts)
+    solo = BiCADMM("squared", BiCADMMConfig(**CFG))
+    for i in range(B):
+        _assert_lane_matches_solo(res, i, solo.fit(As[i], bs[i]))
+
+
+def test_api_fit_many_single_node_3d(data):
+    """(B, m, n) input grows the paper's N=1 node axis automatically."""
+    As, bs = data
+    flat_As = As.reshape(B, N * M, NFEAT)
+    flat_bs = bs.reshape(B, N * M)
+    prob = api.SparseProblem(loss="squared", kappa=CFG["kappa"],
+                             gamma=CFG["gamma"])
+    res = api.fit_many(prob, flat_As, flat_bs,
+                       options=api.SolverOptions(max_iter=100, tol=1e-3))
+    assert res.coef.shape == (B, NFEAT, 1)
+
+
+def test_api_fit_many_sequence_input(data):
+    As, bs = data
+    prob = api.SparseProblem(loss="squared", kappa=CFG["kappa"],
+                             gamma=CFG["gamma"])
+    opts = api.SolverOptions(max_iter=CFG["max_iter"], tol=CFG["tol"])
+    results = api.fit_many(prob, list(As), list(bs), options=opts)
+    assert len(results) == B
+    stacked = api.fit_many(prob, As, bs, options=opts)
+    for i, r in enumerate(results):
+        assert int(r.iters) == int(stacked.iters[i])
+        assert bool(jnp.array_equal(r.support, stacked.support[i]))
+
+
+def test_fleet_capability_negotiation(data):
+    As, bs = data
+    prob = api.SparseProblem(loss="squared", kappa=3)
+    assert api.engine_capabilities("reference", api.SolverOptions()).fleet
+    assert not api.engine_capabilities("sharded").fleet
+    mesh = jax.make_mesh((1, 1), ("nodes", "feat"))
+    with pytest.raises(api.CapabilityError):
+        api.fit_many(prob, As, bs,
+                     options=api.SolverOptions(engine="sharded", mesh=mesh))
+    # the feature-split inner ADMM cannot run in fleet mode
+    fs = api.SolverOptions(n_feature_blocks=3, force_feature_split=True)
+    assert not api.engine_capabilities("reference", fs).fleet
+    with pytest.raises((api.CapabilityError, ValueError)):
+        api.fit_many(prob, As, bs, options=fs)

@@ -158,3 +158,48 @@ def test_hinge_prox_closed_form_cases():
     # middle: clamp to margin 1
     w = loss.prox_omega(jnp.asarray([0.9]), jnp.asarray([1.0]), c)
     assert abs(float(w[0]) - 1.0) < 1e-6
+
+
+# ------------------------------------------------- fleet (batched) maps --
+@pytest.mark.parametrize("name", ["squared", "logistic", "hinge",
+                                  "smoothed_hinge"])
+def test_batched_maps_match_per_problem(name):
+    """value_many / decision_many / predict_many over a stacked fleet
+    equal the per-problem maps applied in a loop."""
+    loss = get_loss(name)
+    rng = np.random.default_rng(0)
+    B, m = 4, 12
+    preds = jnp.asarray(rng.standard_normal((B, m)), jnp.float32)
+    bs = jnp.asarray(np.sign(rng.standard_normal((B, m))), jnp.float32)
+    if name == "squared":
+        bs = jnp.asarray(rng.standard_normal((B, m)), jnp.float32)
+    vals = loss.value_many(preds, bs)
+    assert vals.shape == (B,)
+    for i in range(B):
+        np.testing.assert_allclose(float(vals[i]),
+                                   float(loss.value(preds[i], bs[i])),
+                                   rtol=1e-6)
+        np.testing.assert_array_equal(
+            np.asarray(loss.decision_many(preds)[i]),
+            np.asarray(loss.decision(preds[i])))
+        np.testing.assert_array_equal(
+            np.asarray(loss.predict_many(preds)[i]),
+            np.asarray(loss.predict(preds[i])))
+
+
+def test_batched_maps_softmax():
+    """Multiclass: (B, m, C) logits -> (B,) sums / (B, m) argmax labels."""
+    loss = make_softmax(3)
+    rng = np.random.default_rng(1)
+    B, m = 3, 10
+    logits = jnp.asarray(rng.standard_normal((B, m, 3)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 3, (B, m)), jnp.int32)
+    vals = loss.value_many(logits, labels)
+    preds = loss.predict_many(logits)
+    assert vals.shape == (B,) and preds.shape == (B, m)
+    for i in range(B):
+        np.testing.assert_allclose(float(vals[i]),
+                                   float(loss.value(logits[i], labels[i])),
+                                   rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(preds[i]),
+                                      np.asarray(loss.predict(logits[i])))
