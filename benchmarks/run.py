@@ -16,7 +16,7 @@ import argparse
 import time
 
 from . import (fig1_convergence, fig23_scaling, fig4_transfer, fleet_bench,
-               path_sweep, proj_bench, roofline, table1_compare,
+               path_sweep, proj_bench, roofline, serve_bench, table1_compare,
                xupdate_bench)
 
 
@@ -36,6 +36,8 @@ def main() -> None:
         xupdate_bench.main(smoke=True)
         print("# Fleet fitting — vmapped driver vs solo-fit loop (smoke)")
         fleet_bench.main(smoke=True)
+        print("# Fitting service — open-loop latency, cold vs warm (smoke)")
+        serve_bench.main(smoke=True)
         print(f"# total {time.time() - t0:.1f}s")
         return
     print("# Fig 1 — residual convergence vs rho_b")
@@ -54,6 +56,8 @@ def main() -> None:
     xupdate_bench.main(full=args.full)
     print("# Fleet fitting — vmapped driver vs solo-fit loop")
     fleet_bench.main(full=args.full)
+    print("# Fitting service — open-loop latency, cold vs warm")
+    serve_bench.main(full=args.full)
     print("# Roofline — from dry-run records")
     roofline.main()
     print(f"# total {time.time() - t0:.1f}s")

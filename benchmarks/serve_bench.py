@@ -1,0 +1,183 @@
+"""Open-loop load benchmark for the fitting service (repro.serve).
+
+A Poisson arrival process submits fit requests to a running
+:class:`~repro.serve.FittingService` — open loop, so the submission
+schedule never waits on completions and queueing delay shows up honestly
+in the latency numbers. Three phases over >= 2 shape signatures
+(feature widths):
+
+1. ``compile`` (unmeasured): throwaway clients pay XLA compilation for
+   every dispatch shape the arrival process produces.
+2. ``cold``: fresh client ids — every lane cold-starts.
+3. ``warm``: the same clients refit on perturbed labels — every lane
+   resumes from the warm pool.
+
+Reported per (phase, signature): request count, latency p50 / p99 (ms),
+and fits/sec. The serving claim under test: warm-refit p50 below
+cold-fit p50 on the same signature, because resumed lanes converge in
+far fewer ADMM iterations. Non-smoke runs save
+``benchmarks/results/serve_bench.json``.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench            # CPU-scaled
+    PYTHONPATH=src python -m benchmarks.serve_bench --smoke    # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import time
+
+import numpy as np
+
+import repro.api as api
+from repro.serve import LatencyRecorder
+
+from .common import save_json
+
+
+def synth(rng, n: int, m: int, kappa: int):
+    """One synthetic sparse-regression problem with an exactly
+    ``kappa``-sparse planted signal, so a correctly-specified fit
+    converges well before ``max_iter`` (the warm-vs-cold comparison is
+    then about iterations, not about lanes saturating the budget)."""
+    X = rng.standard_normal((m, n)).astype(np.float32)
+    w = np.zeros(n)
+    idx = rng.choice(n, kappa, replace=False)
+    w[idx] = rng.standard_normal(kappa) + np.sign(rng.standard_normal(kappa))
+    y = (X @ w + 0.01 * rng.standard_normal(m)).astype(np.float32)
+    return X, y
+
+
+async def open_loop_phase(service, jobs, rate_hz: float):
+    """Submit ``jobs`` = [(client_id, X, y, kappa), ...] with exponential
+    interarrival times at ``rate_hz``; returns (elapsed_s, outcomes) where
+    each outcome is (client_id, latency_s, ServeResult)."""
+    rng = np.random.default_rng(1234)
+
+    async def one(cid, X, y, kappa):
+        t0 = time.perf_counter()
+        res = await service.submit_fit(X, y, kappa=kappa, client_id=cid)
+        return cid, time.perf_counter() - t0, res
+
+    t_start = time.perf_counter()
+    tasks = []
+    for cid, X, y, kappa in jobs:
+        tasks.append(asyncio.ensure_future(one(cid, X, y, kappa)))
+        await asyncio.sleep(rng.exponential(1.0 / rate_hz))
+    outcomes = await asyncio.gather(*tasks)
+    return time.perf_counter() - t_start, outcomes
+
+
+def make_jobs(rng, widths, clients_per_sig: int, reps: int, *,
+              prefix: str, data=None):
+    """Interleaved job list over all signatures. With ``data`` (a dict from
+    a previous call), reuse each client's X and perturb y — the warm-refit
+    workload; otherwise generate fresh problems and record them."""
+    jobs, store = [], data if data is not None else {}
+    for r in range(reps):
+        for n in widths:
+            for c in range(clients_per_sig):
+                cid = f"{prefix}-{c}-r{r}-n{n}"
+                if data is None:
+                    X, y = synth(rng, n, m=2 * n, kappa=max(2, n // 4))
+                    store[cid] = (X, y, n)
+                else:
+                    X, y0, _ = store[cid]
+                    y = y0 + 0.01 * rng.standard_normal(
+                        y0.shape).astype(np.float32)
+                jobs.append((cid, X, y, max(2, n // 4)))
+    return jobs, store
+
+
+def phase_stats(phase: str, widths, outcomes, elapsed: float):
+    """Per-signature latency percentiles + throughput rows."""
+    rows = []
+    for n in widths:
+        rec = LatencyRecorder()
+        iters = []
+        for cid, lat, res in outcomes:
+            if res.signature.n == n:
+                rec.record(lat)
+                iters.append(int(res.result.iters))
+        s = rec.summary()
+        rows.append(dict(
+            phase=phase, n=n, count=s["count"],
+            p50_ms=round(s["p50"] * 1e3, 2), p99_ms=round(s["p99"] * 1e3, 2),
+            fits_per_s=round(s["count"] / elapsed, 1),
+            mean_iters=round(float(np.mean(iters)), 1) if iters else None))
+    return rows
+
+
+async def run_bench(widths, clients_per_sig, reps, rate_hz, max_batch,
+                    max_wait_s):
+    """Compile / cold / warm phases against one service; returns rows +
+    the final metrics snapshot."""
+    rng = np.random.default_rng(0)
+    problem = api.SparseProblem(loss="squared", kappa=4, gamma=5.0)
+    service = api.serve(
+        problem, options=api.SolverOptions(max_iter=200, tol=1e-3),
+        serve_options=api.ServeOptions(max_batch=max_batch,
+                                       max_wait_s=max_wait_s))
+    rows = []
+    async with service:
+        jobs, _ = make_jobs(rng, widths, clients_per_sig, reps,
+                            prefix="compile")
+        await open_loop_phase(service, jobs, rate_hz)
+
+        jobs, data = make_jobs(rng, widths, clients_per_sig, reps,
+                               prefix="bench")
+        elapsed, outcomes = await open_loop_phase(service, jobs, rate_hz)
+        assert not any(r.warm for _, _, r in outcomes)
+        rows += phase_stats("cold", widths, outcomes, elapsed)
+
+        jobs, _ = make_jobs(rng, widths, clients_per_sig, reps,
+                            prefix="bench", data=data)
+        elapsed, outcomes = await open_loop_phase(service, jobs, rate_hz)
+        assert all(r.warm for _, _, r in outcomes)
+        rows += phase_stats("warm", widths, outcomes, elapsed)
+    return rows, service.snapshot()
+
+
+def main(smoke: bool = False, full: bool = False) -> None:
+    """Run the bench; non-smoke runs write benchmarks/results/serve_bench.json."""
+    if smoke:
+        widths, clients, reps, rate = [8, 12], 2, 2, 200.0
+        max_batch, max_wait_s = 8, 0.005
+    elif full:
+        widths, clients, reps, rate = [32, 64, 128], 8, 6, 50.0
+        max_batch, max_wait_s = 32, 0.010
+    else:
+        widths, clients, reps, rate = [16, 32], 6, 4, 50.0
+        max_batch, max_wait_s = 16, 0.010
+
+    rows, snap = asyncio.run(run_bench(
+        widths, clients, reps, rate, max_batch, max_wait_s))
+    print("phase,n,count,p50_ms,p99_ms,fits_per_s,mean_iters")
+    for r in rows:
+        print(f"{r['phase']},{r['n']},{r['count']},{r['p50_ms']},"
+              f"{r['p99_ms']},{r['fits_per_s']},{r['mean_iters']}")
+    for n in widths:
+        cold = next(r for r in rows if r["phase"] == "cold" and r["n"] == n)
+        warm = next(r for r in rows if r["phase"] == "warm" and r["n"] == n)
+        ratio = warm["p50_ms"] / cold["p50_ms"] if cold["p50_ms"] else float("nan")
+        print(f"# n={n}: warm p50 / cold p50 = {ratio:.2f}x "
+              f"({warm['p50_ms']} ms vs {cold['p50_ms']} ms)")
+    print(f"# batches={snap['batches']} pad_lanes={snap['pad_lanes']} "
+          f"warm_hits={snap['warm_hits']} "
+          f"driver_compiles={snap['driver_compiles']} "
+          f"driver_hits={snap['driver_hits']}")
+    if not smoke:
+        path = save_json("serve_bench.json", dict(
+            config=dict(widths=widths, clients_per_sig=clients, reps=reps,
+                        rate_hz=rate, max_batch=max_batch,
+                        max_wait_s=max_wait_s),
+            rows=rows, metrics=snap))
+        print(f"# saved {path}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    ap.add_argument("--full", action="store_true", help="larger sizes")
+    a = ap.parse_args()
+    main(smoke=a.smoke, full=a.full)

@@ -61,7 +61,9 @@ __all__ = [
     "CapabilityError",
     "Capabilities",
     "FitResult",
+    "FittingService",
     "FleetResult",
+    "ServeOptions",
     "SolverOptions",
     "SparseEstimator",
     "SparseLinearRegression",
@@ -73,11 +75,24 @@ __all__ = [
     "engine_capabilities",
     "fit_many",
     "select_engine",
+    "serve",
     "solve",
     "solve_grid",
     "solve_path",
     "split_legacy_config",
 ]
+
+# The serving layer is re-exported lazily: ``repro.serve`` imports this
+# module at its own import time, so a top-level import here would cycle.
+_SERVE_EXPORTS = ("FittingService", "ServeOptions")
+
+
+def __getattr__(name: str):
+    """Lazy re-export of the serving-layer types named in ``__all__``."""
+    if name in _SERVE_EXPORTS:
+        from . import serve as _serve
+        return getattr(_serve, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 ENGINES = ("auto", "reference", "sharded")
 SHARDED_PROJECTIONS = ("ladder_exact", "exact", "batched", "bisect")
@@ -125,6 +140,8 @@ class SparseProblem:
             raise ValueError("softmax needs n_classes >= 2")
 
     def resolve_loss(self) -> Loss:
+        """The registry :class:`Loss` this problem names (pass-through
+        when constructed with a ``Loss`` instance directly)."""
         if isinstance(self.loss, Loss):
             return self.loss
         return get_loss(self.loss, self.n_classes)
@@ -193,6 +210,9 @@ class SolverOptions:
 
     @property
     def use_feature_split(self) -> bool:
+        """Whether these options activate the feature-split inner ADMM
+        (which bakes penalties into cached per-block factors — see the
+        footnotes on :func:`engine_capabilities`)."""
         return self.n_feature_blocks > 1 or self.force_feature_split
 
 
@@ -238,6 +258,7 @@ class Capabilities:
     gather_free: bool          # O(B)-collective projections, no O(d) gather
     warm_start: bool = True    # resumable state / warm-started paths
     fleet: bool = False        # fit_many: vmapped batch of B problems
+    serve: bool = False        # FittingService micro-batching (needs fleet)
 
 
 def engine_capabilities(engine: str, options: SolverOptions | None = None
@@ -252,7 +273,7 @@ def engine_capabilities(engine: str, options: SolverOptions | None = None
         return Capabilities(engine="reference", distributed=False,
                             dynamic_penalties=dyn, per_solve_overrides=True,
                             penalty_grids=dyn, grid_strategy="vmap",
-                            gather_free=False, fleet=dyn)
+                            gather_free=False, fleet=dyn, serve=dyn)
     if engine == "sharded":
         return Capabilities(
             engine="sharded", distributed=True, dynamic_penalties=False,
@@ -310,6 +331,15 @@ def _check_fleet(caps: Capabilities) -> None:
             "with n_feature_blocks=1")
 
 
+def _check_serve(caps: Capabilities) -> None:
+    if not caps.serve:
+        raise CapabilityError(
+            f"the {caps.engine!r} engine (as configured) cannot back the "
+            "fitting service (Capabilities.serve=False): micro-batching "
+            "dispatches through the vmapped fleet driver — use the "
+            "reference engine with n_feature_blocks=1")
+
+
 # --------------------------------------------------------------------------
 # engine adapters — one uniform surface over the two engines
 # --------------------------------------------------------------------------
@@ -336,6 +366,7 @@ class _ReferenceAdapter:
 
     def fit(self, As, bs, *, kappa=None, gamma=None, rho_c=None,
             state=None) -> FitResult:
+        """One solve; overrides / ``state`` route through ``run_from``."""
         overrides = dict(kappa=kappa, gamma=gamma, rho_c=rho_c)
         if state is None and all(v is None for v in overrides.values()):
             return self.solver.fit(As, bs)
@@ -344,28 +375,34 @@ class _ReferenceAdapter:
 
     def fit_path(self, As, bs, kappas, *, gammas=None, rho_cs=None,
                  warm_start=True) -> SparsePath:
+        """Warm-started hyperparameter path (one compiled scan)."""
         _check_sweep(self.caps, gammas, rho_cs)
         return _ref_fit_path(self.solver, As, bs, kappas, gammas=gammas,
                              rho_cs=rho_cs, warm_start=warm_start)
 
     def fit_grid(self, As, bs, kappas, *, gammas=None, rho_cs=None
                  ) -> SparsePath:
+        """Independent cold fits of the grid, vmap-batched."""
         _check_sweep(self.caps, gammas, rho_cs)
         return _ref_fit_grid(self.solver, As, bs, kappas, gammas=gammas,
                              rho_cs=rho_cs)
 
     def fit_many_stacked(self, As, bs, *, kappas=None, gammas=None,
-                         rho_cs=None, states=None) -> FleetResult:
+                         rho_cs=None, states=None,
+                         iter_caps=None) -> FleetResult:
+        """Stacked fleet fit (capability-checked adapter entry)."""
         _check_fleet(self.caps)
         return _ref_fit_many_stacked(self.solver, As, bs, kappas=kappas,
                                      gammas=gammas, rho_cs=rho_cs,
-                                     states=states)
+                                     states=states, iter_caps=iter_caps)
 
     def fit_many(self, problems, *, kappas=None, gammas=None,
-                 rho_cs=None) -> list[FitResult]:
+                 rho_cs=None, on_bucket=None) -> list[FitResult]:
+        """Heterogeneous fleet fit (capability-checked adapter entry)."""
         _check_fleet(self.caps)
         return _ref_fit_many(self.solver, problems, kappas=kappas,
-                             gammas=gammas, rho_cs=rho_cs)
+                             gammas=gammas, rho_cs=rho_cs,
+                             on_bucket=on_bucket)
 
 
 class _ShardedAdapter:
@@ -389,6 +426,7 @@ class _ShardedAdapter:
 
     def fit(self, As, bs, *, kappa=None, gamma=None, rho_c=None,
             state=None, **kw) -> FitResult:
+        """One sharded solve (no per-solve hyperparameter overrides)."""
         if not (kappa is None and gamma is None and rho_c is None):
             raise CapabilityError(
                 "per-solve kappa/gamma/rho_c overrides are unavailable on "
@@ -400,6 +438,7 @@ class _ShardedAdapter:
 
     def fit_path(self, As, bs, kappas, *, gammas=None, rho_cs=None,
                  warm_start=True, **kw) -> SparsePath:
+        """Warm-started kappa path: one shard_map + scan call."""
         _check_sweep(self.caps, gammas, rho_cs)
         A, b = self._flat(As, bs)
         return self.solver.fit_path(A, b, kappas, warm_start=warm_start,
@@ -421,6 +460,7 @@ class _ShardedAdapter:
         _check_fleet(self.caps)
 
     def fit_many(self, problems, **kw) -> list[FitResult]:
+        """Unsupported on the sharded engine; raises ``CapabilityError``."""
         _check_fleet(self.caps)
 
 
@@ -480,7 +520,7 @@ def _stack_many(Xs, ys):
 
 def fit_many(problem: SparseProblem, Xs, ys, *, kappas=None, gammas=None,
              rho_cs=None, options: SolverOptions | None = None,
-             states=None) -> FleetResult | list[FitResult]:
+             states=None, iter_caps=None) -> FleetResult | list[FitResult]:
     """Fit a FLEET of B independent instances of ``problem`` — one vmapped
     masked Bi-cADMM driver instead of B compiled calls.
 
@@ -502,7 +542,9 @@ def fit_many(problem: SparseProblem, Xs, ys, *, kappas=None, gammas=None,
     backends exactly like a hyperparameter path. Per-problem convergence
     is masked: each lane matches a solo ``fit`` of that problem exactly in
     iteration count and support, with iterates equal to fp round-off
-    (``tests/test_fleet.py``).
+    (``tests/test_fleet.py``). ``iter_caps`` (stacked input only) caps
+    each lane's iteration budget below ``max_iter`` — the serving plane's
+    per-lane deadline abort.
 
     Fleet fitting is capability-negotiated (``Capabilities.fleet``): it
     runs on the reference engine; ``engine="sharded"`` raises
@@ -515,14 +557,41 @@ def fit_many(problem: SparseProblem, Xs, ys, *, kappas=None, gammas=None,
         if not isinstance(ys, (list, tuple)) or len(ys) != len(Xs):
             raise ValueError("sequence input needs per-problem ys of the "
                              "same length as Xs")
-        if states is not None:
-            raise ValueError("states= warm starts require stacked-array "
+        if states is not None or iter_caps is not None:
+            raise ValueError("states=/iter_caps= require stacked-array "
                              "input (one shape signature)")
         return adapter.fit_many(list(zip(Xs, ys)), kappas=kappas,
                                 gammas=gammas, rho_cs=rho_cs)
     As, bs = _stack_many(Xs, ys)
     return adapter.fit_many_stacked(As, bs, kappas=kappas, gammas=gammas,
-                                    rho_cs=rho_cs, states=states)
+                                    rho_cs=rho_cs, states=states,
+                                    iter_caps=iter_caps)
+
+
+def serve(problem: SparseProblem, *, options: SolverOptions | None = None,
+          serve_options=None, clock=None):
+    """Construct the always-on :class:`~repro.serve.FittingService` for
+    ``problem`` — the request-level entry point over the fleet engine.
+
+    The service accepts fit / predict requests (``await service.fit(X, y,
+    client_id=..., deadline=...)``), micro-batches compatible requests by
+    ``(N, n, loss)`` shape signature into one fleet-driver call, caches
+    compiled drivers per signature, and warm-starts returning clients
+    from an LRU state pool. Start it with ``async with service:`` (or
+    ``await service.start()``); see ``docs/serving.md`` for the operator
+    runbook.
+
+    Serving is capability-negotiated (``Capabilities.serve``): it needs
+    the vmapped fleet driver, so the reference engine backs it and
+    ``engine="sharded"`` (or the feature-split sub-solver) raises
+    :class:`CapabilityError` here, before any service machinery spins up.
+    """
+    options = options if options is not None else SolverOptions()
+    engine = "reference" if options.engine == "auto" else options.engine
+    _check_serve(engine_capabilities(engine, options))
+    from .serve import FittingService
+    kw = {} if clock is None else {"clock": clock}
+    return FittingService(problem, options, serve_options, **kw)
 
 
 def solve_grid(problem: SparseProblem, X, y, kappas, *,
@@ -589,6 +658,8 @@ class SparseEstimator:
     # Capabilities; pre-fit introspection goes through the module-level
     # ``engine_capabilities`` / ``select_engine``)
     def fit(self, X, y, *, state=None) -> "SparseEstimator":
+        """Fit on ``(X, y)``; ``state=`` warm-starts from a previous
+        result's ``.state``. Returns ``self`` (sklearn convention)."""
         As, bs = _stack(X, y)
         adapter = self._adapter(As)
         self._set_fitted(adapter, adapter.fit(As, bs, state=state))

@@ -382,16 +382,21 @@ class BiCADMM:
         return jax.lax.while_loop(cond, step, st0)
 
     # -- fleet (batched-problem) driver ------------------------------------
-    def _fleet_active(self, st: BiCADMMState) -> Array:
+    def _fleet_active(self, st: BiCADMMState, iter_caps=None) -> Array:
         """(B,) mask of lanes still iterating: not converged, budget left.
-        The per-lane predicate is exactly the solo driver's ``cond``."""
+        The per-lane predicate is exactly the solo driver's ``cond``;
+        ``iter_caps`` (an optional (B,) int vector) tightens the iteration
+        budget per lane — the serving plane translates request deadlines
+        into caps, and zero-cap lanes never run (batch-axis padding)."""
         cfg = self.cfg
         converged = ((st.p_r < cfg.tol) & (st.d_r < cfg.tol)
                      & (st.b_r < cfg.tol))
-        return (~converged) & (st.k < cfg.max_iter)
+        budget = (cfg.max_iter if iter_caps is None
+                  else jnp.minimum(iter_caps, cfg.max_iter))
+        return (~converged) & (st.k < budget)
 
     def _run_while_fleet(self, factors, As, bs, params: SolveParams,
-                         st0: BiCADMMState) -> BiCADMMState:
+                         st0: BiCADMMState, iter_caps=None) -> BiCADMMState:
         """Masked-step batched while-loop: every argument carries a leading
         problem axis B (data, factors, per-problem ``SolveParams`` entries,
         and the state). One compiled loop runs while ANY lane is active;
@@ -401,14 +406,19 @@ class BiCADMM:
         (certified in ``tests/test_fleet.py``). The wasted step compute of
         frozen lanes is the price of one fused program; for fleets of
         similar problems the slowest lane dominates anyway.
+
+        ``iter_caps`` caps each lane's iteration budget below the config's
+        ``max_iter`` (per-lane deadline abort); a cap of 0 makes the lane
+        inert from step one, which is how the serving micro-batcher pads
+        the batch axis to a cached compile shape at zero solver cost.
         """
         step = jax.vmap(self._step, in_axes=(0, 0, 0, 0, 0))
 
         def cond(st: BiCADMMState):
-            return jnp.any(self._fleet_active(st))
+            return jnp.any(self._fleet_active(st, iter_caps))
 
         def body(st: BiCADMMState):
-            active = self._fleet_active(st)
+            active = self._fleet_active(st, iter_caps)
             new = step(factors, As, bs, params, st)
 
             def freeze(n, o):

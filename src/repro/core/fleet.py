@@ -156,6 +156,19 @@ def init_fleet_state(solver: BiCADMM, B: int, N: int, n: int,
         inner=None)
 
 
+def zero_lane_state(solver: BiCADMM, N: int, n: int, dt) -> BiCADMMState:
+    """A solo-shaped zero state — the cold lane of a mixed warm/cold stack
+    (``stack_states``); equal to ``BiCADMM.init_state``'s zero state."""
+    return jax.tree.map(lambda a: a[0], init_fleet_state(solver, 1, N, n, dt))
+
+
+def stack_states(states) -> BiCADMMState:
+    """Stack B solo-shaped states (e.g. warm-pool entries plus
+    :func:`zero_lane_state` cold lanes) into one fleet state with lane
+    axis 0 — the inverse of ``FleetResult[i].state`` slicing."""
+    return jax.tree.map(lambda *leaves: jnp.stack(leaves), *states)
+
+
 def reset_fleet_for_resume(st: BiCADMMState) -> BiCADMMState:
     """Batched counterpart of ``bicadmm.reset_for_resume``: zero every
     lane's counter and residuals (fresh, non-aliased buffers so the state
@@ -171,11 +184,12 @@ def reset_fleet_for_resume(st: BiCADMMState) -> BiCADMMState:
 # --------------------------------------------------------------------------
 # the one compiled fleet program
 # --------------------------------------------------------------------------
-def _fleet_run_impl(solver, N, dyn, As, bs, params, factors, st0):
+def _fleet_run_impl(solver, N, dyn, As, bs, params, factors, st0,
+                    iter_caps):
     """Masked batched while-loop + per-lane finalization, as one jitted
     program (module-level jit: the compile cache persists across calls,
     keyed on solver instance + shapes, like the path engine's scan)."""
-    st = solver._run_while_fleet(factors, As, bs, params, st0)
+    st = solver._run_while_fleet(factors, As, bs, params, st0, iter_caps)
     outs = jax.vmap(
         lambda A, b, s, p: _point_outputs(solver, A, b, s, p))(
             As, bs, st, params)
@@ -192,7 +206,8 @@ _fleet_run_donated = jax.jit(_fleet_run_impl, static_argnums=(0, 1, 2),
 
 def fit_many_stacked(solver: BiCADMM, As: Array, bs: Array, *,
                      kappas=None, gammas=None, rho_cs=None,
-                     states: BiCADMMState | None = None) -> FleetResult:
+                     states: BiCADMMState | None = None,
+                     iter_caps=None) -> FleetResult:
     """Fit B stacked problems ``As (B, N, m, n)`` / ``bs (B, N, m)`` in one
     vmapped driver with per-problem hyperparameters and per-problem
     convergence.
@@ -201,7 +216,12 @@ def fit_many_stacked(solver: BiCADMM, As: Array, bs: Array, *,
     solver config fills whichever the caller does not vary. ``states``
     warm-starts every lane from a previous :class:`FleetResult`'s
     ``.state`` (counters/residuals are reset, iterates kept; the state is
-    donated — keep using the returned ``result.state``).
+    donated — keep using the returned ``result.state``). ``iter_caps`` is
+    an optional (B,) int vector of per-lane iteration budgets below the
+    config's ``max_iter`` — the serving plane translates per-request
+    deadlines into caps (a capped-out lane returns its best iterate so
+    far, flagged by ``iters == cap`` with residuals above ``tol``), and a
+    cap of 0 marks an inert batch-axis padding lane.
     """
     As, bs = jnp.asarray(As), jnp.asarray(bs)
     if As.ndim != 4:
@@ -210,12 +230,17 @@ def fit_many_stacked(solver: BiCADMM, As: Array, bs: Array, *,
     bs = bs.reshape(B, N, m)
     kaps, gams, rhos, dyn = _fleet_grids(solver, B, kappas, gammas, rho_cs,
                                          As.dtype)
+    if iter_caps is not None:
+        iter_caps = jnp.asarray(iter_caps, jnp.int32)
+        if iter_caps.shape != (B,):
+            raise ValueError(f"iter_caps must be a (B,) = ({B},) vector, "
+                             f"got shape {iter_caps.shape}")
     factors = _fleet_setup(solver, As, bs, dyn)
     params = _fleet_params(solver, N, kaps, gams, rhos, dyn)
     st0 = (init_fleet_state(solver, B, N, n, As.dtype) if states is None
            else reset_fleet_for_resume(states))
     run = _fleet_run if _is_traced(As, bs, st0) else _fleet_run_donated
-    st, outs = run(solver, N, dyn, As, bs, params, factors, st0)
+    st, outs = run(solver, N, dyn, As, bs, params, factors, st0, iter_caps)
     coef = outs["x"].reshape(B, n, solver.loss.n_classes)
     return FleetResult(coef, outs["z"], outs["support"], outs["iters"],
                        outs["p_r"], outs["d_r"], outs["b_r"],
@@ -300,12 +325,17 @@ def _subset(vals, idxs):
 
 
 def fit_many(solver: BiCADMM, problems, *, kappas=None, gammas=None,
-             rho_cs=None) -> list[FitResult]:
+             rho_cs=None, on_bucket=None) -> list[FitResult]:
     """Fit a heterogeneous list of ``(X, y)`` problems: bucket by shape
     signature, solve each bucket with :func:`fit_many_stacked`, and
     scatter the per-problem :class:`FitResult` views back to the caller's
     order. ``kappas`` / ``gammas`` / ``rho_cs`` are optional per-problem
-    sequences aligned with ``problems``."""
+    sequences aligned with ``problems``.
+
+    ``on_bucket`` is the batch-close hook: called with each
+    :class:`FleetBucket` after it closes (data stacked and padded) and
+    before it is solved — the serving plane's metrics layer observes batch
+    composition through it."""
     problems = list(problems)
     for name, vals in (("kappas", kappas), ("gammas", gammas),
                        ("rho_cs", rho_cs)):
@@ -314,6 +344,8 @@ def fit_many(solver: BiCADMM, problems, *, kappas=None, gammas=None,
                              f"({len(problems)}), got {len(vals)}")
     results: list[FitResult | None] = [None] * len(problems)
     for bucket in bucket_problems(problems):
+        if on_bucket is not None:
+            on_bucket(bucket)
         sub = fit_many_stacked(
             solver, bucket.As, bucket.bs,
             kappas=_subset(kappas, bucket.indices),

@@ -1,83 +1,109 @@
-"""Batched serving driver: continuous-batching prefill + decode loop.
+"""Run the always-on fitting service on a synthetic demo workload.
 
-Requests arrive with different prompt lengths; the server left-pads to a
-bucket, prefills the batch once, then decodes greedily with the KV cache,
-retiring finished sequences in place. CPU-scale demo:
+This is the operator-facing entry point for ``repro.serve`` (runbook:
+``docs/serving.md``): it starts a :class:`~repro.serve.FittingService`,
+submits a mixed-signature stream of sparse-regression fit requests
+(several feature widths, per-request kappa, returning clients), then
+prints the metrics snapshot — request latencies, batch composition, warm
+pool hit rate, compiled driver shapes. CPU-scale demo:
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
-      --requests 8 --max-new 32
+  PYTHONPATH=src python -m repro.launch.serve --requests 32 --clients 8
+
+The open-loop latency *benchmark* (Poisson arrivals, committed p50/p99
+rows) lives in ``benchmarks/serve_bench.py``; this driver is the smallest
+real end-to-end run of the serving plane.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import asyncio
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ARCH_NAMES, get_config, reduced_config
-from repro.models import zoo
+import repro.api as api
 
 
-def serve_batch(cfg, params, prompts: np.ndarray, max_new: int):
-    """prompts (B, S0) int32 -> generated tokens (B, max_new)."""
-    B, S0 = prompts.shape
-    max_seq = S0 + max_new
-    batch = {"tokens": jnp.asarray(prompts)}
-    if cfg.family == "audio":
-        batch["frames"] = jnp.zeros((B, S0, cfg.d_model),
-                                    jnp.dtype(cfg.dtype))
-    if cfg.family == "vlm":
-        batch["patches"] = jnp.zeros((B, cfg.frontend_len, cfg.d_model),
-                                     jnp.dtype(cfg.dtype))
-    n_front = cfg.frontend_len if cfg.family == "vlm" else 0
+def make_request_data(rng, n: int, m: int, kappa: int):
+    """One synthetic sparse-recovery problem (X (m, n), y (m,)) with an
+    exactly ``kappa``-sparse planted signal (so a correctly-specified fit
+    converges)."""
+    X = rng.standard_normal((m, n)).astype(np.float32)
+    w = np.zeros(n)
+    idx = rng.choice(n, kappa, replace=False)
+    w[idx] = rng.standard_normal(kappa) + np.sign(rng.standard_normal(kappa))
+    y = (X @ w + 0.01 * rng.standard_normal(m)).astype(np.float32)
+    return X, y
 
-    prefill = jax.jit(lambda p, b: zoo.prefill(p, cfg, b,
-                                               max_seq=max_seq + n_front))
-    step = jax.jit(lambda p, b, c: zoo.decode_step(p, cfg, b, c))
 
-    t0 = time.time()
-    logits, cache = prefill(params, batch)
-    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
-    t_prefill = time.time() - t0
-
-    out = [tok]
-    t0 = time.time()
-    for i in range(max_new - 1):
-        pos = jnp.asarray(S0 + n_front + i, jnp.int32)
-        logits, cache = step(params, {"token": tok, "pos": pos}, cache)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-    gen = jnp.concatenate(out, axis=1)
-    return np.asarray(gen), {"prefill_s": t_prefill, "decode_s": t_decode,
-                             "decode_tok_s": B * (max_new - 1)
-                             / max(t_decode, 1e-9)}
+async def run_demo(service, *, requests: int, clients: int, widths,
+                   seed: int = 0) -> list:
+    """Submit ``requests`` fits round-robin over ``clients`` returning
+    client ids and the signature ``widths``; a second pass refits every
+    client warm. Returns the resolved ServeResults."""
+    rng = np.random.default_rng(seed)
+    futures, last_data = [], {}
+    for i in range(requests):
+        n = widths[i % len(widths)]
+        X, y = make_request_data(rng, n, m=2 * n, kappa=max(2, n // 4))
+        cid = f"client-{i % clients}-n{n}"
+        last_data[cid] = (X, y, n)
+        futures.append(service.submit_fit(
+            X, y, kappa=max(2, n // 4), client_id=cid))
+    first = await asyncio.gather(*futures)
+    # returning clients: same ids, slightly perturbed labels -> the warm
+    # pool resumes near the previous solution instead of cold-starting
+    refits = []
+    for cid, (X, y, n) in last_data.items():
+        y2 = y + 0.01 * rng.standard_normal(y.shape).astype(np.float32)
+        refits.append(service.submit_fit(
+            X, y2, kappa=max(2, n // 4), client_id=cid))
+    second = await asyncio.gather(*refits)
+    return list(first) + list(second)
 
 
 def main(argv=None) -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-8b", choices=ARCH_NAMES)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--max-new", type=int, default=32)
+    """CLI entry: start the service, run the demo workload, print stats."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--widths", type=int, nargs="+", default=[12, 24],
+                    help="feature counts -> distinct shape signatures")
+    ap.add_argument("--kappa", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--max-wait-ms", type=float, default=10.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI-sized run")
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.requests, args.clients, args.widths = 8, 4, [8, 12]
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = reduced_config(cfg)
-    params = zoo.init_params(jax.random.PRNGKey(0), cfg)
-    rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab_size,
-                           (args.requests, args.prompt_len), dtype=np.int32)
-    gen, stats = serve_batch(cfg, params, prompts, args.max_new)
-    print(f"arch={cfg.name} requests={args.requests} "
-          f"prefill {stats['prefill_s']:.2f}s  "
-          f"decode {stats['decode_tok_s']:.1f} tok/s")
-    print("sample:", gen[0, :16].tolist())
+    problem = api.SparseProblem(loss="squared", kappa=args.kappa, gamma=5.0)
+    service = api.serve(
+        problem, options=api.SolverOptions(max_iter=200, tol=1e-3),
+        serve_options=api.ServeOptions(max_batch=args.max_batch,
+                                       max_wait_s=args.max_wait_ms / 1e3))
+
+    async def _run():
+        async with service:
+            return await run_demo(service, requests=args.requests,
+                                  clients=args.clients, widths=args.widths)
+
+    results = asyncio.run(_run())
+    warm = sum(r.warm for r in results)
+    snap = service.snapshot()
+    lat = snap["latency_s"]
+    print(f"served {len(results)} fits over {len(args.widths)} signatures: "
+          f"{warm} warm-pool resumes, {snap['batches']} micro-batches, "
+          f"{snap['compiled_shapes']} compiled shapes "
+          f"({snap['driver_hits']} driver-cache hits)")
+    print(f"latency p50 {lat['p50'] * 1e3:.1f} ms  "
+          f"p99 {lat['p99'] * 1e3:.1f} ms  (includes first-compile cost; "
+          f"see benchmarks/serve_bench.py for steady-state rows)")
+    mean_iters = float(np.mean([int(r.result.iters) for r in results]))
+    warm_iters = [int(r.result.iters) for r in results if r.warm]
+    if warm_iters:
+        print(f"iterations: {mean_iters:.0f} mean overall, "
+              f"{float(np.mean(warm_iters)):.0f} mean on warm resumes")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,47 @@
+"""Serving layer: the always-on fitting service over the fleet engine.
+
+The estimator API fits one problem per call; this package turns the
+toolbox into a server — the production posture the ROADMAP's north star
+names. Four pieces, one per module:
+
+* :mod:`repro.serve.plane`   — :class:`FittingService`, the async request
+  plane (admission, deadlines, cancellation, the intake / solver loops).
+* :mod:`repro.serve.batcher` — the micro-batcher: signature grouping,
+  bounded-staleness close policy, compile-shape quantization, and the
+  per-batch fleet dispatch.
+* :mod:`repro.serve.store`   — the warm pool: per-client resumable ADMM
+  state with LRU eviction, so returning clients refit warm.
+* :mod:`repro.serve.metrics` — counters and latency percentiles, with the
+  operator glossary that ``docs/serving.md`` renders.
+
+Entry points: :func:`repro.api.serve` (capability-checked construction) or
+:class:`FittingService` directly; ``python -m repro.launch.serve`` runs a
+synthetic demo workload and ``benchmarks/serve_bench.py`` the open-loop
+latency benchmark. Operator runbook: ``docs/serving.md``.
+"""
+from .batcher import (DeadlineExceeded, DriverCache, FitRequest,
+                      MicroBatcher, ServeResult, Signature, next_pow2,
+                      solve_batch)
+from .metrics import GLOSSARY, LatencyRecorder, ServeMetrics
+from .plane import FittingService, ServeOptions, ServiceStopped
+from .store import WarmEntry, WarmPool, pytree_nbytes
+
+__all__ = [
+    "DeadlineExceeded",
+    "DriverCache",
+    "FitRequest",
+    "FittingService",
+    "GLOSSARY",
+    "LatencyRecorder",
+    "MicroBatcher",
+    "ServeMetrics",
+    "ServeOptions",
+    "ServeResult",
+    "ServiceStopped",
+    "Signature",
+    "WarmEntry",
+    "WarmPool",
+    "next_pow2",
+    "pytree_nbytes",
+    "solve_batch",
+]

@@ -1,0 +1,368 @@
+"""Micro-batcher: group compatible fit requests by shape signature and
+dispatch each closed batch through one fleet-driver call.
+
+Deng, Lai, Peng & Yin (arxiv 1312.3040) justify solving many independent
+consensus sub-problems as one parallel ADMM sweep; the fleet driver
+(``repro.core.fleet``) is that sweep, and this module is the admission
+layer above it:
+
+* **Grouping.** Requests are compatible when they share a
+  :class:`Signature` — ``(N, n, loss, n_classes)``. The sample count ``m``
+  is *not* part of the signature: within a batch, every lane is zero-row
+  padded to a common ``m`` exactly as the fleet bucketing layer pads
+  heterogeneous problems (exact in exact arithmetic; see
+  ``repro.core.fleet``). Per-request ``kappa`` / ``gamma`` / ``rho_c``
+  ride the fleet driver's per-lane hyperparameter vectors.
+* **Close policy (bounded staleness).** A pending batch closes when it
+  reaches ``max_batch`` lanes or has been open ``max_wait_s`` — whichever
+  comes first. The wait bound is the admission analogue of the bounded
+  staleness in Zhu et al. (arxiv 1802.08882): a closing batch does not
+  wait for stragglers; late requests simply open the next batch.
+* **Compile-shape quantization.** The dispatch pads ``m`` and the batch
+  axis ``B`` up to powers of two (padding lanes are inert — per-lane
+  iteration cap 0), so live traffic resolves to a handful of compiled
+  shapes. :class:`DriverCache` keeps one engine adapter per model key and
+  records which dispatch shapes have already compiled: a warm signature
+  never retraces (the generalization of the PR 3 data-keyed setup caches
+  to the serving plane).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.fleet import (_pad_loss_unit, stack_states, zero_lane_state)
+from ..core.results import FitResult
+from .metrics import ServeMetrics
+from .store import WarmEntry, WarmPool
+
+
+class DeadlineExceeded(Exception):
+    """A request's deadline passed before it was solved; the request was
+    dropped cleanly (no partial result, no hang)."""
+
+
+class Signature(NamedTuple):
+    """The compatibility key of a fit request: requests sharing it can
+    ride one fleet batch (``m`` is padded per batch, hyperparameters are
+    per-lane)."""
+    N: int              # node-stacking depth of the data layout
+    n: int              # feature count
+    loss: str           # registry loss name
+    n_classes: int      # K (1 for the scalar losses)
+
+
+def _normalize_data(X, y):
+    """One request's data to the stacked (N, m, n) / (N, m) layout."""
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    if X.ndim == 2:
+        X, y = X[None], y.reshape(1, -1)
+    if X.ndim != 3:
+        raise ValueError(f"X must be (samples, n) or (N, m, n); "
+                         f"got shape {X.shape}")
+    return X, y.reshape(X.shape[0], X.shape[1])
+
+
+def next_pow2(x: int, floor: int = 1) -> int:
+    """The smallest power of two >= max(x, floor) — the compile-shape
+    quantizer for the batch and sample axes."""
+    x = max(int(x), floor)
+    return 1 << (x - 1).bit_length()
+
+
+@dataclasses.dataclass(eq=False)    # identity semantics: hashable, unique
+class FitRequest:
+    """One admitted fit request, queued until its batch closes.
+
+    ``deadline`` is an absolute monotonic-clock time (or None): before the
+    batch closes it gates admission/expiry; at dispatch the remaining
+    budget is translated into a per-lane iteration cap when the service
+    has a calibrated iteration rate."""
+    X: Any
+    y: Any
+    signature: Signature
+    future: Any                     # asyncio.Future resolving to ServeResult
+    kappa: int | None = None
+    gamma: float | None = None
+    rho_c: float | None = None
+    client_id: str | None = None
+    deadline: float | None = None   # absolute monotonic seconds
+    submitted_at: float = 0.0
+    dispatched_at: float = 0.0
+
+    def alive(self) -> bool:
+        """False once the caller cancelled the future (the batcher then
+        drops the request at close time)."""
+        return not self.future.cancelled()
+
+
+class ServeResult(NamedTuple):
+    """What a fit request resolves to: the per-lane :class:`FitResult`
+    (its ``state`` slice is also in the warm pool) plus serving metadata."""
+    result: FitResult       # coef/z/support/iters/residuals + state slice
+    train_loss: Any         # padded-row-corrected training loss
+    warm: bool              # lane was warm-started from the pool
+    deadline_aborted: bool  # lane hit its deadline iteration cap unconverged
+    batch_lanes: int        # real lanes in the dispatched batch
+    signature: Signature
+    queue_s: float          # pending time, submit -> batch close
+    solve_s: float          # batch solve wall time (shared by the batch)
+
+
+class PendingBatch:
+    """The open (not yet closed) batch of one signature."""
+
+    def __init__(self, signature: Signature, opened_at: float):
+        self.signature = signature
+        self.opened_at = opened_at
+        self.requests: list[FitRequest] = []
+
+
+class MicroBatcher:
+    """Accumulate requests per signature; close on size or age.
+
+    The batcher is clock-explicit (``now`` flows in from the plane's event
+    loop) so the close policy is deterministic under test."""
+
+    def __init__(self, max_batch: int = 32, max_wait_s: float = 0.005):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self._pending: dict[Signature, PendingBatch] = {}
+
+    # -- state ---------------------------------------------------------------
+    @property
+    def pending_requests(self) -> int:
+        """Total queued requests across open batches."""
+        return sum(len(b.requests) for b in self._pending.values())
+
+    # -- the close policy ----------------------------------------------------
+    def add(self, req: FitRequest, now: float) -> PendingBatch | None:
+        """Queue ``req``; returns the closed batch when this request
+        filled it to ``max_batch``, else None."""
+        batch = self._pending.get(req.signature)
+        if batch is None:
+            batch = PendingBatch(req.signature, now)
+            self._pending[req.signature] = batch
+        batch.requests.append(req)
+        if len(batch.requests) >= self.max_batch:
+            del self._pending[req.signature]
+            return batch
+        return None
+
+    def due(self, now: float) -> list[PendingBatch]:
+        """Close and return every batch open longer than ``max_wait_s``
+        (the bounded-staleness close)."""
+        out = []
+        for sig in list(self._pending):
+            batch = self._pending[sig]
+            if now - batch.opened_at >= self.max_wait_s:
+                out.append(batch)
+                del self._pending[sig]
+        return out
+
+    def flush(self) -> list[PendingBatch]:
+        """Close and return everything pending (service drain/stop)."""
+        out = list(self._pending.values())
+        self._pending.clear()
+        return out
+
+    def expire(self, now: float) -> list[FitRequest]:
+        """Remove and return queued requests whose deadline has passed
+        (they get a clean DeadlineExceeded, never a solve); empty batches
+        left behind are dropped."""
+        expired = []
+        for sig in list(self._pending):
+            batch = self._pending[sig]
+            keep = []
+            for r in batch.requests:
+                if r.deadline is not None and now >= r.deadline:
+                    expired.append(r)
+                else:
+                    keep.append(r)
+            batch.requests = keep
+            if not keep:
+                del self._pending[sig]
+        return expired
+
+    def next_event(self, now: float) -> float | None:
+        """The earliest future instant the plane must wake at: a batch
+        aging out or a queued request's deadline. None when idle."""
+        events = []
+        for batch in self._pending.values():
+            events.append(batch.opened_at + self.max_wait_s)
+            events.extend(r.deadline for r in batch.requests
+                          if r.deadline is not None)
+        return min(events) if events else None
+
+
+class DriverCache:
+    """One engine adapter per model key, plus the compiled-shape ledger.
+
+    The fleet driver's jit cache is keyed on the solver *instance* and the
+    dispatch shapes; reusing one adapter per ``(loss, n_classes)`` and
+    quantizing dispatch shapes means a warm signature never retraces.
+    ``seen`` records dispatch shapes already compiled, so the metrics can
+    report hit/compile counts honestly."""
+
+    def __init__(self, problem, options, metrics: ServeMetrics):
+        # late import: repro.api pulls this package in lazily (no cycle)
+        from .. import api as _api
+        self._api = _api
+        self._problem = problem
+        self._options = options
+        self.metrics = metrics
+        self._adapters: dict[tuple, Any] = {}
+        self.seen: set[tuple] = set()
+
+    def adapter(self, sig: Signature):
+        """The (cached) reference-engine adapter solving ``sig``'s model."""
+        key = (sig.loss, sig.n_classes)
+        ad = self._adapters.get(key)
+        if ad is None:
+            problem = self._problem
+            if (sig.loss, sig.n_classes) != (
+                    problem.resolve_loss().name, problem.n_classes):
+                problem = dataclasses.replace(
+                    problem, loss=sig.loss, n_classes=sig.n_classes)
+            ad = self._api.make_adapter(problem, self._options,
+                                        engine="reference")
+            self._adapters[key] = ad
+        return ad
+
+    def note_dispatch(self, shape_sig: tuple) -> None:
+        """Record one dispatch at ``shape_sig`` and count hit vs compile."""
+        if shape_sig in self.seen:
+            self.metrics.bump("driver_hits")
+        else:
+            self.seen.add(shape_sig)
+            self.metrics.bump("driver_compiles")
+
+
+def solve_batch(batch: PendingBatch, drivers: DriverCache, pool: WarmPool,
+                metrics: ServeMetrics, *, iter_rate: float | None = None,
+                pad_shapes: bool = True,
+                clock=time.monotonic) -> list[tuple[FitRequest, Any]]:
+    """Solve one closed batch through the fleet driver; returns
+    ``(request, ServeResult | Exception)`` pairs for the plane to resolve.
+
+    Runs on the service's solver thread. Steps: drop dead lanes, pad
+    ``m``/``B`` to the quantized compile shape, stack per-lane warm states
+    from the pool (zero state for cold lanes — identical to a cold start),
+    translate remaining deadlines into per-lane iteration caps, run
+    ``fit_many_stacked`` via the cached adapter, then scatter results and
+    refresh the pool."""
+    now = clock()
+    sig = batch.signature
+    live, outcomes = [], []
+    for r in batch.requests:
+        if not r.alive():
+            metrics.bump("cancelled")
+        elif r.deadline is not None and now >= r.deadline:
+            metrics.bump("expired")
+            outcomes.append((r, DeadlineExceeded(
+                f"deadline passed {now - r.deadline:.3f}s before the "
+                f"batch closed")))
+        else:
+            live.append(r)
+    if not live:
+        return outcomes
+
+    adapter = drivers.adapter(sig)
+    solver = adapter.solver
+    cfg = solver.cfg
+    dt = jnp.asarray(live[0].X).dtype
+
+    data = [_normalize_data(r.X, r.y) for r in live]
+    m_max = max(X.shape[1] for X, _ in data)
+    m_pad = next_pow2(m_max, floor=8) if pad_shapes else m_max
+    B_real = len(live)
+    B_pad = next_pow2(B_real) if pad_shapes else B_real
+
+    As = jnp.zeros((B_pad, sig.N, m_pad, sig.n), dt)
+    bs = jnp.zeros((B_pad, sig.N, m_pad), dt)
+    for i, (X, y) in enumerate(data):
+        As = As.at[i, :, :X.shape[1], :].set(X.astype(dt))
+        bs = bs.at[i, :, :X.shape[1]].set(y.astype(dt))
+
+    # per-lane hyperparameters (config defaults fill the rest); penalties
+    # stay on the static-factor path unless some lane actually varies them
+    kappas = jnp.asarray(
+        [r.kappa if r.kappa is not None else drivers._problem.kappa
+         for r in live] + [drivers._problem.kappa] * (B_pad - B_real))
+    dyn_pen = any(r.gamma is not None or r.rho_c is not None for r in live)
+    gammas = rho_cs = None
+    if dyn_pen:
+        gammas = jnp.asarray(
+            [r.gamma if r.gamma is not None else cfg.gamma
+             for r in live] + [cfg.gamma] * (B_pad - B_real), dt)
+        rho_cs = jnp.asarray(
+            [r.rho_c if r.rho_c is not None else cfg.rho_c
+             for r in live] + [cfg.rho_c] * (B_pad - B_real), dt)
+
+    # warm-pool lookup: stacked per-lane states (zero = cold start; the
+    # fleet driver resets counters/residuals, so zero state == init state)
+    cold = zero_lane_state(solver, sig.N, sig.n, dt)
+    lane_states, warm = [], []
+    for r in live:
+        entry = (pool.get((r.client_id, sig))
+                 if r.client_id is not None else None)
+        lane_states.append(entry.state if entry is not None else cold)
+        warm.append(entry is not None)
+    lane_states.extend([cold] * (B_pad - B_real))
+    states = stack_states(lane_states)
+
+    # per-lane deadline abort: remaining wall budget -> iteration cap;
+    # padding lanes get cap 0 (inert). ``capped`` marks lanes whose budget
+    # was actually tightened by a deadline — only those can report
+    # ``deadline_aborted`` (hitting the config's own max_iter is not one).
+    caps, capped = [], []
+    for r in live:
+        cap = cfg.max_iter
+        if r.deadline is not None and iter_rate is not None:
+            cap = max(1, min(cfg.max_iter,
+                             int((r.deadline - now) * iter_rate)))
+        caps.append(cap)
+        capped.append(cap < cfg.max_iter)
+    iter_caps = jnp.asarray(caps + [0] * (B_pad - B_real), jnp.int32)
+
+    shape_sig = (sig, B_pad, m_pad, bool(dyn_pen))
+    drivers.note_dispatch(shape_sig)
+    t0 = clock()
+    fleet = adapter.fit_many_stacked(As, bs, kappas=kappas, gammas=gammas,
+                                     rho_cs=rho_cs, states=states,
+                                     iter_caps=iter_caps)
+    jax.block_until_ready(fleet.z)
+    solve_s = clock() - t0
+    metrics.solve_s.record(solve_s)
+    metrics.bump("batches")
+    metrics.bump("batch_lanes", B_real)
+    metrics.bump("pad_lanes", B_pad - B_real)
+
+    pad_unit = _pad_loss_unit(solver)
+    tol = cfg.tol
+    for i, r in enumerate(live):
+        lane = fleet[i]
+        m_i = data[i][0].shape[1]
+        aborted = bool(
+            capped[i] and int(fleet.iters[i]) >= int(iter_caps[i])
+            and (float(fleet.p_r[i]) >= tol or float(fleet.d_r[i]) >= tol
+                 or float(fleet.b_r[i]) >= tol))
+        if aborted:
+            metrics.bump("deadline_aborted")
+        train_loss = (float(fleet.train_loss[i])
+                      - sig.N * (m_pad - m_i) * pad_unit)
+        if r.client_id is not None:
+            pool.put((r.client_id, sig),
+                     WarmEntry(state=lane.state, coef=lane.coef,
+                               support=lane.support))
+        outcomes.append((r, ServeResult(
+            result=lane, train_loss=train_loss, warm=warm[i],
+            deadline_aborted=aborted, batch_lanes=B_real, signature=sig,
+            queue_s=t0 - r.submitted_at, solve_s=solve_s)))
+    return outcomes

@@ -1,0 +1,110 @@
+"""Serving-plane metrics: counters + latency recorders with percentiles.
+
+Every number the service exposes is defined here once, with its glossary
+entry (``GLOSSARY``) — ``docs/serving.md`` renders the same table, so the
+operator-facing names cannot drift from the code. All recording happens on
+the service's event loop or its single solver thread; the recorders are
+plain Python (no locks) because each instance is only ever written from
+one of those two places and read via :meth:`ServeMetrics.snapshot`.
+"""
+from __future__ import annotations
+
+import math
+
+GLOSSARY = {
+    "requests": "fit requests submitted to the plane (admitted or not)",
+    "admitted": "requests that entered the micro-batcher queue",
+    "rejected": "requests refused at admission (already past deadline, "
+                "or the service is stopped)",
+    "expired": "queued requests whose deadline passed before their batch "
+               "closed — failed with DeadlineExceeded, never solved",
+    "cancelled": "requests whose future was cancelled while queued; "
+                 "dropped at batch close",
+    "completed": "requests resolved with a ServeResult",
+    "deadline_aborted": "completed lanes that hit their deadline-derived "
+                        "iteration cap before converging (best iterate "
+                        "returned, flagged on the result)",
+    "batches": "micro-batches dispatched into the fleet driver",
+    "batch_lanes": "total real (non-padding) lanes across all batches",
+    "pad_lanes": "inert batch-axis padding lanes (iteration cap 0) added "
+                 "to reach a cached compile shape",
+    "warm_hits": "lanes warm-started from the pool (client state found)",
+    "warm_misses": "lanes cold-started (client unknown or evicted)",
+    "evictions": "warm-pool entries evicted by the LRU policy",
+    "driver_hits": "batches dispatched at an already-compiled shape "
+                   "signature (no retrace)",
+    "driver_compiles": "batches that compiled a new shape signature",
+    "latency_s": "request wall time, submit to future resolution",
+    "queue_s": "request wall time spent pending in the micro-batcher",
+    "solve_s": "batch wall time inside the fleet driver (per batch)",
+}
+
+
+class LatencyRecorder:
+    """Append-only latency series with percentile readout (seconds)."""
+
+    def __init__(self) -> None:
+        self._samples: list[float] = []
+
+    def record(self, seconds: float) -> None:
+        """Append one sample."""
+        self._samples.append(float(seconds))
+
+    def __len__(self) -> int:
+        return len(self._samples)
+
+    def percentile(self, p: float) -> float:
+        """The p-th percentile (0..100) by linear interpolation; NaN when
+        no samples have been recorded."""
+        if not self._samples:
+            return math.nan
+        xs = sorted(self._samples)
+        if len(xs) == 1:
+            return xs[0]
+        rank = (p / 100.0) * (len(xs) - 1)
+        lo = int(rank)
+        hi = min(lo + 1, len(xs) - 1)
+        return xs[lo] + (rank - lo) * (xs[hi] - xs[lo])
+
+    def mean(self) -> float:
+        """Arithmetic mean of the samples; NaN when empty."""
+        if not self._samples:
+            return math.nan
+        return sum(self._samples) / len(self._samples)
+
+    def summary(self) -> dict:
+        """count / mean / p50 / p90 / p99 / max, as a plain dict."""
+        if not self._samples:
+            return dict(count=0)
+        return dict(count=len(self._samples), mean=self.mean(),
+                    p50=self.percentile(50), p90=self.percentile(90),
+                    p99=self.percentile(99), max=max(self._samples))
+
+
+class ServeMetrics:
+    """All counters and latency series of one :class:`FittingService`."""
+
+    COUNTERS = ("requests", "admitted", "rejected", "expired", "cancelled",
+                "completed", "deadline_aborted", "batches", "batch_lanes",
+                "pad_lanes", "warm_hits", "warm_misses", "evictions",
+                "driver_hits", "driver_compiles")
+
+    def __init__(self) -> None:
+        for name in self.COUNTERS:
+            setattr(self, name, 0)
+        self.latency_s = LatencyRecorder()
+        self.queue_s = LatencyRecorder()
+        self.solve_s = LatencyRecorder()
+
+    def bump(self, name: str, by: int = 1) -> None:
+        """Increment the named counter."""
+        setattr(self, name, getattr(self, name) + by)
+
+    def snapshot(self) -> dict:
+        """One plain dict of every counter plus latency summaries —
+        stable keys, JSON-serializable (the bench commits these rows)."""
+        out = {name: getattr(self, name) for name in self.COUNTERS}
+        out["latency_s"] = self.latency_s.summary()
+        out["queue_s"] = self.queue_s.summary()
+        out["solve_s"] = self.solve_s.summary()
+        return out

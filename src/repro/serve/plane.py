@@ -1,0 +1,292 @@
+"""Async request plane: the always-on fitting service over the fleet
+engine.
+
+:class:`FittingService` is the step from toolbox to server named in the
+ROADMAP: callers submit fit / predict requests; the plane admits them onto
+an asyncio queue, the micro-batcher groups compatible requests by
+:class:`~repro.serve.batcher.Signature` and closes batches on size or age
+(bounded staleness), and each closed batch runs as ONE fleet-driver call
+on a dedicated solver thread — the event loop never blocks on a solve, so
+requests keep accumulating into the next batch while the current one runs
+(exactly the dynamics micro-batching exists for).
+
+Request lifecycle::
+
+    submit -> admission (deadline / running checks)
+           -> micro-batcher (pending, per-signature)
+           -> batch close (size == max_batch, or age >= max_wait_s)
+           -> solver thread (one fit_many_stacked call, warm states
+              stacked from the pool, deadlines -> per-lane iteration caps)
+           -> future resolves to a ServeResult (or DeadlineExceeded /
+              CancelledError)
+
+Deadlines are enforced at three points: admission (already-expired
+requests are rejected), while queued (an expiring request fails cleanly
+without ever being solved), and inside the solver (remaining wall budget
+translates to a per-lane iteration cap when ``deadline_iter_rate`` is
+calibrated — the lane returns its best iterate, flagged
+``deadline_aborted``). Cancelling the returned future while the request
+is queued drops it at batch close.
+
+Warm starts are transparent: pass a stable ``client_id`` and the client's
+previous ADMM state is stacked into the batch from the
+:class:`~repro.serve.store.WarmPool` (LRU-bounded), so a returning
+client's refit resumes instead of cold-starting; ``ServeResult.warm``
+reports which happened.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import jax.numpy as jnp
+
+from .batcher import (DeadlineExceeded, DriverCache, FitRequest,
+                      MicroBatcher, ServeResult, Signature, solve_batch)
+from .metrics import ServeMetrics
+from .store import WarmPool
+
+_STOP = object()
+
+
+class ServiceStopped(RuntimeError):
+    """The service is not running (never started, or already stopped)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeOptions:
+    """Serving-plane knobs (solver knobs stay in ``SolverOptions``).
+
+    ``max_batch`` / ``max_wait_s`` set the micro-batch close policy:
+    a batch closes when full or when its oldest request has waited
+    ``max_wait_s`` — the bounded-staleness admission bound. The warm pool
+    is bounded by ``warm_pool_entries`` and optionally
+    ``warm_pool_bytes``. ``deadline_iter_rate`` (outer iterations per
+    second, measured for the deployment by ``serve_bench``) enables the
+    per-lane deadline abort; None disables it (deadlines then only gate
+    admission and queue expiry). ``pad_shapes`` quantizes dispatch shapes
+    (``m``, batch axis) to powers of two so live traffic compiles a
+    handful of driver programs instead of one per batch size."""
+    max_batch: int = 32
+    max_wait_s: float = 0.005
+    warm_pool_entries: int = 512
+    warm_pool_bytes: int | None = None
+    deadline_iter_rate: float | None = None
+    pad_shapes: bool = True
+
+
+class FittingService:
+    """The always-on fitting service: an async request plane over the
+    fleet engine.
+
+    Construct with a default :class:`~repro.api.SparseProblem` (per-request
+    ``kappa`` / ``gamma`` / ``rho_c`` / ``loss`` override it), optional
+    :class:`~repro.api.SolverOptions`, and :class:`ServeOptions`; prefer
+    :func:`repro.api.serve`, which capability-checks the engine first.
+
+    >>> service = FittingService(problem)
+    >>> async with service:
+    ...     res = await service.fit(X, y, client_id="u1", deadline=0.5)
+    ...     res.result.coef, res.warm
+    ...     yhat = await service.predict(X_new, client_id="u1")
+    """
+
+    def __init__(self, problem, options=None, serve_options=None, *,
+                 clock=time.monotonic):
+        from .. import api as _api
+        self.problem = problem
+        self.options = options if options is not None else _api.SolverOptions()
+        self.serve_options = (serve_options if serve_options is not None
+                              else ServeOptions())
+        self._clock = clock
+        self.metrics = ServeMetrics()
+        self.pool = WarmPool(self.serve_options.warm_pool_entries,
+                             self.serve_options.warm_pool_bytes,
+                             metrics=self.metrics)
+        self.drivers = DriverCache(problem, self.options, self.metrics)
+        self._batcher = MicroBatcher(self.serve_options.max_batch,
+                                     self.serve_options.max_wait_s)
+        self._running = False
+        self._queue: asyncio.Queue | None = None
+        self._solve_queue: asyncio.Queue | None = None
+        self._intake_task = None
+        self._solver_task = None
+        self._executor: ThreadPoolExecutor | None = None
+
+    # -- lifecycle -----------------------------------------------------------
+    async def start(self) -> "FittingService":
+        """Start the intake and solver loops (idempotent)."""
+        if self._running:
+            return self
+        self._queue = asyncio.Queue()
+        self._solve_queue = asyncio.Queue()
+        self._executor = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="bicadmm-serve")
+        self._intake_task = asyncio.ensure_future(self._intake_loop())
+        self._solver_task = asyncio.ensure_future(self._solver_loop())
+        self._running = True
+        return self
+
+    async def stop(self, drain: bool = True) -> None:
+        """Stop the plane. ``drain=True`` (default) closes and solves
+        everything still pending first; ``drain=False`` fails pending
+        requests with :class:`ServiceStopped`."""
+        if not self._running:
+            return
+        self._running = False
+        await self._queue.put(_STOP)
+        await self._intake_task
+        batches = self._batcher.flush()
+        if drain:
+            for batch in batches:
+                await self._solve_queue.put(batch)
+        else:
+            for batch in batches:
+                for req in batch.requests:
+                    if not req.future.done():
+                        req.future.set_exception(
+                            ServiceStopped("service stopped before solve"))
+        await self._solve_queue.put(_STOP)
+        await self._solver_task
+        self._executor.shutdown(wait=True)
+
+    async def __aenter__(self) -> "FittingService":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # -- the request surface -------------------------------------------------
+    def _signature(self, X, loss: str | None,
+                   n_classes: int | None) -> Signature:
+        X = jnp.asarray(X)
+        N = X.shape[0] if X.ndim == 3 else 1
+        n = X.shape[-1]
+        if loss is None:
+            loss = self.problem.resolve_loss().name
+            if n_classes is None:
+                n_classes = self.problem.n_classes
+        return Signature(N=N, n=int(n), loss=loss,
+                         n_classes=int(n_classes or 1))
+
+    def submit_fit(self, X, y, *, kappa=None, gamma=None, rho_c=None,
+                   loss=None, n_classes=None, client_id=None,
+                   deadline=None) -> asyncio.Future:
+        """Admit one fit request; returns the future resolving to its
+        :class:`~repro.serve.batcher.ServeResult`. ``deadline`` is
+        seconds from now; cancel the future to withdraw a queued
+        request."""
+        self.metrics.bump("requests")
+        loop = asyncio.get_running_loop()
+        future = loop.create_future()
+        now = self._clock()
+        if not self._running:
+            self.metrics.bump("rejected")
+            future.set_exception(ServiceStopped("service is not running"))
+            return future
+        if deadline is not None and deadline <= 0:
+            self.metrics.bump("rejected")
+            future.set_exception(DeadlineExceeded(
+                f"deadline {deadline!r}s is already in the past"))
+            return future
+        req = FitRequest(
+            X=X, y=y, signature=self._signature(X, loss, n_classes),
+            future=future, kappa=kappa, gamma=gamma, rho_c=rho_c,
+            client_id=client_id,
+            deadline=None if deadline is None else now + deadline,
+            submitted_at=now)
+        self.metrics.bump("admitted")
+        self._queue.put_nowait(req)
+        return future
+
+    async def fit(self, X, y, **kw) -> ServeResult:
+        """Submit one fit request and await its result."""
+        return await self.submit_fit(X, y, **kw)
+
+    async def predict(self, X, *, client_id, loss=None):
+        """Predict from the client's last fitted model in the warm pool
+        (no solver work, not batched); raises LookupError when the client
+        has no resident model for this feature count."""
+        X = jnp.asarray(X)
+        if X.ndim == 3:
+            X = X.reshape(-1, X.shape[-1])
+        n = X.shape[-1]
+        for key, entry in self.pool.client_entries(client_id):
+            sig = key[1]
+            if sig.n == n and (loss is None or sig.loss == loss):
+                from ..core.losses import get_loss
+                scores = X @ entry.coef
+                scores = scores[:, 0] if sig.n_classes == 1 else scores
+                return get_loss(sig.loss, sig.n_classes).predict(scores)
+        raise LookupError(
+            f"no warm model for client {client_id!r} with n={n} "
+            f"(cold client, or evicted from the pool)")
+
+    def snapshot(self) -> dict:
+        """Metrics snapshot plus pool / batcher occupancy."""
+        out = self.metrics.snapshot()
+        out["pool_entries"] = len(self.pool)
+        out["pool_nbytes"] = self.pool.nbytes
+        out["pending_requests"] = self._batcher.pending_requests
+        out["compiled_shapes"] = len(self.drivers.seen)
+        return out
+
+    # -- internal loops ------------------------------------------------------
+    async def _intake_loop(self) -> None:
+        while True:
+            now = self._clock()
+            nxt = self._batcher.next_event(now)
+            item = None
+            try:
+                if nxt is None:
+                    item = await self._queue.get()
+                else:
+                    item = await asyncio.wait_for(
+                        self._queue.get(), timeout=max(0.0, nxt - now))
+            except asyncio.TimeoutError:
+                pass
+            if item is _STOP:
+                return
+            now = self._clock()
+            closed = []
+            if item is not None:
+                full = self._batcher.add(item, now)
+                if full is not None:
+                    closed.append(full)
+            for req in self._batcher.expire(now):
+                self.metrics.bump("expired")
+                if not req.future.done():
+                    req.future.set_exception(DeadlineExceeded(
+                        "deadline passed while the request was queued"))
+            closed.extend(self._batcher.due(now))
+            for batch in closed:
+                await self._solve_queue.put(batch)
+
+    async def _solver_loop(self) -> None:
+        loop = asyncio.get_running_loop()
+        while True:
+            batch = await self._solve_queue.get()
+            if batch is _STOP:
+                return
+            outcomes = await loop.run_in_executor(
+                self._executor, self._solve, batch)
+            now = self._clock()
+            for req, out in outcomes:
+                if req.future.done():
+                    continue
+                if isinstance(out, Exception):
+                    req.future.set_exception(out)
+                else:
+                    self.metrics.bump("completed")
+                    self.metrics.latency_s.record(now - req.submitted_at)
+                    self.metrics.queue_s.record(out.queue_s)
+                    req.future.set_result(out)
+
+    def _solve(self, batch):
+        """Runs on the solver thread: one fleet-driver call per batch."""
+        return solve_batch(
+            batch, self.drivers, self.pool, self.metrics,
+            iter_rate=self.serve_options.deadline_iter_rate,
+            pad_shapes=self.serve_options.pad_shapes, clock=self._clock)

@@ -1,0 +1,123 @@
+"""Warm-pool state store: per-client resumable ADMM state with LRU
+eviction.
+
+A returning client's refit should resume from its previous solver state
+(``BiCADMM.init_state`` / ``run_from`` / ``fit_many_stacked(states=...)``
+already support this) instead of paying a cold start. This module is the
+missing piece named in the ROADMAP: a bounded store mapping
+``(client_id, model signature)`` to the client's last
+:class:`~repro.core.bicadmm.BiCADMMState` slice and fitted coefficients.
+
+The state's shape depends only on ``(N, n, K)`` — not on the sample count
+``m`` — so a client whose data grows between refits still warm-starts
+(zero-row padding inside the batcher is exact; see ``repro.core.fleet``).
+
+Eviction is plain LRU over entries, with an optional byte ceiling on the
+summed state sizes: serving millions of users means the pool holds the
+*recently active* slice of them, and an evicted client simply pays one
+cold fit on return. Eviction counts flow to :class:`ServeMetrics`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any
+
+import jax
+
+from .metrics import ServeMetrics
+
+
+def pytree_nbytes(tree) -> int:
+    """Total device-buffer bytes of a pytree (the eviction accounting)."""
+    return sum(leaf.nbytes for leaf in jax.tree.leaves(tree)
+               if hasattr(leaf, "nbytes"))
+
+
+@dataclasses.dataclass
+class WarmEntry:
+    """One client's resumable solver state and last fitted model."""
+    state: Any          # solo-shaped BiCADMMState (warm-start iterates)
+    coef: Any           # (n, K) last fitted coefficients (serves predict)
+    support: Any        # (n*K,) bool support mask of the last fit
+    nbytes: int = 0     # state + coef bytes, for the pool's byte ceiling
+    fits: int = 0       # how many times this client has been fitted
+
+    def __post_init__(self):
+        if self.nbytes == 0:
+            self.nbytes = pytree_nbytes((self.state, self.coef))
+
+
+class WarmPool:
+    """LRU store of :class:`WarmEntry` keyed by ``(client_id, signature)``.
+
+    ``max_entries`` bounds the entry count; ``max_bytes`` (optional)
+    additionally bounds the summed ``nbytes`` — whichever is exceeded
+    first evicts from the least-recently-used end. Both ``get`` and
+    ``put`` refresh recency.
+    """
+
+    def __init__(self, max_entries: int = 512,
+                 max_bytes: int | None = None,
+                 metrics: ServeMetrics | None = None):
+        if max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
+        self.max_entries = max_entries
+        self.max_bytes = max_bytes
+        self.metrics = metrics if metrics is not None else ServeMetrics()
+        self._entries: OrderedDict[tuple, WarmEntry] = OrderedDict()
+        self._nbytes = 0
+
+    # -- introspection -------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._entries
+
+    @property
+    def nbytes(self) -> int:
+        """Summed ``nbytes`` of the resident entries."""
+        return self._nbytes
+
+    # -- the LRU protocol ----------------------------------------------------
+    def get(self, key: tuple) -> WarmEntry | None:
+        """The entry for ``key`` (refreshed to most-recently-used), or
+        None. Hit/miss counts flow to the metrics."""
+        entry = self._entries.get(key)
+        if entry is None:
+            self.metrics.bump("warm_misses")
+            return None
+        self._entries.move_to_end(key)
+        self.metrics.bump("warm_hits")
+        return entry
+
+    def peek(self, key: tuple) -> WarmEntry | None:
+        """Like :meth:`get` without refreshing recency or counting —
+        for read-only paths (predict) that should not perturb eviction."""
+        return self._entries.get(key)
+
+    def put(self, key: tuple, entry: WarmEntry) -> None:
+        """Insert/replace ``key`` (most-recently-used), then evict from
+        the LRU end until both capacity bounds hold again."""
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self._nbytes -= old.nbytes
+            entry.fits = old.fits
+        entry.fits += 1
+        self._entries[key] = entry
+        self._nbytes += entry.nbytes
+        while len(self._entries) > self.max_entries or (
+                self.max_bytes is not None
+                and self._nbytes > self.max_bytes
+                and len(self._entries) > 1):
+            _, evicted = self._entries.popitem(last=False)
+            self._nbytes -= evicted.nbytes
+            self.metrics.bump("evictions")
+
+    def client_entries(self, client_id) -> list[tuple[tuple, WarmEntry]]:
+        """Every resident ``(key, entry)`` belonging to ``client_id`` —
+        the predict path's lookup when only the client is known (linear in
+        pool size; the pool is bounded)."""
+        return [(k, e) for k, e in self._entries.items()
+                if k[0] == client_id]

@@ -1,7 +1,14 @@
 """Public-API snapshot: the exported names of ``repro.api`` and
 ``repro.core`` are part of the contract. Additions are deliberate (update
 the snapshot in the same PR); removals or accidental leaks of internals
-fail the build here instead of in downstream code."""
+fail the build here instead of in downstream code.
+
+Also the docstring audit: CI runs ruff's pydocstyle D1 rules over the
+user-facing modules; ``test_public_surface_is_documented`` is the local
+ast-based backstop of the same gate (ruff is a CI-only dependency)."""
+import ast
+import pathlib
+
 import repro.api as api
 import repro.core as core
 
@@ -9,7 +16,9 @@ API_SURFACE = {
     "CapabilityError",
     "Capabilities",
     "FitResult",
+    "FittingService",
     "FleetResult",
+    "ServeOptions",
     "SolverOptions",
     "SparseEstimator",
     "SparseLinearRegression",
@@ -21,6 +30,7 @@ API_SURFACE = {
     "engine_capabilities",
     "fit_many",
     "select_engine",
+    "serve",
     "solve",
     "solve_grid",
     "solve_path",
@@ -69,6 +79,42 @@ def test_core_surface_snapshot():
     assert set(core.__all__) == CORE_SURFACE
     missing = [n for n in core.__all__ if not hasattr(core, n)]
     assert not missing, f"__all__ names missing from repro.core: {missing}"
+
+
+DOCSTRING_AUDIT = ["src/repro/api.py", "src/repro/core/results.py",
+                   "src/repro/serve"]    # keep in sync with ci.yml
+
+
+def _missing_docstrings(path: pathlib.Path) -> list[str]:
+    tree = ast.parse(path.read_text())
+    missing = []
+    if ast.get_docstring(tree) is None:
+        missing.append(f"{path}:1: module")
+
+    def walk(node, private_scope=False):
+        for child in ast.iter_child_nodes(node):
+            if not isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.ClassDef)):
+                continue
+            private = private_scope or child.name.startswith("_")
+            # mirrors the CI gate: D1 minus D105 (magic) / D107 (__init__)
+            if not private and ast.get_docstring(child) is None:
+                missing.append(f"{path}:{child.lineno}: {child.name}")
+            if isinstance(child, ast.ClassDef):
+                walk(child, private)
+    walk(tree)
+    return missing
+
+
+def test_public_surface_is_documented():
+    root = pathlib.Path(__file__).resolve().parent.parent
+    missing = []
+    for target in DOCSTRING_AUDIT:
+        p = root / target
+        for f in (sorted(p.glob("*.py")) if p.is_dir() else [p]):
+            missing += _missing_docstrings(f)
+    assert not missing, "undocumented public definitions:\n" + "\n".join(
+        missing)
 
 
 def test_legacy_result_names_are_the_unified_types():

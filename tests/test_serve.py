@@ -1,0 +1,364 @@
+"""The serving plane (``repro.serve``), certified differentially.
+
+The contract under test:
+
+* a micro-batched lane produces the SAME fit as a solo ``api.solve`` of
+  that request — same iteration count and support, iterates within the
+  fp round-off band — even when the batch mixes sample counts (zero-row
+  padding) and pads the batch axis to a compile shape;
+* deadlines fail cleanly at every stage (admission, queued, at close) —
+  a DeadlineExceeded, never a hang or a partial result;
+* a returning client's refit warm-starts from the pool and converges in
+  fewer iterations than its cold fit;
+* the warm pool's LRU eviction bounds entries and bytes;
+* per-lane iteration caps clamp the fleet driver exactly (cap 0 lanes
+  are inert), and the driver cache never recompiles a seen shape.
+"""
+import asyncio
+from concurrent.futures import Future as ThreadFuture
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.core import fleet as fleet_mod
+from repro.serve import (DeadlineExceeded, DriverCache, FitRequest,
+                         MicroBatcher, ServeMetrics, ServeOptions,
+                         ServiceStopped, Signature, WarmEntry, WarmPool,
+                         next_pow2, pytree_nbytes, solve_batch)
+
+Z_TOL = dict(rtol=0.0, atol=5e-5)   # fp round-off band for f32 iterates
+
+PROBLEM = api.SparseProblem(loss="squared", kappa=3, gamma=5.0)
+OPTIONS = api.SolverOptions(max_iter=300, tol=1e-3)
+SIG = Signature(N=1, n=10, loss="squared", n_classes=1)
+
+
+def _request_data(seed, n=10, m=24, kappa=3):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((m, n)).astype(np.float32)
+    w = np.zeros(n)
+    w[rng.choice(n, kappa, replace=False)] = 1.0 + rng.random(kappa)
+    y = (X @ w + 0.01 * rng.standard_normal(m)).astype(np.float32)
+    return X, y
+
+
+def _req(X, y, sig=SIG, **kw):
+    kw.setdefault("future", ThreadFuture())
+    return FitRequest(X=X, y=y, signature=sig, **kw)
+
+
+@pytest.fixture(scope="module")
+def drivers():
+    return DriverCache(PROBLEM, OPTIONS, ServeMetrics())
+
+
+def _dispatch(reqs, drivers, pool=None, metrics=None, now=10.0, **kw):
+    batcher = MicroBatcher(max_batch=64)
+    for r in reqs:
+        batcher.add(r, now)
+    (batch,) = batcher.flush()
+    return solve_batch(batch, drivers,
+                       pool if pool is not None else WarmPool(),
+                       metrics if metrics is not None else drivers.metrics,
+                       clock=lambda: now, **kw)
+
+
+# --------------------------------------------------------------------------
+# the batcher: grouping, close policy, padding
+# --------------------------------------------------------------------------
+def test_batcher_groups_by_signature_and_closes_on_size():
+    b = MicroBatcher(max_batch=2, max_wait_s=1.0)
+    X, y = _request_data(0)
+    other = Signature(N=1, n=7, loss="squared", n_classes=1)
+    assert b.add(_req(X, y), now=0.0) is None
+    assert b.add(_req(X, y, sig=other), now=0.0) is None
+    full = b.add(_req(X, y), now=0.0)        # second of SIG -> closes
+    assert full is not None and full.signature == SIG
+    assert len(full.requests) == 2
+    assert b.pending_requests == 1           # the other signature still open
+
+
+def test_batcher_closes_on_age_not_before():
+    b = MicroBatcher(max_batch=8, max_wait_s=0.5)
+    X, y = _request_data(0)
+    b.add(_req(X, y), now=0.0)
+    assert b.due(now=0.4) == []
+    assert b.next_event(now=0.0) == pytest.approx(0.5)
+    (batch,) = b.due(now=0.5)
+    assert len(batch.requests) == 1 and b.pending_requests == 0
+
+
+def test_batched_lanes_match_solo_fits(drivers):
+    """The differential core: mixed-m requests batched (zero-row padded,
+    batch axis padded to a power of two) reproduce solo api.solve fits."""
+    reqs, solos = [], []
+    for seed, m, kappa in [(1, 24, 3), (2, 17, 3), (3, 24, 2)]:
+        X, y = _request_data(seed, m=m, kappa=kappa)
+        reqs.append(_req(X, y, kappa=kappa))
+        solos.append(api.solve(
+            api.SparseProblem(loss="squared", kappa=kappa, gamma=5.0),
+            X, y, options=OPTIONS))
+    outcomes = _dispatch(reqs, drivers)
+    assert len(outcomes) == 3
+    for (req, out), solo in zip(outcomes, solos):
+        assert not isinstance(out, Exception)
+        assert out.batch_lanes == 3
+        assert int(out.result.iters) == int(solo.iters)
+        assert bool(jnp.array_equal(out.result.support, solo.support))
+        np.testing.assert_allclose(out.result.coef, solo.coef, **Z_TOL)
+    # padded-row loss correction: the short-m lane's train_loss must match
+    # the same request dispatched alone with no shape padding at all
+    (_, alone), = _dispatch(
+        [_req(reqs[1].X, reqs[1].y, kappa=reqs[1].kappa)],
+        drivers, pad_shapes=False)
+    np.testing.assert_allclose(outcomes[1][1].train_loss, alone.train_loss,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pad_shapes_quantizes_dispatch(drivers):
+    X, y = _request_data(4, m=20)
+    metrics = ServeMetrics()
+    _dispatch([_req(X, y) for _ in range(3)], drivers, metrics=metrics)
+    # 3 live lanes -> B padded to 4; m=20 -> 32
+    assert metrics.batch_lanes == 3 and metrics.pad_lanes == 1
+    assert any(shape[1] == 4 and shape[2] == 32 for shape in drivers.seen)
+
+
+def test_driver_cache_hits_do_not_recompile(drivers):
+    metrics = ServeMetrics()
+    cache = DriverCache(PROBLEM, OPTIONS, metrics)
+    cache.adapter(SIG)
+    assert cache.adapter(SIG) is cache._adapters[("squared", 1)]
+    cache.note_dispatch((SIG, 4, 32, False))
+    cache.note_dispatch((SIG, 4, 32, False))
+    cache.note_dispatch((SIG, 8, 32, False))
+    assert metrics.driver_compiles == 2 and metrics.driver_hits == 1
+
+
+def test_next_pow2():
+    assert [next_pow2(x) for x in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
+    assert next_pow2(3, floor=8) == 8
+
+
+# --------------------------------------------------------------------------
+# warm pool: resume + eviction
+# --------------------------------------------------------------------------
+def test_warm_refit_resumes_with_fewer_iterations(drivers):
+    X, y = _request_data(5)
+    pool = WarmPool()
+    (r1, out1), = _dispatch([_req(X, y, client_id="c1")], drivers, pool=pool)
+    assert not out1.warm
+    # refit the same data: resuming from the converged state must cost
+    # far fewer iterations than the cold solve did
+    (r2, out2), = _dispatch([_req(X, y, client_id="c1")], drivers, pool=pool)
+    assert out2.warm
+    assert int(out2.result.iters) < int(out1.result.iters)
+    np.testing.assert_allclose(out2.result.coef, out1.result.coef, **Z_TOL)
+    # the warm fit still solves the new problem: supports stay kappa-sized
+    assert int(out2.result.support.sum()) == PROBLEM.kappa
+
+
+def test_warm_resume_differential_vs_run_from(drivers):
+    """A warm lane reproduces the solo resume (api.solve(state=...))."""
+    X, y = _request_data(7)
+    pool = WarmPool()
+    _dispatch([_req(X, y, client_id="c1")], drivers, pool=pool)
+    entry = pool.peek(("c1", SIG))
+    solo = api.solve(PROBLEM, X, y, options=OPTIONS)
+    rng = np.random.default_rng(8)
+    y2 = y + 0.02 * rng.standard_normal(y.shape).astype(np.float32)
+    (r, out), = _dispatch([_req(X, y2, client_id="c1")], drivers, pool=pool)
+    solo2 = api.solve(PROBLEM, X, y2, options=OPTIONS, state=solo.state)
+    assert int(out.result.iters) == int(solo2.iters)
+    np.testing.assert_allclose(out.result.coef, solo2.coef, **Z_TOL)
+    assert entry.fits == 1 and pool.peek(("c1", SIG)).fits == 2
+
+
+def test_cold_zero_state_equals_init(drivers):
+    solver = drivers.adapter(SIG).solver
+    zero = fleet_mod.zero_lane_state(solver, 1, SIG.n, jnp.float32)
+    init = fleet_mod.init_fleet_state(solver, 1, 1, SIG.n, jnp.float32)
+    import jax
+    jax.tree.map(lambda za, ia: np.testing.assert_array_equal(
+        np.asarray(za), np.asarray(ia)[0]), zero, init)
+
+
+def test_warm_pool_lru_eviction_bounds_entries():
+    metrics = ServeMetrics()
+    pool = WarmPool(max_entries=3, metrics=metrics)
+    entries = {}
+    for i in range(5):
+        e = WarmEntry(state=jnp.zeros((4,)), coef=jnp.zeros((2, 1)),
+                      support=jnp.zeros((2,), bool))
+        entries[i] = e
+        pool.put((f"c{i}", SIG), e)
+    assert len(pool) == 3 and metrics.evictions == 2
+    assert pool.peek((f"c0", SIG)) is None      # oldest two evicted
+    assert pool.peek((f"c1", SIG)) is None
+    pool.get(("c2", SIG))                        # touch -> most recent
+    pool.put(("c5", SIG), entries[4])
+    assert pool.peek(("c3", SIG)) is None        # LRU went, not c2
+    assert pool.peek(("c2", SIG)) is not None
+
+
+def test_warm_pool_byte_bound():
+    state = jnp.zeros((64,), jnp.float32)        # 256 bytes per entry-ish
+    entry_bytes = pytree_nbytes(state) + pytree_nbytes(
+        jnp.zeros((2, 1))) + pytree_nbytes(jnp.zeros((2,), bool))
+    pool = WarmPool(max_entries=100, max_bytes=3 * entry_bytes)
+    for i in range(6):
+        pool.put((f"c{i}", SIG), WarmEntry(
+            state=state, coef=jnp.zeros((2, 1)),
+            support=jnp.zeros((2,), bool)))
+    assert len(pool) == 3
+    assert pool.nbytes <= 3 * entry_bytes
+
+
+# --------------------------------------------------------------------------
+# deadlines and cancellation
+# --------------------------------------------------------------------------
+def test_expired_at_close_gets_clean_error_not_a_solve(drivers):
+    X, y = _request_data(9)
+    metrics = ServeMetrics()
+    live = _req(X, y)
+    dead = _req(X, y, deadline=5.0)              # now=10.0 in _dispatch
+    outcomes = dict(_dispatch([live, dead], drivers, metrics=metrics))
+    assert isinstance(outcomes[dead], DeadlineExceeded)
+    assert not isinstance(outcomes[live], Exception)
+    assert metrics.expired == 1
+
+
+def test_cancelled_request_dropped_at_close(drivers):
+    X, y = _request_data(9)
+    metrics = ServeMetrics()
+    gone = _req(X, y)
+    gone.future.cancel()
+    live = _req(X, y)
+    outcomes = dict(_dispatch([gone, live], drivers, metrics=metrics))
+    assert gone not in outcomes and not isinstance(outcomes[live], Exception)
+    assert metrics.cancelled == 1
+
+
+def test_queued_expiry_via_batcher():
+    b = MicroBatcher(max_batch=8, max_wait_s=10.0)
+    X, y = _request_data(0)
+    r = _req(X, y, deadline=1.0)
+    b.add(r, now=0.0)
+    assert b.next_event(now=0.0) == pytest.approx(1.0)
+    assert b.expire(now=0.5) == []
+    assert b.expire(now=1.0) == [r]
+    assert b.pending_requests == 0
+
+
+# --------------------------------------------------------------------------
+# per-lane iteration caps in the fleet driver
+# --------------------------------------------------------------------------
+def test_fleet_iter_caps_clamp_per_lane(drivers):
+    adapter = drivers.adapter(SIG)
+    rng = np.random.default_rng(11)
+    B, n, m = 3, SIG.n, 16
+    As = jnp.asarray(rng.standard_normal((B, 1, m, n)).astype(np.float32))
+    bs = jnp.asarray(rng.standard_normal((B, 1, m)).astype(np.float32))
+    free = adapter.fit_many_stacked(As, bs)
+    caps = jnp.asarray([5, 0, OPTIONS.max_iter], jnp.int32)
+    capped = adapter.fit_many_stacked(As, bs, iter_caps=caps)
+    assert int(capped.iters[0]) == 5
+    assert int(capped.iters[1]) == 0             # inert lane: never steps
+    assert int(capped.iters[2]) == int(free.iters[2])
+    np.testing.assert_allclose(capped.z[2], free.z[2], **Z_TOL)
+
+
+def test_deadline_iter_rate_flags_aborted_lane(drivers):
+    X, y = _request_data(12)
+    metrics = ServeMetrics()
+    # 0.1s of budget at 50 it/s -> cap 5: far too few to converge
+    (r, out), = _dispatch([_req(X, y, deadline=10.1)], drivers,
+                          metrics=metrics, iter_rate=50.0)
+    assert out.deadline_aborted and 1 <= int(out.result.iters) <= 5
+    assert metrics.deadline_aborted == 1
+    # an uncapped lane hitting plain max_iter must NOT be flagged
+    (r, out), = _dispatch([_req(X, y)], drivers, metrics=metrics)
+    assert not out.deadline_aborted
+
+
+# --------------------------------------------------------------------------
+# the async plane end to end
+# --------------------------------------------------------------------------
+def _service(**kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_wait_s", 0.02)
+    return api.serve(PROBLEM, options=OPTIONS,
+                     serve_options=ServeOptions(**kw))
+
+
+def test_service_end_to_end_batches_and_warms():
+    async def scenario():
+        service = _service()
+        async with service:
+            X, y = _request_data(20)
+            futs = [service.submit_fit(X, y, client_id=f"c{i}")
+                    for i in range(4)]
+            first = await asyncio.gather(*futs)
+            out = await service.fit(X, y, client_id="c0")
+            yhat = await service.predict(X, client_id="c0")
+        return service, first, out, yhat
+
+    service, first, out, yhat = asyncio.run(scenario())
+    assert [r.batch_lanes for r in first] == [4, 4, 4, 4]
+    assert not any(r.warm for r in first)
+    assert out.warm
+    assert int(out.result.iters) < int(first[0].result.iters)
+    assert yhat.shape == (24,)
+    snap = service.snapshot()
+    assert snap["completed"] == 5 and snap["batches"] == 2
+    assert snap["warm_hits"] == 1 and snap["pool_entries"] == 4
+
+
+def test_service_deadline_paths_fail_cleanly_and_fast():
+    async def scenario():
+        service = _service(max_batch=64, max_wait_s=5.0)
+        async with service:
+            X, y = _request_data(21)
+            with pytest.raises(DeadlineExceeded):
+                await service.fit(X, y, deadline=-1.0)     # admission
+            fut = service.submit_fit(X, y, deadline=0.05)  # queued expiry
+            with pytest.raises(DeadlineExceeded):
+                await asyncio.wait_for(fut, timeout=2.0)   # no hang
+            ok = service.submit_fit(X, y)
+            cancelled = service.submit_fit(X, y)
+            cancelled.cancel()
+            return service, await asyncio.wait_for(ok, timeout=60.0)
+
+    service, ok = asyncio.run(scenario())
+    snap = service.snapshot()
+    assert snap["rejected"] == 1 and snap["expired"] == 1
+    assert snap["cancelled"] == 1
+    assert not isinstance(ok, Exception) and ok.batch_lanes == 1
+
+
+def test_service_rejects_after_stop_and_predict_misses():
+    async def scenario():
+        service = _service()
+        async with service:
+            X, y = _request_data(22)
+            await service.fit(X, y, client_id="known")
+            with pytest.raises(LookupError):
+                await service.predict(X, client_id="stranger")
+        with pytest.raises(ServiceStopped):
+            await service.submit_fit(X, y)
+
+    asyncio.run(scenario())
+
+
+def test_api_serve_capability_negotiation():
+    import jax
+    assert api.serve(PROBLEM) is not None
+    mesh = jax.make_mesh((1, 1), ("nodes", "feat"))
+    sharded = api.SolverOptions(engine="sharded", mesh=mesh)
+    with pytest.raises(api.CapabilityError):
+        api.serve(PROBLEM, options=sharded)
+    caps = api.engine_capabilities("reference")
+    assert caps.serve and caps.fleet
+    assert not api.engine_capabilities("sharded", sharded).serve

@@ -1,0 +1,89 @@
+"""Docs CI gate (stdlib-only): links resolve, snippets run, names sync.
+
+Three checks:
+
+1. **Links.** Every relative markdown link in ``docs/*.md`` and
+   ``README.md`` must resolve to an existing file (anchors stripped).
+2. **Snippets.** Every ```` ```python ```` block in ``docs/serving.md``
+   executes, in order, in one shared namespace — the runbook's examples
+   are real code, not prose.
+3. **Glossary sync.** Every metric name in
+   ``repro.serve.metrics.GLOSSARY`` appears in ``docs/serving.md`` —
+   the operator table cannot drift from the code.
+
+    PYTHONPATH=src python tools/check_docs.py [--no-exec]
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+
+
+def doc_files() -> list[pathlib.Path]:
+    return sorted((ROOT / "docs").glob("*.md")) + [ROOT / "README.md"]
+
+
+def check_links() -> list[str]:
+    errors = []
+    for md in doc_files():
+        for target in LINK_RE.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def check_glossary() -> list[str]:
+    from repro.serve.metrics import GLOSSARY
+    text = (ROOT / "docs" / "serving.md").read_text()
+    return [f"docs/serving.md: metric {name!r} missing from the glossary "
+            "table" for name in GLOSSARY if f"`{name}`" not in text]
+
+
+def run_snippets() -> list[str]:
+    text = (ROOT / "docs" / "serving.md").read_text()
+    blocks = FENCE_RE.findall(text)
+    if not blocks:
+        return ["docs/serving.md: no python snippets found (the runbook "
+                "must stay executable)"]
+    ns: dict = {"__name__": "__docs__"}
+    for i, block in enumerate(blocks, 1):
+        try:
+            exec(compile(block, f"docs/serving.md[snippet {i}]", "exec"), ns)
+        except Exception as e:  # noqa: BLE001 - report, don't crash the gate
+            return [f"docs/serving.md snippet {i} failed: {type(e).__name__}: "
+                    f"{e}"]
+    print(f"docs/serving.md: {len(blocks)} snippets executed")
+    return []
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--no-exec", action="store_true",
+                    help="skip executing the serving.md snippets")
+    args = ap.parse_args()
+    errors = check_links() + check_glossary()
+    if not args.no_exec:
+        errors += run_snippets()
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    n = len(doc_files())
+    print(f"checked {n} markdown files: "
+          + ("OK" if not errors else f"{len(errors)} errors"))
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
