@@ -1,0 +1,114 @@
+"""Backend × precision benchmark for the GPU-portable hot paths.
+
+One schema, every backend: each row is ``(op, backend, precision)`` with
+the data dtype and median wall seconds, so the committed CPU baseline and
+a GPU run land in the same ``benchmarks/results/gpu_bench.json`` and
+diff directly. Three ops, the three hot paths the tentpole ported:
+
+* ``proj``    — one exact l1-epigraph projection (ladder bracketing via
+  the registry ``ladder_stats`` kernel + closed-form polish) at d.
+* ``xupdate`` — a fixed-iteration ``fit_with_history`` solve (squared
+  loss), dominated by the x-update's Gram/matvec products over the
+  (policy-cast) data.
+* ``path``    — a warm-started three-point kappa path over the same data.
+
+Precision columns: ``fp32`` and ``bf16`` (bf16 data, f32 accumulation —
+the memory-traffic experiment; the solver state stays f32 under both).
+On CPU the two land close — the jnp default path reads the same cache
+lines either way; the spread is what a GPU run is expected to open up.
+
+    PYTHONPATH=src python -m benchmarks.gpu_bench            # CPU-scaled
+    PYTHONPATH=src python -m benchmarks.gpu_bench --full     # larger d/n
+    PYTHONPATH=src python -m benchmarks.gpu_bench --smoke    # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro import runtime
+from repro.core import BiCADMM, BiCADMMConfig, bilinear, fit_path
+from repro.data.synthetic import SyntheticSpec, make_graded_regression
+
+from .common import emit, save_json, timeit
+
+PRECISIONS = ("fp32", "bf16")
+
+
+def _bench_precision(precision: str, d: int, n: int, m: int, iters: int,
+                     reps: int) -> list:
+    pol = runtime.resolve_precision(precision)
+    pname = runtime.precision_name(pol)
+    dtype = pol.data or "float32"
+    rows = []
+
+    # proj: the projection operates on solver state (f32 under every
+    # preset); the backend column is what moves it (registry ladder_stats)
+    z0 = jax.random.normal(jax.random.PRNGKey(0), (d,), jnp.float32)
+    t0 = jnp.float32(0.05) * jnp.sum(jnp.abs(z0))
+    proj = jax.jit(bilinear.project_l1_epigraph)
+    rows.append(dict(op="proj", seconds=timeit(proj, z0, t0, reps=reps),
+                     d=d))
+
+    # xupdate + path: the data-touching paths — the policy casts A/b, so
+    # the A-products read bf16 storage under the reduced preset
+    spec = SyntheticSpec(n_nodes=2, m_per_node=m, n_features=n,
+                         sparsity_level=0.75, noise=1e-4)
+    As, bs, _ = make_graded_regression(0, spec)
+    cfg = BiCADMMConfig(kappa=max(4, n // 8), gamma=10.0, rho_c=1.0,
+                        alpha=0.5, max_iter=iters, tol=1e-6, polish=False,
+                        precision=precision)
+    solver = BiCADMM("squared", cfg)
+    rows.append(dict(
+        op="xupdate",
+        seconds=timeit(lambda: solver.fit_with_history(As, bs, iters=iters).z,
+                       reps=reps),
+        n=n, m=m, iters=iters))
+    kappas = [max(2, n // 4), max(2, n // 6), max(2, n // 8)]
+    rows.append(dict(
+        op="path",
+        seconds=timeit(lambda: fit_path(solver, As, bs, kappas).x, reps=reps),
+        n=n, m=m, kappas=kappas))
+
+    for r in rows:
+        r.update(backend=runtime.backend(), precision=pname, dtype=str(dtype))
+    return rows
+
+
+def main(full: bool = False, smoke: bool = False):
+    if smoke:
+        d, n, m, iters, reps = 20_000, 80, 60, 20, 2
+    elif full:
+        d, n, m, iters, reps = 1_000_000, 1_000, 1_000, 100, 3
+    else:
+        d, n, m, iters, reps = 200_000, 400, 400, 60, 3
+
+    rows = []
+    for precision in PRECISIONS:
+        prows = _bench_precision(precision, d, n, m, iters, reps)
+        rows.extend(prows)
+        for r in prows:
+            emit(f"gpu_bench.{r['op']}.{r['backend']}.{r['precision']}",
+                 r["seconds"], f"dtype={r['dtype']}")
+    by = {(r["op"], r["precision"]): r["seconds"] for r in rows}
+    for op in ("xupdate", "path"):
+        ratio = by[(op, "fp32")] / by[(op, "bf16")]
+        print(f"#   {op}: bf16 {ratio:.2f}x vs fp32 "
+              f"on {runtime.backend()}")
+
+    if not smoke:  # CI smoke must not clobber the committed baseline
+        save_json("gpu_bench.json", dict(rows=rows,
+                                         backend=runtime.backend(),
+                                         sizes=dict(d=d, n=n, m=m,
+                                                    iters=iters)))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: tiny d/n, no baseline write")
+    a = ap.parse_args()
+    main(full=a.full, smoke=a.smoke)

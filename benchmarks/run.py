@@ -16,8 +16,8 @@ import argparse
 import time
 
 from . import (fig1_convergence, fig23_scaling, fig4_transfer, fleet_bench,
-               path_sweep, proj_bench, roofline, serve_bench, table1_compare,
-               xupdate_bench)
+               gpu_bench, path_sweep, proj_bench, roofline, serve_bench,
+               table1_compare, xupdate_bench)
 
 
 def main() -> None:
@@ -38,6 +38,8 @@ def main() -> None:
         fleet_bench.main(smoke=True)
         print("# Fitting service — open-loop latency, cold vs warm (smoke)")
         serve_bench.main(smoke=True)
+        print("# Backend x precision — proj/xupdate/path (smoke)")
+        gpu_bench.main(smoke=True)
         print(f"# total {time.time() - t0:.1f}s")
         return
     print("# Fig 1 — residual convergence vs rho_b")
@@ -58,6 +60,8 @@ def main() -> None:
     fleet_bench.main(full=args.full)
     print("# Fitting service — open-loop latency, cold vs warm")
     serve_bench.main(full=args.full)
+    print("# Backend x precision — proj/xupdate/path")
+    gpu_bench.main(full=args.full)
     print("# Roofline — from dry-run records")
     roofline.main()
     print(f"# total {time.time() - t0:.1f}s")

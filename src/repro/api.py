@@ -47,6 +47,7 @@ from typing import Any
 
 import jax.numpy as jnp
 
+from . import runtime
 from .core.bicadmm import BiCADMM, BiCADMMConfig
 from .core.fleet import fit_many as _ref_fit_many
 from .core.fleet import fit_many_stacked as _ref_fit_many_stacked
@@ -174,11 +175,17 @@ class SolverOptions:
     # misc
     polish: bool = True
     over_relax: float = 1.0
+    # mixed-precision policy: a preset name ("fp32" | "bf16" | "fp16" |
+    # "fp64_polish") or a repro.runtime.PrecisionPolicy. Engines negotiate
+    # support through Capabilities.precisions.
+    precision: Any = "fp32"
     # mesh axis naming (sharded)
     nodes_axis: str | tuple[str, ...] = "nodes"
     feat_axis: str = "feat"
 
     def __post_init__(self):
+        object.__setattr__(self, "precision",
+                           runtime.resolve_precision(self.precision))
         if self.engine not in ENGINES:
             raise ValueError(f"unknown engine {self.engine!r}; expected one "
                              f"of {ENGINES}")
@@ -230,7 +237,8 @@ def build_config(problem: SparseProblem, options: SolverOptions
         over_relax=options.over_relax,
         force_feature_split=options.force_feature_split,
         projection=options.projection, x_solver=options.x_solver,
-        cg_iters=options.cg_iters, cg_tol=options.cg_tol)
+        cg_iters=options.cg_iters, cg_tol=options.cg_tol,
+        precision=options.precision)
 
 
 # --------------------------------------------------------------------------
@@ -259,6 +267,9 @@ class Capabilities:
     warm_start: bool = True    # resumable state / warm-started paths
     fleet: bool = False        # fit_many: vmapped batch of B problems
     serve: bool = False        # FittingService micro-batching (needs fleet)
+    # reduced-precision data dtypes the engine certifies (fp64-oracle
+    # differential suite); "float32" (no cast) is always supported
+    precisions: tuple = ("float32", "bfloat16", "float16")
 
 
 def engine_capabilities(engine: str, options: SolverOptions | None = None
@@ -275,11 +286,14 @@ def engine_capabilities(engine: str, options: SolverOptions | None = None
                             penalty_grids=dyn, grid_strategy="vmap",
                             gather_free=False, fleet=dyn, serve=dyn)
     if engine == "sharded":
+        # fp16's narrow exponent underflows the psum'd ladder statistics on
+        # badly scaled shards; only bf16 is certified for the sharded engine
         return Capabilities(
             engine="sharded", distributed=True, dynamic_penalties=False,
             per_solve_overrides=False, penalty_grids=False,
             grid_strategy="cold-scan",
-            gather_free=options.sharded_projection != "exact")
+            gather_free=options.sharded_projection != "exact",
+            precisions=("float32", "bfloat16"))
     raise ValueError(f"unknown engine {engine!r}")
 
 
@@ -331,6 +345,17 @@ def _check_fleet(caps: Capabilities) -> None:
             "with n_feature_blocks=1")
 
 
+def _check_precision(caps: Capabilities, options: SolverOptions) -> None:
+    pol = options.precision
+    data = pol.data if pol.data is not None else "float32"
+    if data not in caps.precisions:
+        raise CapabilityError(
+            f"the {caps.engine!r} engine does not certify data dtype "
+            f"{data!r} (precision policy {runtime.precision_name(pol)!r}); "
+            f"certified dtypes: {caps.precisions} "
+            "(Capabilities.precisions)")
+
+
 def _check_serve(caps: Capabilities) -> None:
     if not caps.serve:
         raise CapabilityError(
@@ -361,6 +386,7 @@ class _ReferenceAdapter:
 
     def __init__(self, problem: SparseProblem, options: SolverOptions):
         self.caps = engine_capabilities("reference", options)
+        _check_precision(self.caps, options)
         self.solver = BiCADMM(problem.resolve_loss(),
                               build_config(problem, options))
 
@@ -412,6 +438,7 @@ class _ShardedAdapter:
 
     def __init__(self, problem: SparseProblem, options: SolverOptions):
         self.caps = engine_capabilities("sharded", options)
+        _check_precision(self.caps, options)
         self.solver = ShardedBiCADMM(
             problem.resolve_loss(), build_config(problem, options),
             options.mesh, nodes_axis=options.nodes_axis,
@@ -815,5 +842,5 @@ def from_config(loss, cfg: BiCADMMConfig, *, n_classes: int = 1,
         cg_iters=cfg.cg_iters, cg_tol=cfg.cg_tol,
         force_feature_split=cfg.force_feature_split,
         projection=cfg.projection, polish=cfg.polish,
-        over_relax=cfg.over_relax, **opt_kw)
+        over_relax=cfg.over_relax, precision=cfg.precision, **opt_kw)
     return problem, options

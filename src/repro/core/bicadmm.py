@@ -64,7 +64,9 @@ from .results import FitResult
 from .prox import (NodeProxEngine, newton_cg_prox, x_solve)
 from .subsolver import (SubsolverFactors, SubsolverState, node_prox_feature_split,
                         subsolver_init, subsolver_setup)
-from ..kernels.ops import matvec_auto, normal_matvec_auto, rmatvec_auto
+from .. import runtime
+from ..kernels.ops import (gram_auto, matvec_auto, normal_matvec_auto,
+                           rmatvec_auto)
 
 Array = jax.Array
 
@@ -93,6 +95,15 @@ class BiCADMMConfig:
     x_solver: str = "auto"          # "auto" | "dense" | "woodbury" | "pcg"
     cg_iters: int = 200             # PCG max iterations per x-update
     cg_tol: float = 1e-6            # PCG relative-residual tolerance
+    # Mixed-precision policy (repro.runtime.PrecisionPolicy): data storage
+    # dtype, accumulation dtype for factors/Grams, solver-state dtype, and
+    # an optional fp64 KKT-polish dtype for the ladder refinement. Accepts
+    # a preset name ("fp32", "bf16", "fp16", "fp64_polish") or a policy.
+    precision: "runtime.PrecisionPolicy | str" = "fp32"
+
+    def __post_init__(self):
+        object.__setattr__(self, "precision",
+                           runtime.resolve_precision(self.precision))
 
     @property
     def rho_b_eff(self) -> float:
@@ -153,8 +164,8 @@ def reset_for_resume(st: BiCADMMState) -> BiCADMMState:
 def _zt_update(z0: Array, t0: Array, w: Array, s: Array, v: Array,
                N: float, rho_c: float, rho_b: float, iters: int, *,
                ops: bilinear.LadderOps | None = None,
-               projection: str = "ladder", rounds: int | None = None
-               ) -> tuple[Array, Array]:
+               projection: str = "ladder", rounds: int | None = None,
+               polish_dtype=None) -> tuple[Array, Array]:
     """Step (7b): min over {(z,t): ||z||_1 <= t} of
         (N rho_c / 2) ||z - w||^2 + (rho_b / 2) (s^T z - t + v)^2
     by FISTA with the exact cone projection — sort-free (ladder-refinement)
@@ -177,7 +188,7 @@ def _zt_update(z0: Array, t0: Array, w: Array, s: Array, v: Array,
         project = bilinear.project_l1_epigraph_sort
     else:
         project = partial(bilinear.project_l1_epigraph, ops=ops,
-                          rounds=rounds)
+                          rounds=rounds, polish_dtype=polish_dtype)
 
     def grads(z, t):
         r = ops.sum_fn(s * z) - t + v
@@ -213,7 +224,12 @@ class BiCADMM:
         if cfg.x_solver not in prox.XSOLVERS:
             raise ValueError(f"unknown x_solver {cfg.x_solver!r}; expected "
                              f"one of {prox.XSOLVERS}")
+        runtime.check_x64(cfg.precision)
         self.cfg = cfg
+        # memoized policy data casts keyed on the incoming array ids, so
+        # repeated calls hand back the SAME cast arrays and the id-keyed
+        # setup cache below still hits across warm-started run_from calls.
+        self._cast_cache: dict = {}
         # setup factors (Gram / Cholesky / eigh / Woodbury) keyed on the
         # data arrays, so repeated warm-started run_from calls — the
         # resumable-state workflow — pay the factorization once. Entries
@@ -231,6 +247,22 @@ class BiCADMM:
             lambda factors, As, bs, params, st0:
                 self._run_while(factors, As, bs, params, st0),
             donate_argnums=(4,))
+
+    def _cast(self, As: Array, bs: Array) -> tuple[Array, Array]:
+        """Apply the precision policy's data cast (no-op for data=None)."""
+        pol = self.cfg.precision
+        if pol.data is None:
+            return As, bs
+        if _is_traced(As, bs):
+            return pol.cast_data(As), pol.cast_data(bs)
+        key = (id(As), id(bs))
+        hit = self._cast_cache.get(key)
+        if hit is None:
+            if len(self._cast_cache) >= self._SETUP_CACHE_MAX:
+                self._cast_cache.pop(next(iter(self._cast_cache)))
+            hit = (As, bs, pol.cast_data(As), pol.cast_data(bs))
+            self._cast_cache[key] = hit
+        return hit[2], hit[3]
 
     def _x_engine(self, m: int, n: int, dynamic: bool) -> NodeProxEngine:
         cfg = self.cfg
@@ -329,7 +361,8 @@ class BiCADMM:
         w = jnp.mean(x_eff + st.u, axis=0)                 # consensus center
         z_new, t_new = _zt_update(st.z, st.t, w, st.s, st.v,
                                   float(N), rho_c, rho_b, cfg.zt_iters,
-                                  projection=cfg.projection)
+                                  projection=cfg.projection,
+                                  polish_dtype=cfg.precision.kkt_polish)
         s_new = bilinear.s_update(
             z_new, t_new, st.v, params.kappa,
             method=("sort" if cfg.projection == "sort" else "ladder"))
@@ -347,7 +380,10 @@ class BiCADMM:
         cfg = self.cfg
         N, m, _ = As.shape
         d = n * K
-        dt = As.dtype
+        # solver-state dtype: with reduced-precision data the iterates stay
+        # in the policy's state dtype (f32 by default) — only the A-products
+        # touch the narrow storage.
+        dt = jnp.dtype(cfg.precision.state_dtype(As.dtype))
         inner = None
         if cfg.use_feature_split:
             M = cfg.n_feature_blocks
@@ -367,6 +403,7 @@ class BiCADMM:
     # -- drivers ---------------------------------------------------------------
     def init_state(self, As: Array, bs: Array) -> BiCADMMState:
         """Public resumable-state entry point: a fresh zero state."""
+        As, bs = self._cast(As, bs)
         return self._init_state(As, bs, As.shape[2], self.loss.n_classes)
 
     def _run_while(self, factors, As, bs, params: SolveParams,
@@ -443,6 +480,7 @@ class BiCADMM:
         using the returned ``result.state``, not the object passed in.
         """
         dyn = gamma is not None or rho_c is not None
+        As, bs = self._cast(As, bs)
         factors, N, n, K = self._setup(As, bs, dynamic_penalties=dyn)
         params = self._make_params(N, kappa=kappa, gamma=gamma, rho_c=rho_c)
         st0 = reset_for_resume(state)
@@ -465,6 +503,7 @@ class BiCADMM:
     def fit_with_history(self, As: Array, bs: Array,
                          iters: int | None = None) -> BiCADMMResult:
         """Fixed-iteration scan recording residual traces (Fig. 1)."""
+        As, bs = self._cast(As, bs)
         factors, N, n, K = self._setup(As, bs)
         params = self._make_params(N)
         iters = iters or self.cfg.max_iter
@@ -514,9 +553,11 @@ class BiCADMM:
         b_all = bs.reshape(-1)
         if loss.name == "squared":
             if n <= prox.DENSE_MAX_N and cfg.x_solver in ("auto", "dense"):
-                G = A_all.T @ A_all
-                H = G + jnp.diag(pen + sigma)
-                x = jnp.linalg.solve(H, A_all.T @ b_all)
+                acc = cfg.precision.accum_dtype(A_all.dtype)
+                G = gram_auto(A_all, out_dtype=acc)
+                H = G + jnp.diag((pen + sigma).astype(acc))
+                x = jnp.linalg.solve(H, rmatvec_auto(A_all, b_all,
+                                                     out_dtype=acc))
                 return jnp.where(support, x, 0.0)
             shift = pen + sigma
             inv = 1.0 / (prox.col_sumsq(A_all) + shift)

@@ -108,8 +108,8 @@ class LadderOps(NamedTuple):
 
 
 def _stats_kernel(az: Array, thetas: Array) -> Array:
-    from ..kernels.bisect_proj import ladder_stats
-    return ladder_stats(az, thetas)
+    from ..kernels.ops import ladder_stats_auto
+    return ladder_stats_auto(az, thetas)
 
 
 def point_stats(az: Array, thetas: Array) -> Array:
@@ -144,13 +144,15 @@ DEFAULT_OPS = LadderOps(sum_fn=jnp.sum, max_fn=jnp.max,
 def default_rounds() -> int:
     """Bracketing rounds before the closed-form polish.
 
-    On TPU the Pallas kernel evaluates all B = 128 rungs in one data pass,
-    so 2 rounds narrow the bracket x16384 and leave the polish ~2 steps.
-    Elsewhere the (n, B) broadcast costs more than the handful of O(n)
-    polish passes it would save, so we go straight to the polish (which is
-    exact on its own — the rounds only shorten it).
+    Where a fused ladder_stats kernel exists (TPU, GPU) it evaluates all
+    B = 128 rungs in one data pass, so 2 rounds narrow the bracket x16384
+    and leave the polish ~2 steps. On CPU the (n, B) broadcast costs more
+    than the handful of O(n) polish passes it would save, so we go straight
+    to the polish (which is exact on its own — the rounds only shorten it).
+    The per-backend table lives in ``repro.runtime.ladder_rounds``.
     """
-    return 2 if jax.default_backend() == "tpu" else 0
+    from .. import runtime
+    return runtime.ladder_rounds()
 
 
 def _bracket_rounds(lo, hi, rounds, B, crossing_fn):
@@ -175,7 +177,8 @@ def _bracket_rounds(lo, hi, rounds, B, crossing_fn):
 def ladder_refine(az: Array, h_target: Array | float, *,
                   ops: LadderOps = DEFAULT_OPS, hi: Array | None = None,
                   rounds: int | None = None, B: int = LADDER_B,
-                  newton_cap: int = NEWTON_CAP) -> Array:
+                  newton_cap: int = NEWTON_CAP,
+                  polish_dtype=None) -> Array:
     """Exact root of ``h(theta) = sum max(az - theta, 0) - h_target - theta``.
 
     See the module docstring for the exactness argument. ``rounds`` ladder
@@ -184,6 +187,14 @@ def ladder_refine(az: Array, h_target: Array | float, *,
     its floating-point fixpoint (one ``ops.point_fn`` call = one (2,)-psum
     per step), which generically takes 2-4 steps after bracketing and is
     capped at ``newton_cap`` as a safety net.
+
+    ``polish_dtype`` (the PrecisionPolicy's ``kkt_polish``, typically
+    ``float64`` under x64 mode) runs the polish loop in a wider dtype: the
+    bracketing stays in the working dtype, the polish casts |z| once and
+    converges to the *wider* floating-point fixpoint, and the root is cast
+    back — the KKT certificate then holds to fp64 ulps instead of working-
+    precision ulps. ``None`` polishes in the working dtype (bit-identical
+    to the historical behavior).
 
     Degenerate inputs are safe: if ``h(0) <= 0`` the polish is an immediate
     fixpoint at 0 (the caller's "inside" case); if no feasible theta exists
@@ -205,9 +216,14 @@ def ladder_refine(az: Array, h_target: Array | float, *,
             return jnp.sum((hv > 0).astype(jnp.int32))
         lo, hi = _bracket_rounds(lo, hi, rounds, B, crossing)
 
+    pdt = dt if polish_dtype is None else jnp.dtype(polish_dtype)
+    azp = az if pdt == dt else az.astype(pdt)
+    t0p = t0 if pdt == dt else t0.astype(pdt)
+    lo = lo if pdt == dt else lo.astype(pdt)
+
     def propose(th):
-        st = ops.point_fn(az, th[None]).astype(dt)
-        hv = st[0, 0] - t0 - th
+        st = ops.point_fn(azp, th[None]).astype(pdt)
+        hv = st[0, 0] - t0p - th
         return jnp.maximum(th + hv / (st[1, 0] + 1.0), th)
 
     def cond(c):
@@ -220,7 +236,7 @@ def ladder_refine(az: Array, h_target: Array | float, *,
 
     _, theta, _ = jax.lax.while_loop(
         cond, body, (jnp.asarray(1, jnp.int32), propose(lo), lo))
-    return theta
+    return theta.astype(dt)
 
 
 # --------------------------------------------------------------------------
@@ -233,7 +249,8 @@ def _soft(z: Array, thr: Array | float) -> Array:
 def project_l1_epigraph(z0: Array, t0: Array | float, *,
                         ops: LadderOps = DEFAULT_OPS,
                         rounds: int | None = None, B: int = LADDER_B,
-                        newton_cap: int = NEWTON_CAP) -> tuple[Array, Array]:
+                        newton_cap: int = NEWTON_CAP,
+                        polish_dtype=None) -> tuple[Array, Array]:
     """Exact Euclidean projection onto ``{(z, t): ||z||_1 <= t}`` (sort-free).
 
     KKT: the projection is ``z = soft(z0, theta), t = t0 + theta`` for the
@@ -241,6 +258,8 @@ def project_l1_epigraph(z0: Array, t0: Array | float, *,
     the root :func:`ladder_refine` computes exactly without sorting. |z0| is
     computed once and reused for both the refinement passes and the final
     soft-threshold (the fused hot path of the (7b) FISTA loop).
+    ``polish_dtype`` forwards to :func:`ladder_refine` (the PrecisionPolicy
+    fp64 KKT polish).
 
     Handles the apex case (projection = origin) when ``t0`` is so negative
     that no ``theta`` with ``soft(z0, theta) != 0`` satisfies feasibility.
@@ -252,7 +271,7 @@ def project_l1_epigraph(z0: Array, t0: Array | float, *,
     inside = abs_sum <= t0
     apex = (-t0 - hi0) > 0
     theta = ladder_refine(az, t0, ops=ops, hi=hi0, rounds=rounds, B=B,
-                          newton_cap=newton_cap)
+                          newton_cap=newton_cap, polish_dtype=polish_dtype)
     theta = jnp.where(inside, 0.0, theta)
     z = jnp.where(apex & ~inside, 0.0,
                   jnp.sign(z0) * jnp.maximum(az - theta, 0.0))

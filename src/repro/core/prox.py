@@ -62,6 +62,16 @@ WOODBURY_MAX_M = 8192
 
 _static = dict(metadata=dict(static=True))
 
+_REDUCED = (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16))
+
+
+def _accum(dtype) -> jnp.dtype:
+    """Factor/accumulation dtype for ``dtype`` data: f32 for reduced
+    precision (bf16/fp16), unchanged otherwise — the f32 path is
+    bit-identical to the historical setup expressions."""
+    d = jnp.dtype(dtype)
+    return jnp.dtype(jnp.float32) if d in _REDUCED else d
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -77,8 +87,10 @@ def ridge_setup(A: Array, b: Array, sigma: float, rho_c: float) -> RidgeFactors:
     runs through the MXU-tiled Pallas kernel on TPU (gram_auto)."""
     n = A.shape[1]
     c = sigma + rho_c
-    G = gram_auto(A) + c * jnp.eye(n, dtype=A.dtype)
-    return RidgeFactors(jnp.linalg.cholesky(G), A.T @ b, c)
+    acc = _accum(A.dtype)
+    G = gram_auto(A, out_dtype=acc) + c * jnp.eye(n, dtype=acc)
+    return RidgeFactors(jnp.linalg.cholesky(G),
+                        rmatvec_auto(A, b, out_dtype=acc), c)
 
 
 def ridge_prox_factorized(f: RidgeFactors, q: Array, rho_c: float) -> Array:
@@ -100,8 +112,9 @@ class EighRidgeFactors(NamedTuple):
 
 
 def ridge_setup_eigh(A: Array, b: Array) -> EighRidgeFactors:
-    evals, V = jnp.linalg.eigh(gram_auto(A))
-    return EighRidgeFactors(V, evals, A.T @ b)
+    acc = _accum(A.dtype)
+    evals, V = jnp.linalg.eigh(gram_auto(A, out_dtype=acc))
+    return EighRidgeFactors(V, evals, rmatvec_auto(A, b, out_dtype=acc))
 
 
 def ridge_prox_eigh(f: EighRidgeFactors, q: Array, rho_c: Array | float,
@@ -140,13 +153,17 @@ def woodbury_setup(A: Array, b: Array, sigma: float,
     tiled Pallas kernel on TPU (gram_auto on A^T)."""
     m = A.shape[0]
     c = sigma + rho_c
-    G = gram_auto(A.T) + c * jnp.eye(m, dtype=A.dtype)
-    return WoodburyFactors(A, jnp.linalg.cholesky(G), rmatvec_auto(A, b), c)
+    acc = _accum(A.dtype)
+    G = gram_auto(A.T, out_dtype=acc) + c * jnp.eye(m, dtype=acc)
+    return WoodburyFactors(A, jnp.linalg.cholesky(G),
+                           rmatvec_auto(A, b, out_dtype=acc), c)
 
 
 def woodbury_setup_eigh(A: Array, b: Array) -> WoodburyEighFactors:
-    evals, U = jnp.linalg.eigh(gram_auto(A.T))
-    return WoodburyEighFactors(A, U, evals, rmatvec_auto(A, b))
+    acc = _accum(A.dtype)
+    evals, U = jnp.linalg.eigh(gram_auto(A.T, out_dtype=acc))
+    return WoodburyEighFactors(A, U, evals,
+                               rmatvec_auto(A, b, out_dtype=acc))
 
 
 def woodbury_prox(f: WoodburyFactors, q: Array, rho_c: Array | float) -> Array:
@@ -192,8 +209,12 @@ def woodbury_prox_eigh(f: WoodburyEighFactors, q: Array,
 def col_sumsq(A: Array) -> Array:
     """Per-column sum of squares — diag(A^T A), the Jacobi preconditioner.
     Shared by the reference and sharded CG engines so single-device
-    trajectories stay bit-identical."""
-    return jnp.einsum("mn,mn->n", A, A)
+    trajectories stay bit-identical. Reduced-precision data accumulates
+    (and emits) in f32; the f32 path is untouched."""
+    acc = _accum(A.dtype)
+    if acc == A.dtype:
+        return jnp.einsum("mn,mn->n", A, A)
+    return jnp.einsum("mn,mn->n", A, A, preferred_element_type=acc)
 
 
 @jax.tree_util.register_dataclass
@@ -209,7 +230,8 @@ class CGFactors:
 
 def cg_setup(A: Array, b: Array, iters: int = 200,
              tol: float = 1e-6) -> CGFactors:
-    return CGFactors(A, rmatvec_auto(A, b), col_sumsq(A), iters, tol)
+    return CGFactors(A, rmatvec_auto(A, b, out_dtype=_accum(A.dtype)),
+                     col_sumsq(A), iters, tol)
 
 
 def pcg(matvec: Callable[[Array], Array], rhs: Array, x0: Array,

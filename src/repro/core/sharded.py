@@ -102,10 +102,11 @@ from jax.experimental.shard_map import shard_map
 
 from . import bilinear, prox
 from .bicadmm import BiCADMMConfig, _zt_update
+from .. import runtime
 from .losses import Loss, get_loss
 from .results import FitResult, SparsePath
-from ..kernels.bisect_proj import ladder_stats
-from ..kernels.ops import block_matvec, block_rmatvec, gram_auto
+from ..kernels.ops import (block_matvec, block_rmatvec, gram_auto,
+                           ladder_stats_auto)
 
 Array = jax.Array
 
@@ -187,7 +188,7 @@ def batched_epigraph_project(z0: Array, t0: Array, feat_axis: str | None,
     def crossing(thetas):
         # ladder stats for the whole round in one data pass + one psum;
         # h decreasing: count the leading rungs with h > 0
-        st = sum_fn(ladder_stats(az, thetas))
+        st = sum_fn(ladder_stats_auto(az, thetas))
         h = st[0].astype(z0.dtype) - t0 - thetas
         return jnp.sum((h > 0).astype(jnp.int32))
 
@@ -219,7 +220,7 @@ def batched_support_skappa(z: Array, kappa: Array | float,
 
     def crossing(taus):
         # cnt decreasing in tau; want largest tau with cnt > kappa as lo
-        cnt = sum_fn(ladder_stats(az, taus))[1].astype(z.dtype)
+        cnt = sum_fn(ladder_stats_auto(az, taus))[1].astype(z.dtype)
         return jnp.sum((cnt > kap).astype(jnp.int32))
 
     lo, tau = bilinear._bracket_rounds(jnp.zeros_like(hi0), hi0, rounds,
@@ -286,6 +287,10 @@ class ShardedBiCADMM:
             raise ValueError('x_update="cg" solves the squared-loss normal '
                              "equations; other losses use the feature-split "
                              'sub-solver (x_update="subsolver")')
+        runtime.check_x64(self.cfg.precision)
+        # memoized policy data casts (see BiCADMM._cast): stable array ids
+        # keep the id-keyed factor cache below hitting across repeat fits.
+        self._cast_cache: dict = {}
         # jitted shard_map programs, keyed on the python values the closures
         # bake in — reused across calls so repeated fits/sweeps don't
         # re-trace (shapes/dtypes are handled by jit's own cache)
@@ -295,6 +300,24 @@ class ShardedBiCADMM:
         # resumable-state workflow — pay the setup shard_map program once.
         # Entries hold strong references to the keyed arrays.
         self._factor_cache: dict = {}
+
+    def _cast(self, A_global: Array, b_global: Array) -> tuple[Array, Array]:
+        """Apply the precision policy's data cast (no-op for data=None)."""
+        pol = self.cfg.precision
+        if pol.data is None:
+            return A_global, b_global
+        if isinstance(A_global, jax.core.Tracer) \
+                or isinstance(b_global, jax.core.Tracer):
+            return pol.cast_data(A_global), pol.cast_data(b_global)
+        key = (id(A_global), id(b_global))
+        hit = self._cast_cache.get(key)
+        if hit is None:
+            if len(self._cast_cache) >= self._FACTOR_CACHE_MAX:
+                self._cast_cache.pop(next(iter(self._cast_cache)))
+            hit = (A_global, b_global, pol.cast_data(A_global),
+                   pol.cast_data(b_global))
+            self._cast_cache[key] = hit
+        return hit[2], hit[3]
 
     def _x_mode(self, nb: int) -> str:
         if self.x_update != "auto":
@@ -338,14 +361,21 @@ class ShardedBiCADMM:
                 # batched-mirrored col_sumsq (unit leading axis): the
                 # reference engine computes it under vmap over nodes, and
                 # batched/unbatched reductions differ at the ulp level
-                colsq = jnp.einsum("jmn,jmn->jn", A_blk[None], A_blk[None])[0]
+                acc = prox._accum(A_blk.dtype)
+                if acc == A_blk.dtype:
+                    colsq = jnp.einsum("jmn,jmn->jn", A_blk[None],
+                                       A_blk[None])[0]
+                else:
+                    colsq = jnp.einsum("jmn,jmn->jn", A_blk[None],
+                                       A_blk[None],
+                                       preferred_element_type=acc)[0]
                 return colsq[None, None]
             out_specs = P(nodes, feat, None)
         else:
             def setup_run(A_blk):
-                G = gram_auto(A_blk)
-                H = cfg.rho_l * G + c * jnp.eye(A_blk.shape[1],
-                                                dtype=A_blk.dtype)
+                acc = prox._accum(A_blk.dtype)
+                G = gram_auto(A_blk, out_dtype=acc)
+                H = cfg.rho_l * G + c * jnp.eye(A_blk.shape[1], dtype=acc)
                 return jnp.linalg.cholesky(H)[None, None]
             out_specs = P(nodes, feat, None, None)
 
@@ -549,7 +579,7 @@ class ShardedBiCADMM:
         lops = bilinear.LadderOps(
             sum_fn=lambda x: psum_f(jnp.sum(x)),
             max_fn=lambda x: _pmax(feat)(jnp.max(x, initial=0.0)),
-            stats_fn=lambda az, th: psum_f(ladder_stats(az, th)),
+            stats_fn=lambda az, th: psum_f(ladder_stats_auto(az, th)),
             point_fn=lambda az, th: psum_f(bilinear.point_stats(az, th)),
             band_fn=lambda az, lo, hi: psum_f(bilinear.band_stats(az, lo, hi)),
         )
@@ -604,7 +634,8 @@ class ShardedBiCADMM:
             zg, t_new = _zt_update(zg_old, st.t, gather_full(wc),
                                    gather_full(st.s), st.v,
                                    float(N), cfg.rho_c, rho_b, cfg.zt_iters,
-                                   projection=cfg.projection)
+                                   projection=cfg.projection,
+                                   polish_dtype=cfg.precision.kkt_polish)
             sg = bilinear.s_update(
                 zg, t_new, st.v, kappa,
                 method=("sort" if cfg.projection == "sort" else "ladder"))
@@ -635,7 +666,8 @@ class ShardedBiCADMM:
             wc = psum_n(x_eff + st.u) / N
             zf, t_new = _zt_update(flat(st.z), st.t, flat(wc), flat(st.s),
                                    st.v, float(N), cfg.rho_c, rho_b,
-                                   cfg.zt_iters, ops=lops)
+                                   cfg.zt_iters, ops=lops,
+                                   polish_dtype=cfg.precision.kkt_polish)
             z_new = unflat(zf)
             sf = bilinear.s_update(zf, t_new, st.v, kappa, ops=lops)
             s_new = unflat(sf)
@@ -690,7 +722,7 @@ class ShardedBiCADMM:
         else:
             outer_step = outer_step_sharded
 
-        big = jnp.asarray(jnp.inf, A_blk.dtype)
+        big = jnp.asarray(jnp.inf, cfg.precision.state_dtype(A_blk.dtype))
 
         def reset(st: ShardedState) -> ShardedState:
             return st._replace(k=jnp.asarray(0), p_r=big, d_r=big, b_r=big)
@@ -722,13 +754,15 @@ class ShardedBiCADMM:
             ) -> ShardedResult:
         cfg = self.cfg
         K = self.loss.n_classes
+        A_global, b_global = self._cast(A_global, b_global)
         n = A_global.shape[1]
         N, M, nb = self._sizes(n)
         n_pad = M * nb
         A_p, xfac = self._prepare(A_global, n)
+        sdt = cfg.precision.state_dtype(A_p.dtype)
         iters = iters if iters is not None else cfg.max_iter
         if state is None:
-            state = self.init_state(n, A_global.shape[0], A_p.dtype)
+            state = self.init_state(n, A_global.shape[0], sdt)
 
         nodes = self.nodes_axis
         st_specs = self._state_specs()
@@ -743,8 +777,8 @@ class ShardedBiCADMM:
 
         def run(A_blk, b_blk, xf, gs):
             outer_step, _ = self._local_funcs(N, M, A_blk, b_blk, xf[0, 0])
-            st0 = self._unpack_state(gs, A_blk.dtype)
-            kappa = jnp.asarray(float(cfg.kappa), A_blk.dtype)
+            st0 = self._unpack_state(gs, sdt)
+            kappa = jnp.asarray(float(cfg.kappa), sdt)
             step = lambda st: outer_step(st, kappa)
 
             if record_history:
@@ -758,7 +792,7 @@ class ShardedBiCADMM:
                             & (st.b_r < cfg.tol))
                     return (~done) & (st.k < iters)
                 st = jax.lax.while_loop(cond, step, st0)
-                hist = jnp.zeros((iters, 3), A_blk.dtype)
+                hist = jnp.zeros((iters, 3), sdt)
             return ((st.z, st.k, st.p_r, st.d_r, st.b_r, st.t), hist,
                     self._pack_state(st))
 
@@ -788,15 +822,17 @@ class ShardedBiCADMM:
         baseline with identical numerics and collectives)."""
         cfg = self.cfg
         K = self.loss.n_classes
+        A_global, b_global = self._cast(A_global, b_global)
         n = A_global.shape[1]
         N, M, nb = self._sizes(n)
         n_pad = M * nb
         A_p, xfac = self._prepare(A_global, n)
-        kaps = jnp.asarray(kappas, A_p.dtype)
+        sdt = cfg.precision.state_dtype(A_p.dtype)
+        kaps = jnp.asarray(kappas, sdt)
         if kaps.ndim != 1 or kaps.shape[0] == 0:
             raise ValueError("kappas must be a non-empty 1-D grid")
         if state is None:
-            state = self.init_state(n, A_global.shape[0], A_p.dtype)
+            state = self.init_state(n, A_global.shape[0], sdt)
 
         nodes = self.nodes_axis
         st_specs = self._state_specs()
@@ -810,7 +846,7 @@ class ShardedBiCADMM:
         def run(A_blk, b_blk, xf, ks, gs):
             outer_step, reset = self._local_funcs(N, M, A_blk, b_blk,
                                                   xf[0, 0])
-            st_init = self._unpack_state(gs, A_blk.dtype)
+            st_init = self._unpack_state(gs, sdt)
 
             def cond(st):
                 done = ((st.p_r < cfg.tol) & (st.d_r < cfg.tol)

@@ -1,20 +1,25 @@
-"""Pallas TPU kernel: batched-threshold ladder statistics in one data pass.
+"""Pallas kernels: batched-threshold ladder statistics in one data pass.
 
 The exact sort-free projections (repro.core.bilinear.ladder_refine) and the
 distributed l1-epigraph / S^kappa projections (repro.core.sharded) need,
 per bracketing round, ``h(theta_b) = sum_i max(|z_i| - theta_b, 0)`` and
 ``c(theta_b) = #{i : |z_i| > theta_b}`` for a whole ladder of B candidate
-thresholds. A GPU implementation sorts; our TPU-native scheme evaluates the
-full ladder in ONE pass over the feature shard (DESIGN §3.3): each grid step
-streams one VMEM block of |z| and accumulates a (2, B) f32 statistics tile
-that stays resident. Collective cost per round is then a single (2*B,)-psum
-instead of an O(n) gather.
+thresholds. A naive implementation sorts; the kernels here evaluate the
+full ladder in ONE pass over the feature shard (DESIGN §3.3). Collective
+cost per round is then a single (2*B,)-psum instead of an O(n) gather.
 
-This kernel is the single audited implementation shared by every ladder
-consumer: ``bilinear.ladder_refine`` bracketing rounds (TPU path),
-``sharded.batched_epigraph_project`` / ``sharded.batched_support_skappa``,
-and the ``projection="ladder_exact"`` engine mode. The pure-jnp oracle it
-is tested against lives in ``repro.kernels.ref.ladder_stats_ref``.
+* **TPU (Mosaic)** — ``ladder_stats``: each grid step streams one VMEM
+  block of |z| and accumulates a (2, B) f32 statistics tile that stays
+  resident (TPU grid iterations are sequential).
+* **GPU (Triton)** — ``ladder_stats_gpu``: Triton programs run in parallel,
+  so each program reduces its own data block to a private (2, B) partial
+  tile; the partials are summed outside the kernel with one jnp reduction
+  — deterministic, no atomics.
+
+Production dispatch goes through the per-backend registry in
+``repro.runtime`` (``repro.kernels.ops.ladder_stats_auto``); CPU falls back
+to the plain-jnp broadcast. The pure-jnp oracle both kernels are tested
+against lives in ``repro.kernels.ref.ladder_stats_ref``.
 """
 from __future__ import annotations
 
@@ -23,6 +28,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .. import runtime
 
 Array = jax.Array
 
@@ -44,18 +51,8 @@ def _ladder_kernel(az_ref, th_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def ladder_stats(az: Array, thetas: Array, *, block: int = 2048,
-                 interpret: bool | None = None) -> Array:
-    """az (n,) nonnegative; thetas (B,). Returns (2, B) f32:
-    row 0 = sum_i max(az_i - theta_b, 0); row 1 = count(az_i > theta_b).
-
-    Data padding uses -inf and ladder padding uses +inf, so padded entries
-    and padded rungs contribute zero to both rows. The theta ladder is
-    padded to a lane multiple and the row block is clamped so the per-step
-    (block, LANE, B) broadcast fits the VMEM budget at any B.
-    """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+def _ladder_stats(az: Array, thetas: Array, *, block: int,
+                  interpret: bool) -> Array:
     n = az.shape[0]
     B = thetas.shape[0]
     Bp = -(-B // _LANE) * _LANE
@@ -81,3 +78,75 @@ def ladder_stats(az: Array, thetas: Array, *, block: int = 2048,
         interpret=interpret,
     )(azp, thp)
     return out[:, :B]
+
+
+def ladder_stats(az: Array, thetas: Array, *, block: int = 2048,
+                 interpret: bool | None = None) -> Array:
+    """az (n,) nonnegative; thetas (B,). Returns (2, B) f32 (TPU/Mosaic):
+    row 0 = sum_i max(az_i - theta_b, 0); row 1 = count(az_i > theta_b).
+
+    Data padding uses -inf and ladder padding uses +inf, so padded entries
+    and padded rungs contribute zero to both rows. The theta ladder is
+    padded to a lane multiple and the row block is clamped so the per-step
+    (block, LANE, B) broadcast fits the VMEM budget at any B.
+    """
+    return _ladder_stats(az, thetas, block=block,
+                         interpret=runtime.resolve_interpret(interpret))
+
+
+# ------------------------------------------------------------ GPU (Triton) --
+
+def _pow2ge(v: int) -> int:
+    p = 1
+    while p < v:
+        p *= 2
+    return p
+
+
+def _ladder_kernel_gpu(az_ref, th_ref, o_ref):
+    # az_ref (block,), th_ref (Bp,), o_ref (2, Bp): one private partial
+    # tile per program — no cross-program accumulation on GPU.
+    az = az_ref[...].astype(jnp.float32)
+    th = th_ref[...].astype(jnp.float32)
+    diff = az[:, None] - th[None, :]                 # (block, Bp)
+    o_ref[0, :] = jnp.sum(jnp.maximum(diff, 0.0), axis=0)
+    o_ref[1, :] = jnp.sum((diff > 0.0).astype(jnp.float32), axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _ladder_stats_gpu(az: Array, thetas: Array, *, block: int,
+                      interpret: bool) -> Array:
+    n = az.shape[0]
+    B = thetas.shape[0]
+    Bp = max(16, _pow2ge(B))            # power-of-two tile for tl.arange
+    block = max(16, min(_pow2ge(block), _pow2ge(n)))
+    n_p = -(-n // block) * block
+    azp = jnp.full((n_p,), -jnp.inf, az.dtype).at[:n].set(az)
+    thp = jnp.full((Bp,), jnp.inf, thetas.dtype).at[:B].set(thetas)
+    nblocks = n_p // block
+    partial = pl.pallas_call(
+        _ladder_kernel_gpu,
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((Bp,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((2, Bp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((2 * nblocks, Bp), jnp.float32),
+        interpret=interpret,
+    )(azp, thp)
+    # Deterministic cross-program reduction outside the kernel (one jnp
+    # sum over the partial tiles) instead of GPU atomics.
+    out = partial.reshape(nblocks, 2, Bp).sum(axis=0)
+    return out[:, :B]
+
+
+def ladder_stats_gpu(az: Array, thetas: Array, *, block: int = 256,
+                     interpret: bool | None = None) -> Array:
+    """GPU-portable ladder statistics; same contract as :func:`ladder_stats`.
+
+    Each Triton program reduces a (block,) slice of |z| against the full
+    padded ladder into a private (2, Bp) partial tile; partials are summed
+    with one jnp reduction. Padding semantics (-inf data, +inf rungs)
+    match the TPU kernel bit for bit.
+    """
+    return _ladder_stats_gpu(az, thetas, block=block,
+                             interpret=runtime.resolve_interpret(interpret))

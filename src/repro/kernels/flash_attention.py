@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .. import runtime
+
 Array = jax.Array
 
 NEG_INF = -1e30
@@ -74,8 +76,7 @@ def flash_attention_flat(q: Array, k: Array, v: Array, *,
                          block_k: int = 128, sm_scale: float | None = None,
                          interpret: bool | None = None) -> Array:
     """q (BHq, Sq, Dh); k/v (BHkv, Sk, Dh) head-major. Returns like q."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = runtime.resolve_interpret(interpret)
     BH, Sq, Dh = q.shape
     BHkv, Sk, _ = k.shape
     assert BH % BHkv == 0

@@ -1,4 +1,4 @@
-"""Pallas TPU kernels: tiled matrix-vector products for the matrix-free
+"""Pallas kernels: tiled matrix-vector products for the matrix-free
 x-update engines (normal-equation Hessian-vector products).
 
 The (7a) prox of the squared loss reduces to solving
@@ -9,18 +9,25 @@ of matvecs
     w = A p          (forward,  (m, n) @ (n, K))
     g = A^T w        (adjoint,  (n, m) @ (m, K))
 
-plus an axpy. Both kernels tile A into MXU-aligned VMEM blocks and
-accumulate in f32 with the reduction axis innermost in the grid, so each
-output tile stays resident across the whole sweep of the contracted
-dimension (same structure as ``repro.kernels.gram``). The trailing
-operand dimension K (1 for scalar losses, n_classes for softmax) is padded
-to a single 128-wide lane tile.
+plus an axpy. Two Pallas implementations live here:
 
-Row/column blocks are clamped so one (block_m x block_n) A tile plus the
-operand/accumulator tiles fit a conservative VMEM budget at any input
-shape; off-TPU callers should use the ``*_auto`` dispatchers in
-``repro.kernels.ops`` which fall back to the identical plain-jnp
-contractions (XLA's CPU/GPU matmuls need no hand tiling).
+* **TPU (Mosaic)** — ``matvec`` / ``rmatvec`` / ``normal_matvec``: A is
+  tiled into MXU-aligned VMEM blocks with the reduction axis innermost in
+  the grid, so each f32 output tile stays resident across the whole sweep
+  of the contracted dimension (grid iterations are sequential on TPU).
+* **GPU (Triton)** — ``matvec_gpu`` / ``rmatvec_gpu`` / ``normal_matvec_gpu``:
+  Triton grid programs run in *parallel* with no cross-program memory
+  ordering, so the TPU accumulation pattern would race. The GPU kernels
+  grid over output tiles only and run the contraction *inside* each program
+  (``fori_loop`` over contraction blocks, local f32 accumulator, single
+  store) — deterministic, race-free, ``tl.dot``-shaped (every dot dim a
+  power of two >= 16).
+
+Production dispatch routes through the per-backend registry in
+``repro.runtime`` (see ``repro.kernels.ops``); the plain-jnp CPU fallback
+stays bit-identical to the historical contractions. ``interpret=None``
+resolves via ``runtime.resolve_interpret`` — interpret-mode Pallas is a
+debug/CI-parity tool, never an implicit production path.
 """
 from __future__ import annotations
 
@@ -30,6 +37,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .. import runtime
+
 Array = jax.Array
 
 # f32 elements of VMEM we allow one kernel instance to hold across the A
@@ -37,10 +46,28 @@ Array = jax.Array
 # per-core budget, leaving room for double buffering).
 _VMEM_ELEMS = 1 << 20
 _LANE = 128
+# Triton's tl.dot needs every dot dimension >= 16, and tile extents must be
+# powers of two (tl.arange constraint).
+_GPU_MIN = 16
 
 
 def _rup(v: int, mult: int) -> int:
     return -(-v // mult) * mult
+
+
+def _pow2ge(v: int) -> int:
+    p = 1
+    while p < v:
+        p *= 2
+    return p
+
+
+def _gpu_block(dim: int, cap: int) -> int:
+    """Smallest power-of-two tile >= 16 covering ``dim``, capped at ``cap``."""
+    b = _GPU_MIN
+    while b < dim and b < cap:
+        b *= 2
+    return b
 
 
 def _pad2(a: Array, bm: int, bn: int) -> Array:
@@ -63,6 +90,8 @@ def _as_2d(x: Array) -> tuple[Array, bool]:
     return (x[:, None], True) if x.ndim == 1 else (x, False)
 
 
+# ------------------------------------------------------------ TPU (Mosaic) --
+
 def _mv_kernel(a_ref, x_ref, o_ref):
     @pl.when(pl.program_id(1) == 0)
     def _init():
@@ -73,11 +102,8 @@ def _mv_kernel(a_ref, x_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n",
                                              "interpret"))
-def matvec(a: Array, x: Array, *, block_m: int = 256, block_n: int = 512,
-           interpret: bool | None = None) -> Array:
-    """w = a @ x in f32. a (m, n); x (n,) or (n, K); returns (m,) / (m, K)."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+def _matvec(a: Array, x: Array, *, block_m: int, block_n: int,
+            interpret: bool) -> Array:
     m, n = a.shape
     x2, was_1d = _as_2d(x)
     k = x2.shape[1]
@@ -99,6 +125,13 @@ def matvec(a: Array, x: Array, *, block_m: int = 256, block_n: int = 512,
     return out[:, 0] if was_1d else out
 
 
+def matvec(a: Array, x: Array, *, block_m: int = 256, block_n: int = 512,
+           interpret: bool | None = None) -> Array:
+    """w = a @ x in f32 (TPU/Mosaic). a (m, n); x (n,) or (n, K)."""
+    return _matvec(a, x, block_m=block_m, block_n=block_n,
+                   interpret=runtime.resolve_interpret(interpret))
+
+
 def _rmv_kernel(a_ref, y_ref, o_ref):
     @pl.when(pl.program_id(1) == 0)
     def _init():
@@ -109,11 +142,8 @@ def _rmv_kernel(a_ref, y_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n",
                                              "interpret"))
-def rmatvec(a: Array, y: Array, *, block_m: int = 256, block_n: int = 512,
-            interpret: bool | None = None) -> Array:
-    """g = a^T @ y in f32. a (m, n); y (m,) or (m, K); returns (n,) / (n, K)."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+def _rmatvec(a: Array, y: Array, *, block_m: int, block_n: int,
+             interpret: bool) -> Array:
     m, n = a.shape
     y2, was_1d = _as_2d(y)
     k = y2.shape[1]
@@ -135,6 +165,13 @@ def rmatvec(a: Array, y: Array, *, block_m: int = 256, block_n: int = 512,
     return out[:, 0] if was_1d else out
 
 
+def rmatvec(a: Array, y: Array, *, block_m: int = 256, block_n: int = 512,
+            interpret: bool | None = None) -> Array:
+    """g = a^T @ y in f32 (TPU/Mosaic). a (m, n); y (m,) or (m, K)."""
+    return _rmatvec(a, y, block_m=block_m, block_n=block_n,
+                    interpret=runtime.resolve_interpret(interpret))
+
+
 def normal_matvec(a: Array, p: Array, shift: Array | float, *,
                   block_m: int = 256, block_n: int = 512,
                   interpret: bool | None = None) -> Array:
@@ -148,4 +185,108 @@ def normal_matvec(a: Array, p: Array, shift: Array | float, *,
     w = matvec(a, p, block_m=block_m, block_n=block_n, interpret=interpret)
     g = rmatvec(a, w.astype(a.dtype), block_m=block_m, block_n=block_n,
                 interpret=interpret)
+    return (g + shift * p.astype(jnp.float32)).astype(a.dtype)
+
+
+# ------------------------------------------------------------ GPU (Triton) --
+
+def _mv_kernel_gpu(a_ref, x_ref, o_ref, *, nsteps: int, bn: int):
+    # a_ref (bm, n_pad) window, x_ref (n_pad, kp): contract inside the
+    # program — parallel Triton programs cannot share an accumulator tile.
+    def body(j, acc):
+        a_blk = pl.load(a_ref, (slice(None), pl.dslice(j * bn, bn)))
+        x_blk = pl.load(x_ref, (pl.dslice(j * bn, bn), slice(None)))
+        return acc + jnp.dot(a_blk, x_blk, preferred_element_type=jnp.float32)
+
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    o_ref[...] = jax.lax.fori_loop(0, nsteps, body, acc)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                             "interpret"))
+def _matvec_gpu(a: Array, x: Array, *, block_m: int, block_n: int,
+                interpret: bool) -> Array:
+    m, n = a.shape
+    x2, was_1d = _as_2d(x)
+    k = x2.shape[1]
+    kp = max(_GPU_MIN, _pow2ge(k))
+    bm = _gpu_block(m, block_m)
+    bn = _gpu_block(n, block_n)
+    ap = _pad2(a, bm, bn)
+    xp = _pad2(x2, bn, kp)
+    np_ = ap.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_mv_kernel_gpu, nsteps=np_ // bn, bn=bn),
+        grid=(ap.shape[0] // bm,),
+        in_specs=[pl.BlockSpec((bm, np_), lambda i: (i, 0)),
+                  pl.BlockSpec((np_, kp), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((bm, kp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ap.shape[0], kp), jnp.float32),
+        interpret=interpret,
+    )(ap, xp)
+    out = out[:m, :k]
+    return out[:, 0] if was_1d else out
+
+
+def matvec_gpu(a: Array, x: Array, *, block_m: int = 64, block_n: int = 64,
+               interpret: bool | None = None) -> Array:
+    """w = a @ x in f32 — GPU-portable (Triton-lowered) tiled matvec."""
+    return _matvec_gpu(a, x, block_m=block_m, block_n=block_n,
+                       interpret=runtime.resolve_interpret(interpret))
+
+
+def _rmv_kernel_gpu(a_ref, y_ref, o_ref, *, nsteps: int, bm: int):
+    # a_ref (m_pad, bn) window, y_ref (m_pad, kp): one n-tile per program,
+    # fori_loop over the sample blocks of the adjoint contraction.
+    def body(j, acc):
+        a_blk = pl.load(a_ref, (pl.dslice(j * bm, bm), slice(None)))
+        y_blk = pl.load(y_ref, (pl.dslice(j * bm, bm), slice(None)))
+        return acc + jnp.dot(a_blk.T, y_blk,
+                             preferred_element_type=jnp.float32)
+
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    o_ref[...] = jax.lax.fori_loop(0, nsteps, body, acc)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                             "interpret"))
+def _rmatvec_gpu(a: Array, y: Array, *, block_m: int, block_n: int,
+                 interpret: bool) -> Array:
+    m, n = a.shape
+    y2, was_1d = _as_2d(y)
+    k = y2.shape[1]
+    kp = max(_GPU_MIN, _pow2ge(k))
+    bm = _gpu_block(m, block_m)
+    bn = _gpu_block(n, block_n)
+    ap = _pad2(a, bm, bn)
+    yp = _pad2(y2, bm, kp)
+    mp = ap.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_rmv_kernel_gpu, nsteps=mp // bm, bm=bm),
+        grid=(ap.shape[1] // bn,),
+        in_specs=[pl.BlockSpec((mp, bn), lambda i: (0, i)),
+                  pl.BlockSpec((mp, kp), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((bn, kp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ap.shape[1], kp), jnp.float32),
+        interpret=interpret,
+    )(ap, yp)
+    out = out[:n, :k]
+    return out[:, 0] if was_1d else out
+
+
+def rmatvec_gpu(a: Array, y: Array, *, block_m: int = 64, block_n: int = 64,
+                interpret: bool | None = None) -> Array:
+    """g = a^T @ y in f32 — GPU-portable adjoint of :func:`matvec_gpu`."""
+    return _rmatvec_gpu(a, y, block_m=block_m, block_n=block_n,
+                        interpret=runtime.resolve_interpret(interpret))
+
+
+def normal_matvec_gpu(a: Array, p: Array, shift: Array | float, *,
+                      block_m: int = 64, block_n: int = 64,
+                      interpret: bool | None = None) -> Array:
+    """(A^T A + diag(shift)) p via two GPU-portable passes over A."""
+    w = matvec_gpu(a, p, block_m=block_m, block_n=block_n,
+                   interpret=interpret)
+    g = rmatvec_gpu(a, w.astype(a.dtype), block_m=block_m, block_n=block_n,
+                    interpret=interpret)
     return (g + shift * p.astype(jnp.float32)).astype(a.dtype)

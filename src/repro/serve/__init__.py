@@ -20,8 +20,8 @@ synthetic demo workload and ``benchmarks/serve_bench.py`` the open-loop
 latency benchmark. Operator runbook: ``docs/serving.md``.
 """
 from .batcher import (DeadlineExceeded, DriverCache, FitRequest,
-                      MicroBatcher, ServeResult, Signature, next_pow2,
-                      solve_batch)
+                      IterRateEstimator, MicroBatcher, ServeResult,
+                      Signature, next_pow2, solve_batch)
 from .metrics import GLOSSARY, LatencyRecorder, ServeMetrics
 from .plane import FittingService, ServeOptions, ServiceStopped
 from .store import WarmEntry, WarmPool, pytree_nbytes
@@ -32,6 +32,7 @@ __all__ = [
     "FitRequest",
     "FittingService",
     "GLOSSARY",
+    "IterRateEstimator",
     "LatencyRecorder",
     "MicroBatcher",
     "ServeMetrics",

@@ -35,6 +35,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .. import runtime
 from ..core.fleet import (_pad_loss_unit, stack_states, zero_lane_state)
 from ..core.results import FitResult
 from .metrics import ServeMetrics
@@ -217,12 +218,15 @@ class DriverCache:
         self._problem = problem
         self._options = options
         self.metrics = metrics
+        # cache keys carry the precision policy: a bf16 adapter and an
+        # fp32 adapter at the same model key are distinct compiled programs
+        self.precision = runtime.precision_name(options.precision)
         self._adapters: dict[tuple, Any] = {}
         self.seen: set[tuple] = set()
 
     def adapter(self, sig: Signature):
         """The (cached) reference-engine adapter solving ``sig``'s model."""
-        key = (sig.loss, sig.n_classes)
+        key = (sig.loss, sig.n_classes, self.precision)
         ad = self._adapters.get(key)
         if ad is None:
             problem = self._problem
@@ -244,8 +248,63 @@ class DriverCache:
             self.metrics.bump("driver_compiles")
 
 
+class IterRateEstimator:
+    """Per-signature EWMA of the observed solve rate (iterations/second).
+
+    Every dispatched batch yields one sample — the slowest real lane's
+    iteration count over the batch's solve wall time (lanes run in
+    lockstep, so the slowest lane sets the wall time). The EWMA smooths
+    compile-first-batch spikes; a signature reports no rate until it has
+    ``min_samples`` observations, during which the service falls back to
+    the operator-supplied ``deadline_iter_rate`` (or no capping at all).
+    Plain Python, written only from the solver thread."""
+
+    def __init__(self, alpha: float = 0.3, min_samples: int = 3):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1]; got {alpha}")
+        if min_samples < 1:
+            raise ValueError(f"min_samples must be >= 1; got {min_samples}")
+        self.alpha = alpha
+        self.min_samples = min_samples
+        self._ewma: dict[Signature, float] = {}
+        self._count: dict[Signature, int] = {}
+
+    def observe(self, sig: Signature, iters: int, solve_s: float) -> None:
+        """Fold one batch's (iterations, wall seconds) into the EWMA."""
+        if iters <= 0 or solve_s <= 0.0:
+            return                      # cap-0 or clock-degenerate batch
+        sample = iters / solve_s
+        prev = self._ewma.get(sig)
+        self._ewma[sig] = (sample if prev is None
+                           else (1.0 - self.alpha) * prev
+                           + self.alpha * sample)
+        self._count[sig] = self._count.get(sig, 0) + 1
+
+    def rate(self, sig: Signature) -> float | None:
+        """The calibrated iterations/second for ``sig``, or None while
+        fewer than ``min_samples`` batches have been observed."""
+        if self._count.get(sig, 0) < self.min_samples:
+            return None
+        return self._ewma[sig]
+
+    def samples(self, sig: Signature) -> int:
+        """Number of batches observed for ``sig``."""
+        return self._count.get(sig, 0)
+
+    def snapshot(self) -> dict:
+        """JSON-friendly ``iter_rate`` readout: one row per signature with
+        the current EWMA, sample count, and whether it is serving yet."""
+        return {
+            f"{s.loss}/K{s.n_classes}/N{s.N}/n{s.n}": dict(
+                rate=self._ewma[s], samples=self._count[s],
+                calibrated=self._count[s] >= self.min_samples)
+            for s in self._ewma
+        }
+
+
 def solve_batch(batch: PendingBatch, drivers: DriverCache, pool: WarmPool,
                 metrics: ServeMetrics, *, iter_rate: float | None = None,
+                rate_estimator: IterRateEstimator | None = None,
                 pad_shapes: bool = True,
                 clock=time.monotonic) -> list[tuple[FitRequest, Any]]:
     """Solve one closed batch through the fleet driver; returns
@@ -254,9 +313,11 @@ def solve_batch(batch: PendingBatch, drivers: DriverCache, pool: WarmPool,
     Runs on the service's solver thread. Steps: drop dead lanes, pad
     ``m``/``B`` to the quantized compile shape, stack per-lane warm states
     from the pool (zero state for cold lanes — identical to a cold start),
-    translate remaining deadlines into per-lane iteration caps, run
-    ``fit_many_stacked`` via the cached adapter, then scatter results and
-    refresh the pool."""
+    translate remaining deadlines into per-lane iteration caps (using the
+    calibrated per-signature rate when ``rate_estimator`` has one, the
+    manual ``iter_rate`` otherwise), run ``fit_many_stacked`` via the
+    cached adapter, then scatter results, feed the observed rate back to
+    the estimator, and refresh the pool."""
     now = clock()
     sig = batch.signature
     live, outcomes = [], []
@@ -276,7 +337,9 @@ def solve_batch(batch: PendingBatch, drivers: DriverCache, pool: WarmPool,
     adapter = drivers.adapter(sig)
     solver = adapter.solver
     cfg = solver.cfg
-    dt = jnp.asarray(live[0].X).dtype
+    # stack straight into the policy data dtype: one cast at admission
+    # instead of a per-fit cast inside the solver
+    dt = cfg.precision.data_dtype(jnp.asarray(live[0].X).dtype)
 
     data = [_normalize_data(r.X, r.y) for r in live]
     m_max = max(X.shape[1] for X, _ in data)
@@ -321,17 +384,21 @@ def solve_batch(batch: PendingBatch, drivers: DriverCache, pool: WarmPool,
     # padding lanes get cap 0 (inert). ``capped`` marks lanes whose budget
     # was actually tightened by a deadline — only those can report
     # ``deadline_aborted`` (hitting the config's own max_iter is not one).
+    # A calibrated per-signature rate takes precedence over the manual one.
+    eff_rate = iter_rate
+    if rate_estimator is not None:
+        eff_rate = rate_estimator.rate(sig) or iter_rate
     caps, capped = [], []
     for r in live:
         cap = cfg.max_iter
-        if r.deadline is not None and iter_rate is not None:
+        if r.deadline is not None and eff_rate is not None:
             cap = max(1, min(cfg.max_iter,
-                             int((r.deadline - now) * iter_rate)))
+                             int((r.deadline - now) * eff_rate)))
         caps.append(cap)
         capped.append(cap < cfg.max_iter)
     iter_caps = jnp.asarray(caps + [0] * (B_pad - B_real), jnp.int32)
 
-    shape_sig = (sig, B_pad, m_pad, bool(dyn_pen))
+    shape_sig = (sig, B_pad, m_pad, bool(dyn_pen), drivers.precision)
     drivers.note_dispatch(shape_sig)
     t0 = clock()
     fleet = adapter.fit_many_stacked(As, bs, kappas=kappas, gammas=gammas,
@@ -340,6 +407,9 @@ def solve_batch(batch: PendingBatch, drivers: DriverCache, pool: WarmPool,
     jax.block_until_ready(fleet.z)
     solve_s = clock() - t0
     metrics.solve_s.record(solve_s)
+    if rate_estimator is not None:
+        rate_estimator.observe(
+            sig, max(int(fleet.iters[i]) for i in range(B_real)), solve_s)
     metrics.bump("batches")
     metrics.bump("batch_lanes", B_real)
     metrics.bump("pad_lanes", B_pad - B_real)

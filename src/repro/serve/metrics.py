@@ -37,6 +37,9 @@ GLOSSARY = {
     "latency_s": "request wall time, submit to future resolution",
     "queue_s": "request wall time spent pending in the micro-batcher",
     "solve_s": "batch wall time inside the fleet driver (per batch)",
+    "iter_rate": "per-signature EWMA of observed solve rate (outer "
+                 "iterations per second), with sample count and whether "
+                 "it is calibrated yet (snapshot-only; not a counter)",
 }
 
 

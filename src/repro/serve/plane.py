@@ -23,10 +23,13 @@ Request lifecycle::
 Deadlines are enforced at three points: admission (already-expired
 requests are rejected), while queued (an expiring request fails cleanly
 without ever being solved), and inside the solver (remaining wall budget
-translates to a per-lane iteration cap when ``deadline_iter_rate`` is
-calibrated — the lane returns its best iterate, flagged
-``deadline_aborted``). Cancelling the returned future while the request
-is queued drops it at batch close.
+translates to a per-lane iteration cap once an iteration rate is known —
+the lane returns its best iterate, flagged ``deadline_aborted``). The
+rate self-calibrates: every dispatched batch feeds a per-signature EWMA
+(:class:`~repro.serve.batcher.IterRateEstimator`), and the manual
+``deadline_iter_rate`` serves only until a signature has enough samples.
+Cancelling the returned future while the request is queued drops it at
+batch close.
 
 Warm starts are transparent: pass a stable ``client_id`` and the client's
 previous ADMM state is stacked into the batch from the
@@ -44,7 +47,8 @@ from concurrent.futures import ThreadPoolExecutor
 import jax.numpy as jnp
 
 from .batcher import (DeadlineExceeded, DriverCache, FitRequest,
-                      MicroBatcher, ServeResult, Signature, solve_batch)
+                      IterRateEstimator, MicroBatcher, ServeResult,
+                      Signature, solve_batch)
 from .metrics import ServeMetrics
 from .store import WarmPool
 
@@ -66,14 +70,22 @@ class ServeOptions:
     ``warm_pool_bytes``. ``deadline_iter_rate`` (outer iterations per
     second, measured for the deployment by ``serve_bench``) enables the
     per-lane deadline abort; None disables it (deadlines then only gate
-    admission and queue expiry). ``pad_shapes`` quantizes dispatch shapes
-    (``m``, batch axis) to powers of two so live traffic compiles a
+    admission and queue expiry). With ``calibrate_iter_rate`` on (the
+    default) the service measures that rate itself — a per-signature EWMA
+    (``iter_rate_ewma``) over observed batch iteration counts and solve
+    wall times — and the calibrated rate takes over from the manual one
+    once a signature has ``iter_rate_min_samples`` batches; until then the
+    manual rate (or no capping) applies. ``pad_shapes`` quantizes dispatch
+    shapes (``m``, batch axis) to powers of two so live traffic compiles a
     handful of driver programs instead of one per batch size."""
     max_batch: int = 32
     max_wait_s: float = 0.005
     warm_pool_entries: int = 512
     warm_pool_bytes: int | None = None
     deadline_iter_rate: float | None = None
+    calibrate_iter_rate: bool = True
+    iter_rate_ewma: float = 0.3
+    iter_rate_min_samples: int = 3
     pad_shapes: bool = True
 
 
@@ -106,6 +118,10 @@ class FittingService:
                              self.serve_options.warm_pool_bytes,
                              metrics=self.metrics)
         self.drivers = DriverCache(problem, self.options, self.metrics)
+        self.rate_estimator = (
+            IterRateEstimator(self.serve_options.iter_rate_ewma,
+                              self.serve_options.iter_rate_min_samples)
+            if self.serve_options.calibrate_iter_rate else None)
         self._batcher = MicroBatcher(self.serve_options.max_batch,
                                      self.serve_options.max_wait_s)
         self._running = False
@@ -231,6 +247,8 @@ class FittingService:
         out["pool_nbytes"] = self.pool.nbytes
         out["pending_requests"] = self._batcher.pending_requests
         out["compiled_shapes"] = len(self.drivers.seen)
+        out["iter_rate"] = (self.rate_estimator.snapshot()
+                            if self.rate_estimator is not None else {})
         return out
 
     # -- internal loops ------------------------------------------------------
@@ -289,4 +307,5 @@ class FittingService:
         return solve_batch(
             batch, self.drivers, self.pool, self.metrics,
             iter_rate=self.serve_options.deadline_iter_rate,
+            rate_estimator=self.rate_estimator,
             pad_shapes=self.serve_options.pad_shapes, clock=self._clock)

@@ -1,0 +1,221 @@
+"""GPU-portable Pallas kernels, certified on CPU CI.
+
+Two suites:
+
+* **Interpret-mode parity.** Every GPU (Triton-lowered) kernel runs under
+  ``interpret=True`` — bit-exact emulation of the kernel program — and
+  must match the f32 reference oracles within the accumulation-order
+  round-off band. This is what lets CPU CI certify the GPU tile programs
+  without a GPU.
+* **Mixed precision vs an fp64 oracle.** bf16/fp16 operands with f32
+  accumulation, compared against a numpy float64 oracle with *explicit*
+  bounds: the end-to-end error is dominated by input quantization
+  (``~2u`` per product, ``u`` the data dtype's rounding unit), while the
+  f32-accumulated error vs the oracle on the *rounded* inputs stays at
+  f32 round-off — i.e. the accumulator never narrows. Solver-level: a
+  reduced-precision fit recovers the same support as fp32 on a graded
+  instance.
+
+Interpret-mode Pallas is never picked implicitly by production dispatch
+(``test_runtime`` covers the policy); here it is always requested
+explicitly or via ``runtime.force_interpret``.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import runtime
+from repro.core import BiCADMM, BiCADMMConfig
+from repro.data import SyntheticSpec, make_graded_regression
+from repro.kernels import ops
+from repro.kernels.bisect_proj import ladder_stats_gpu
+from repro.kernels.gram import gram_gpu, gram_xy_gpu
+from repro.kernels.matvec import matvec_gpu, normal_matvec_gpu, rmatvec_gpu
+from repro.kernels.ref import (gram_ref, gram_xy_ref, ladder_stats_ref,
+                               matvec_ref, normal_matvec_ref, rmatvec_ref)
+
+# accumulation-order round-off band for f32 tile programs vs the oracle
+F32_TOL = dict(rtol=1e-4, atol=1e-5)
+
+# rounding unit u = eps/2 of the reduced data dtypes: one rounding of an
+# input perturbs it by at most u relative; a product of two rounded
+# inputs by ~2u. The kernel bounds below are C * u with C = 4 (two input
+# roundings plus f32 accumulation headroom).
+ULP = {"bfloat16": 2.0 ** -8, "float16": 2.0 ** -11}
+
+# mixed (m, n) shapes: tile-aligned, odd/prime, sub-tile
+SHAPES = [(37, 13), (64, 32), (129, 65), (5, 3)]
+
+
+def _mat(seed, m, n, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((m, n)).astype(dtype))
+
+
+def _vec(seed, n, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n,)).astype(dtype))
+
+
+# --------------------------------------------------------------------------
+# interpret-mode parity: GPU tile programs emulated on CPU vs f32 oracles
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("m,n", SHAPES)
+def test_gram_gpu_interpret_parity(m, n):
+    a = _mat(0, m, n)
+    out = gram_gpu(a, interpret=True)
+    np.testing.assert_allclose(out, gram_ref(a), **F32_TOL)
+
+
+def test_gram_xy_gpu_interpret_parity():
+    x, y = _mat(1, 37, 13), _mat(2, 37, 21)
+    out = gram_xy_gpu(x, y, interpret=True)
+    np.testing.assert_allclose(out, gram_xy_ref(x, y), **F32_TOL)
+
+
+@pytest.mark.parametrize("m,n", SHAPES)
+def test_matvec_gpu_interpret_parity(m, n):
+    a, x = _mat(3, m, n), _vec(4, n)
+    np.testing.assert_allclose(matvec_gpu(a, x, interpret=True),
+                               matvec_ref(a, x), **F32_TOL)
+    xk = _mat(5, n, 3)          # multi-column right-hand sides
+    np.testing.assert_allclose(matvec_gpu(a, xk, interpret=True),
+                               matvec_ref(a, xk), **F32_TOL)
+
+
+@pytest.mark.parametrize("m,n", SHAPES)
+def test_rmatvec_gpu_interpret_parity(m, n):
+    a, y = _mat(6, m, n), _vec(7, m)
+    np.testing.assert_allclose(rmatvec_gpu(a, y, interpret=True),
+                               rmatvec_ref(a, y), **F32_TOL)
+
+
+def test_normal_matvec_gpu_interpret_parity():
+    a, p = _mat(8, 37, 13), _vec(9, 13)
+    for shift in (0.7, jnp.full((13,), 0.3, jnp.float32)):
+        np.testing.assert_allclose(
+            normal_matvec_gpu(a, p, shift, interpret=True),
+            normal_matvec_ref(a, p, shift), **F32_TOL)
+
+
+@pytest.mark.parametrize("n,B", [(1000, 7), (64, 16), (3, 2)])
+def test_ladder_stats_gpu_interpret_parity(n, B):
+    rng = np.random.default_rng(10)
+    az = jnp.asarray(np.abs(rng.standard_normal(n)).astype(np.float32))
+    thetas = jnp.asarray(
+        np.sort(rng.uniform(0.0, 1.5, B)).astype(np.float32))
+    out = ladder_stats_gpu(az, thetas, interpret=True)
+    ref = ladder_stats_ref(az, thetas)
+    np.testing.assert_allclose(out[0], ref[0], **F32_TOL)
+    np.testing.assert_array_equal(out[1], ref[1])   # counts are exact
+
+
+def test_force_interpret_reaches_gpu_wrappers():
+    """The debug flag (not an explicit argument) is what lets the GPU
+    tile programs run here on CPU — resolve_interpret flows through every
+    public wrapper."""
+    a = _mat(11, 37, 13)
+    with runtime.force_interpret():
+        np.testing.assert_allclose(gram_gpu(a), gram_ref(a), **F32_TOL)
+        np.testing.assert_allclose(matvec_gpu(a, _vec(12, 13)),
+                                   matvec_ref(a, _vec(12, 13)), **F32_TOL)
+
+
+def test_cpu_production_dispatch_never_interprets():
+    """On CPU the registry resolves every hot kernel to its plain-jnp
+    default entry — interpret-mode Pallas is unreachable without the
+    explicit debug flag (flash attention is the one documented exception)."""
+    table = runtime.kernel_table()
+    for name in ("gram", "matvec", "rmatvec", "normal_matvec",
+                 "ladder_stats", "block_matvec", "block_rmatvec"):
+        assert runtime.kernel(name, "cpu") is table[name]["default"], name
+
+
+# --------------------------------------------------------------------------
+# mixed precision: bf16/fp16 data, f32 accumulation, fp64 oracle
+# --------------------------------------------------------------------------
+def _quantized(seed, m, n, dtype):
+    """(rounded jnp array, its exact fp64 value) for the given data dtype."""
+    rng = np.random.default_rng(seed)
+    a64 = rng.standard_normal((m, n))
+    aq = jnp.asarray(a64, jnp.float32).astype(dtype)
+    return aq, np.asarray(aq, np.float64)
+
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "float16"])
+def test_gram_mixed_precision_vs_fp64_oracle(dtype):
+    m, n = 96, 24
+    aq, a64 = _quantized(20, m, n, dtype)
+    out = np.asarray(gram_gpu(aq, interpret=True), np.float64)
+    # (1) accumulation error vs the oracle on the ROUNDED inputs: the f32
+    # accumulator tiles must not narrow to the data dtype
+    exact = a64.T @ a64
+    scale = np.abs(a64).T @ np.abs(a64)
+    acc_err = np.abs(out - exact)
+    assert np.all(acc_err <= 1e-5 * scale + 1e-6)
+    # (2) total quantization error vs the oracle on the ORIGINAL values
+    rng = np.random.default_rng(20)
+    a_orig = rng.standard_normal((m, n))
+    total_err = np.abs(out - a_orig.T @ a_orig)
+    assert np.all(total_err <= 4.0 * ULP[dtype] * scale + 1e-6)
+
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "float16"])
+def test_matvec_rmatvec_mixed_precision_vs_fp64_oracle(dtype):
+    m, n = 96, 24
+    aq, a64 = _quantized(21, m, n, dtype)
+    rng = np.random.default_rng(22)
+    x64 = rng.standard_normal(n)
+    xq = jnp.asarray(x64, jnp.float32).astype(dtype)
+    x64 = np.asarray(xq, np.float64)
+    out = np.asarray(matvec_gpu(aq, xq, interpret=True), np.float64)
+    scale = np.abs(a64) @ np.abs(x64)
+    assert np.all(np.abs(out - a64 @ x64) <= 1e-5 * scale + 1e-6)
+    y64 = rng.standard_normal(m)
+    yq = jnp.asarray(y64, jnp.float32).astype(dtype)
+    y64 = np.asarray(yq, np.float64)
+    out = np.asarray(rmatvec_gpu(aq, yq, interpret=True), np.float64)
+    scale = np.abs(a64).T @ np.abs(y64)
+    assert np.all(np.abs(out - a64.T @ y64) <= 1e-5 * scale + 1e-6)
+
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "float16"])
+def test_registry_out_dtype_widens_factors(dtype):
+    """The registry's ``out_dtype`` hook — how the PrecisionPolicy gets
+    f32 factors from reduced data — must accumulate in f32 on every
+    backend entry, including the CPU jnp default."""
+    aq, a64 = _quantized(23, 64, 16, dtype)
+    for backend_name in ("default",):
+        g = runtime.kernel("gram", backend_name)(aq, jnp.float32)
+        assert g.dtype == jnp.float32
+        scale = np.abs(a64).T @ np.abs(a64)
+        assert np.all(np.abs(np.asarray(g, np.float64) - a64.T @ a64)
+                      <= 1e-5 * scale + 1e-6)
+        atb = runtime.kernel("rmatvec", backend_name)(
+            aq, aq[:, 0], jnp.float32)
+        assert atb.dtype == jnp.float32
+    # out_dtype=None keeps the narrow dtype (storage stays reduced)
+    assert ops.gram_auto(aq).dtype == jnp.dtype(dtype)
+
+
+@pytest.mark.parametrize("precision", ["bf16", "fp16"])
+def test_reduced_precision_fit_recovers_fp32_support(precision):
+    """Solver-level differential: on a graded instance the bf16/fp16
+    policies must select the same support as the fp32 fit (coefficients
+    agree to data-quantization order)."""
+    spec = SyntheticSpec(2, 120, 24, sparsity_level=0.75, noise=1e-4)
+    As, bs, _ = make_graded_regression(5, spec)
+    cfg = dict(kappa=6, gamma=10.0, rho_c=1.0, alpha=0.5,
+               max_iter=400, tol=1e-4)
+    ref = BiCADMM("squared", BiCADMMConfig(**cfg)).fit(As, bs)
+    red = BiCADMM("squared",
+                  BiCADMMConfig(**cfg, precision=precision)).fit(As, bs)
+    assert red.x.dtype == jnp.float32       # state pinned to f32
+    np.testing.assert_array_equal(np.asarray(red.support),
+                                  np.asarray(ref.support))
+    np.testing.assert_allclose(np.asarray(red.z), np.asarray(ref.z),
+                               rtol=0.0,
+                               atol=40.0 * ULP[
+                                   {"bf16": "bfloat16",
+                                    "fp16": "float16"}[precision]])

@@ -1,0 +1,148 @@
+"""The runtime platform layer (``repro.runtime``).
+
+The contract under test:
+
+* backend resolution normalizes accelerator names and honors the
+  ``use_backend`` test pin;
+* the kernel registry resolves (name, backend) with a ``"default"``
+  fallback and fails loudly on unknown names — and every hot kernel the
+  tentpole ported has tpu + gpu + default rows;
+* interpret-mode Pallas is opt-in only: production dispatch
+  (``interpret=None``) never interprets unless the debug flag is set;
+* ``PrecisionPolicy`` validates its dtypes, the presets resolve by name,
+  and the x64 guard refuses fp64 stages while x64 mode is off.
+"""
+import pytest
+
+import jax.numpy as jnp
+
+from repro import runtime
+
+
+# --------------------------------------------------------------------------
+# backend resolution
+# --------------------------------------------------------------------------
+def test_backend_is_canonical_and_pinnable():
+    assert runtime.backend() in ("cpu", "gpu", "tpu")
+    with runtime.use_backend("tpu"):
+        assert runtime.backend() == "tpu"
+        with runtime.use_backend("gpu"):
+            assert runtime.backend() == "gpu"
+        assert runtime.backend() == "tpu"
+    assert runtime.backend() in ("cpu", "gpu", "tpu")
+
+
+def test_ladder_rounds_per_backend():
+    # fused ladder_stats kernels amortize bracketing rounds; plain-jnp
+    # stats on CPU do not, so the CPU default is 0
+    assert runtime.ladder_rounds("tpu") == 2
+    assert runtime.ladder_rounds("gpu") == 2
+    assert runtime.ladder_rounds("cpu") == 0
+    with runtime.use_backend("gpu"):
+        assert runtime.ladder_rounds() == 2
+
+
+# --------------------------------------------------------------------------
+# kernel registry
+# --------------------------------------------------------------------------
+def test_registry_resolves_with_default_fallback():
+    sentinel_gpu, sentinel_def = object(), object()
+    runtime.register_kernel("_test_kern", "gpu", lambda: sentinel_gpu)
+    runtime.register_kernel("_test_kern", "default", lambda: sentinel_def)
+    assert runtime.kernel("_test_kern", "gpu")() is sentinel_gpu
+    assert runtime.kernel("_test_kern", "cpu")() is sentinel_def
+    with runtime.use_backend("gpu"):
+        assert runtime.kernel("_test_kern")() is sentinel_gpu
+
+
+def test_registry_unknown_name_and_backend_fail_loudly():
+    with pytest.raises(KeyError, match="no kernel registered"):
+        runtime.kernel("_no_such_kernel")
+    runtime.register_kernel("_tpu_only_kern", "tpu", lambda: None)
+    with pytest.raises(KeyError, match="no 'default' entry"):
+        runtime.kernel("_tpu_only_kern", "cpu")
+
+
+def test_hot_kernels_have_all_backend_rows():
+    """The tentpole contract: every hot kernel dispatches through the
+    registry with a dedicated GPU (Triton) and TPU (Mosaic) row plus the
+    bit-identical jnp default."""
+    import repro.kernels.ops  # noqa: F401 -- populates the registry
+    table = runtime.kernel_table()
+    for name in ("gram", "matvec", "rmatvec", "normal_matvec",
+                 "block_matvec", "block_rmatvec", "ladder_stats"):
+        assert {"tpu", "gpu", "default"} <= set(table[name]), name
+    # flash attention: TPU compiled, CPU emulation, GPU explicitly refused
+    assert {"tpu", "gpu", "default"} <= set(table["flash_attention"])
+    with pytest.raises(NotImplementedError, match="impl="):
+        table["flash_attention"]["gpu"]()
+
+
+# --------------------------------------------------------------------------
+# interpret-mode policy
+# --------------------------------------------------------------------------
+def test_interpret_is_opt_in_only(monkeypatch):
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    assert runtime.resolve_interpret(None) is False    # production default
+    assert runtime.resolve_interpret(True) is True     # explicit debug
+    assert runtime.resolve_interpret(False) is False
+    with runtime.force_interpret():
+        assert runtime.resolve_interpret(None) is True
+        assert runtime.resolve_interpret(False) is False   # explicit wins
+    assert runtime.resolve_interpret(None) is False
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert runtime.resolve_interpret(None) is True
+    with runtime.force_interpret(False):               # flag beats env
+        assert runtime.resolve_interpret(None) is False
+
+
+# --------------------------------------------------------------------------
+# precision policy
+# --------------------------------------------------------------------------
+def test_precision_policy_validates_dtypes():
+    with pytest.raises(ValueError, match="data"):
+        runtime.PrecisionPolicy(data="int8")
+    with pytest.raises(ValueError, match="accum"):
+        runtime.PrecisionPolicy(accum="bfloat16")   # narrow accumulation
+    with pytest.raises(ValueError, match="kkt_polish"):
+        runtime.PrecisionPolicy(kkt_polish="float32")
+
+
+def test_precision_presets_resolve_and_name():
+    for name in ("fp32", "bf16", "fp16", "fp64_polish"):
+        pol = runtime.resolve_precision(name)
+        assert runtime.precision_name(pol) == name
+    assert runtime.resolve_precision(runtime.PrecisionPolicy()) is not None
+    with pytest.raises(ValueError, match="unknown precision preset"):
+        runtime.resolve_precision("fp8")
+    with pytest.raises(TypeError):
+        runtime.resolve_precision(32)
+    custom = runtime.PrecisionPolicy(data="bfloat16")
+    assert runtime.precision_name(custom).startswith("custom(")
+
+
+def test_precision_dtype_resolution():
+    bf16 = runtime.PRECISION_PRESETS["bf16"]
+    assert bf16.data_dtype(jnp.float32) == jnp.dtype(jnp.bfloat16)
+    assert bf16.state_dtype(jnp.bfloat16) == jnp.dtype(jnp.float32)
+    assert bf16.accum_dtype(jnp.bfloat16) == jnp.dtype(jnp.float32)
+    fp32 = runtime.PRECISION_PRESETS["fp32"]
+    assert fp32.data_dtype(jnp.float32) == jnp.dtype(jnp.float32)
+    assert fp32.state_dtype(jnp.float32) == jnp.dtype(jnp.float32)
+    # f32 data never widens: accumulation stays in the working dtype
+    assert fp32.accum_dtype(jnp.float32) == jnp.dtype(jnp.float32)
+    x = jnp.ones((3,), jnp.float32)
+    assert bf16.cast_data(x).dtype == jnp.bfloat16
+    assert fp32.cast_data(x) is x                  # no-op, same array
+
+
+def test_x64_guard_refuses_fp64_without_x64():
+    assert not runtime.PRECISION_PRESETS["bf16"].needs_x64
+    pol = runtime.PRECISION_PRESETS["fp64_polish"]
+    assert pol.needs_x64
+    if runtime.x64_enabled():
+        runtime.check_x64(pol)                     # x64 CI leg: fine
+    else:
+        with pytest.raises(ValueError, match="x64 mode is disabled"):
+            runtime.check_x64(pol)
+    runtime.check_x64(runtime.PRECISION_PRESETS["fp32"])   # never raises

@@ -24,9 +24,9 @@ import pytest
 import repro.api as api
 from repro.core import fleet as fleet_mod
 from repro.serve import (DeadlineExceeded, DriverCache, FitRequest,
-                         MicroBatcher, ServeMetrics, ServeOptions,
-                         ServiceStopped, Signature, WarmEntry, WarmPool,
-                         next_pow2, pytree_nbytes, solve_batch)
+                         IterRateEstimator, MicroBatcher, ServeMetrics,
+                         ServeOptions, ServiceStopped, Signature, WarmEntry,
+                         WarmPool, next_pow2, pytree_nbytes, solve_batch)
 
 Z_TOL = dict(rtol=0.0, atol=5e-5)   # fp round-off band for f32 iterates
 
@@ -130,7 +130,7 @@ def test_driver_cache_hits_do_not_recompile(drivers):
     metrics = ServeMetrics()
     cache = DriverCache(PROBLEM, OPTIONS, metrics)
     cache.adapter(SIG)
-    assert cache.adapter(SIG) is cache._adapters[("squared", 1)]
+    assert cache.adapter(SIG) is cache._adapters[("squared", 1, "fp32")]
     cache.note_dispatch((SIG, 4, 32, False))
     cache.note_dispatch((SIG, 4, 32, False))
     cache.note_dispatch((SIG, 8, 32, False))
@@ -284,6 +284,58 @@ def test_deadline_iter_rate_flags_aborted_lane(drivers):
 
 
 # --------------------------------------------------------------------------
+# deadline-rate auto-calibration (per-signature EWMA)
+# --------------------------------------------------------------------------
+def test_iter_rate_estimator_ewma_and_min_samples():
+    est = IterRateEstimator(alpha=0.5, min_samples=2)
+    assert est.rate(SIG) is None
+    est.observe(SIG, 100, 1.0)               # first sample seeds the EWMA
+    assert est.rate(SIG) is None             # still below min_samples
+    est.observe(SIG, 300, 1.0)
+    assert est.rate(SIG) == pytest.approx(200.0)    # 0.5*100 + 0.5*300
+    est.observe(SIG, 0, 1.0)                 # cap-0 batch: ignored
+    est.observe(SIG, 100, 0.0)               # degenerate clock: ignored
+    assert est.samples(SIG) == 2
+    other = Signature(N=1, n=7, loss="squared", n_classes=1)
+    assert est.rate(other) is None           # per-signature isolation
+    row = est.snapshot()["squared/K1/N1/n10"]
+    assert row["calibrated"] and row["samples"] == 2
+    assert row["rate"] == pytest.approx(200.0)
+    with pytest.raises(ValueError):
+        IterRateEstimator(alpha=0.0)
+    with pytest.raises(ValueError):
+        IterRateEstimator(min_samples=0)
+
+
+def test_calibrated_rate_takes_over_from_manual(drivers):
+    """Once calibrated, the EWMA rate caps deadline lanes even with no
+    manual ``iter_rate`` configured — and each dispatch feeds it back."""
+    X, y = _request_data(13)
+    est = IterRateEstimator(alpha=1.0, min_samples=1)
+    est.observe(SIG, 50, 1.0)                # calibrated at 50 it/s
+    metrics = ServeMetrics()
+    # 0.1s of budget at the calibrated 50 it/s -> cap 5 -> aborted lane
+    (r, out), = _dispatch([_req(X, y, deadline=10.1)], drivers,
+                          metrics=metrics, rate_estimator=est)
+    assert out.deadline_aborted and 1 <= int(out.result.iters) <= 5
+    assert metrics.deadline_aborted == 1
+    # the frozen test clock gives solve_s == 0: the estimator must reject
+    # that degenerate sample (real-clock feedback is covered end to end)
+    assert est.samples(SIG) == 1
+
+
+def test_manual_rate_fallback_until_calibrated(drivers):
+    """Below ``min_samples`` the estimator abstains and the manual rate
+    still applies; the solve is observed either way."""
+    X, y = _request_data(14)
+    est = IterRateEstimator(min_samples=5)
+    (r, out), = _dispatch([_req(X, y, deadline=10.1)], drivers,
+                          iter_rate=50.0, rate_estimator=est)
+    assert out.deadline_aborted
+    assert est.rate(SIG) is None
+
+
+# --------------------------------------------------------------------------
 # the async plane end to end
 # --------------------------------------------------------------------------
 def _service(**kw):
@@ -314,6 +366,9 @@ def test_service_end_to_end_batches_and_warms():
     snap = service.snapshot()
     assert snap["completed"] == 5 and snap["batches"] == 2
     assert snap["warm_hits"] == 1 and snap["pool_entries"] == 4
+    # both batches fed the rate estimator for the one live signature
+    (rate_row,) = snap["iter_rate"].values()
+    assert rate_row["samples"] == 2 and rate_row["rate"] > 0
 
 
 def test_service_deadline_paths_fail_cleanly_and_fast():
