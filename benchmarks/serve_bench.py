@@ -12,6 +12,15 @@ in the latency numbers. Three phases over >= 2 shape signatures
 3. ``warm``: the same clients refit on perturbed labels — every lane
    resumes from the warm pool.
 
+A fourth ``faulty`` phase reruns the cold workload against a *fresh*
+service whose batch driver carries an armed NaN fault
+(``repro.faults``): one lane per batch diverges in-loop, is quarantined,
+and is retried through the recovery ladder. The committed
+``recovery_overhead`` rows compare healthy cold p50 against faulty p50 —
+the price of serving through an active fault, which bounds the ladder's
+latency cost (the healthy-path probe overhead itself is compiled into
+the while-loop predicate and is not separately observable here).
+
 Reported per (phase, signature): request count, latency p50 / p99 (ms),
 and fits/sec. The serving claim under test: warm-refit p50 below
 cold-fit p50 on the same signature, because resumed lanes converge in
@@ -138,6 +147,89 @@ async def run_bench(widths, clients_per_sig, reps, rate_hz, max_batch,
     return rows, service.snapshot()
 
 
+async def compile_prefix(service, rng, widths, max_batch):
+    """Deterministically compile every dispatch shape the measured phase
+    can produce: one exact-size burst per (signature, pow2 batch size).
+    A burst of b requests for one signature with nothing else in flight
+    closes as a single batch of exactly b lanes (pow2, so the pad layer
+    adds none), so after this every pow2 batch axis <= ``max_batch`` is
+    a driver-cache hit. An open-loop prefix cannot guarantee that — its
+    batch-size mix is timing-dependent, and one stray shape means a
+    multi-second XLA compile lands inside somebody's measured phase."""
+    b = 1
+    sizes = []
+    while b < max_batch:
+        sizes.append(b)
+        b *= 2
+    sizes.append(max_batch)
+    for n in widths:
+        for b in sizes:
+            futs = []
+            for i in range(b):
+                X, y = synth(rng, n, m=2 * n, kappa=max(2, n // 4))
+                futs.append(service.submit_fit(
+                    X, y, kappa=max(2, n // 4),
+                    client_id=f"compile-{n}-{b}-{i}"))
+            await asyncio.gather(*futs)
+
+
+async def run_fresh_cold(widths, clients_per_sig, reps, rate_hz, max_batch,
+                         max_wait_s, *, fault: bool):
+    """The cold workload against a *fresh* service, compile prefix
+    unmeasured — run twice (``fault`` off, then on) so the two p50s are
+    methodology twins and their ratio is the recovery overhead.
+
+    With ``fault=True`` the batch driver carries an armed NaN fault (lane
+    0 of every batch goes non-finite in-loop at iteration 3): every batch
+    quarantines and ladder-retries that lane. The service is built
+    *inside* the injection context — its driver compiles lazily at the
+    first batch, so ``limit=1`` hooks exactly the batch driver and leaves
+    the quarantine-retry drivers clean. The compile prefix also diverges
+    (and recovers) its lanes, so the retry-path compiles are paid there,
+    not in the measured phase.
+
+    Both twins run at 8x the main arrival rate with a longer close
+    window, so batches actually fill toward ``max_batch`` and the
+    injected divergence lands on a small *fraction* of lanes (one per
+    batch) instead of on nearly every single-lane batch — the committed
+    ``fault_rate`` reports the realized fraction."""
+    import contextlib
+
+    from repro import faults
+    rng = np.random.default_rng(0)
+    rate_hz = rate_hz * 8
+    max_wait_s = max_wait_s * 5
+    problem = api.SparseProblem(loss="squared", kappa=4, gamma=5.0)
+    injection = (faults.inject(faults.nan_x(3, lane=0), limit=1)
+                 if fault else contextlib.nullcontext())
+    with injection:
+        service = api.serve(
+            problem, options=api.SolverOptions(max_iter=200, tol=1e-3),
+            serve_options=api.ServeOptions(max_batch=max_batch,
+                                           max_wait_s=max_wait_s))
+        rows = []
+        async with service:
+            await compile_prefix(service, rng, widths, max_batch)
+            compiles_before = service.snapshot()["driver_compiles"]
+
+            jobs, _ = make_jobs(rng, widths, clients_per_sig, reps,
+                                prefix="bench")
+            elapsed, outcomes = await open_loop_phase(service, jobs, rate_hz)
+            rows += phase_stats("faulty" if fault else "healthy",
+                                widths, outcomes, elapsed)
+    snap = service.snapshot()
+    assert snap["driver_compiles"] == compiles_before, (
+        "an XLA compile landed inside the measured twin phase "
+        f"({snap['driver_compiles'] - compiles_before} new shapes) — "
+        "the healthy/faulty p50 ratio would be meaningless")
+    if fault:
+        assert snap["diverged_lanes"] > 0, "fault phase: nothing diverged"
+        assert snap["failed_lanes"] == 0, "fault phase: unrecovered lanes"
+    else:
+        assert snap["diverged_lanes"] == 0, "healthy phase diverged"
+    return rows, snap
+
+
 def main(smoke: bool = False, full: bool = False) -> None:
     """Run the bench; non-smoke runs write benchmarks/results/serve_bench.json."""
     if smoke:
@@ -152,16 +244,41 @@ def main(smoke: bool = False, full: bool = False) -> None:
 
     rows, snap = asyncio.run(run_bench(
         widths, clients, reps, rate, max_batch, max_wait_s))
+    healthy_rows, _ = asyncio.run(run_fresh_cold(
+        widths, clients, reps, rate, max_batch, max_wait_s, fault=False))
+    fault_rows, fault_snap = asyncio.run(run_fresh_cold(
+        widths, clients, reps, rate, max_batch, max_wait_s, fault=True))
+    rows += healthy_rows + fault_rows
     print("phase,n,count,p50_ms,p99_ms,fits_per_s,mean_iters")
     for r in rows:
         print(f"{r['phase']},{r['n']},{r['count']},{r['p50_ms']},"
               f"{r['p99_ms']},{r['fits_per_s']},{r['mean_iters']}")
+    recovery_rows = []
     for n in widths:
         cold = next(r for r in rows if r["phase"] == "cold" and r["n"] == n)
         warm = next(r for r in rows if r["phase"] == "warm" and r["n"] == n)
+        healthy = next(r for r in rows
+                       if r["phase"] == "healthy" and r["n"] == n)
+        faulty = next(r for r in rows
+                      if r["phase"] == "faulty" and r["n"] == n)
         ratio = warm["p50_ms"] / cold["p50_ms"] if cold["p50_ms"] else float("nan")
         print(f"# n={n}: warm p50 / cold p50 = {ratio:.2f}x "
               f"({warm['p50_ms']} ms vs {cold['p50_ms']} ms)")
+        overhead = (faulty["p50_ms"] / healthy["p50_ms"]
+                    if healthy["p50_ms"] else float("nan"))
+        recovery_rows.append(dict(
+            n=n, healthy_p50_ms=healthy["p50_ms"],
+            faulty_p50_ms=faulty["p50_ms"],
+            overhead_x=round(overhead, 2)))
+        print(f"# n={n}: faulty p50 / healthy p50 = {overhead:.2f}x "
+              f"({faulty['p50_ms']} ms vs {healthy['p50_ms']} ms)")
+    fault_rate = (fault_snap["diverged_lanes"]
+                  / max(1, fault_snap["batch_lanes"]))
+    print(f"# fault phase: {fault_snap['diverged_lanes']} lanes diverged "
+          f"({fault_rate:.1%} of {fault_snap['batch_lanes']}), "
+          f"{fault_snap['recovered_lanes']} recovered via "
+          f"{fault_snap['lane_retries']} ladder attempts, "
+          f"{fault_snap['failed_lanes']} failed")
     print(f"# batches={snap['batches']} pad_lanes={snap['pad_lanes']} "
           f"warm_hits={snap['warm_hits']} "
           f"driver_compiles={snap['driver_compiles']} "
@@ -171,7 +288,9 @@ def main(smoke: bool = False, full: bool = False) -> None:
             config=dict(widths=widths, clients_per_sig=clients, reps=reps,
                         rate_hz=rate, max_batch=max_batch,
                         max_wait_s=max_wait_s),
-            rows=rows, metrics=snap))
+            rows=rows, recovery_overhead=recovery_rows,
+            fault_rate=round(fault_rate, 4),
+            metrics=snap, fault_metrics=fault_snap))
         print(f"# saved {path}")
 
 

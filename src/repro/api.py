@@ -43,19 +43,22 @@ points are deprecation shims over this module.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax.numpy as jnp
 
 from . import runtime
-from .core.bicadmm import BiCADMM, BiCADMMConfig
+from .core.bicadmm import BiCADMM, BiCADMMConfig, BiCADMMState, _is_traced
 from .core.fleet import fit_many as _ref_fit_many
 from .core.fleet import fit_many_stacked as _ref_fit_many_stacked
 from .core.losses import Loss, get_loss
 from .core.path import fit_grid as _ref_fit_grid
 from .core.path import fit_path as _ref_fit_path
-from .core.prox import XSOLVERS
-from .core.results import FitResult, FleetResult, SparsePath
+from .core.prox import DENSE_MAX_N, XSOLVERS
+from .core.recovery import (RecoveryAttempt, RecoveryPolicy, SolveDiverged,
+                            sanitize_state)
+from .core.results import FitResult, FleetResult, SolveStatus, SparsePath
 from .core.sharded import X_UPDATE_MODES, ShardedBiCADMM
 
 __all__ = [
@@ -64,7 +67,10 @@ __all__ = [
     "FitResult",
     "FittingService",
     "FleetResult",
+    "RecoveryPolicy",
     "ServeOptions",
+    "SolveDiverged",
+    "SolveStatus",
     "SolverOptions",
     "SparseEstimator",
     "SparseLinearRegression",
@@ -75,12 +81,14 @@ __all__ = [
     "SparseSoftmaxRegression",
     "engine_capabilities",
     "fit_many",
+    "recover",
     "select_engine",
     "serve",
     "solve",
     "solve_grid",
     "solve_path",
     "split_legacy_config",
+    "validate_data",
 ]
 
 # The serving layer is re-exported lazily: ``repro.serve`` imports this
@@ -179,6 +187,15 @@ class SolverOptions:
     # "fp64_polish") or a repro.runtime.PrecisionPolicy. Engines negotiate
     # support through Capabilities.precisions.
     precision: Any = "fp32"
+    # residual level past which the in-loop probes declare a solve
+    # DIVERGED and exit early (isfinite failures always trip them)
+    divergence_tol: float = 1e12
+    # divergence recovery: a repro.core.recovery.RecoveryPolicy makes
+    # api.solve rerun DIVERGED fits through the escalation ladder
+    # (retry -> rho restart -> precision escalation -> x-solver fallback),
+    # logging each attempt in FitResult.recovery. None (default) reports
+    # DIVERGED without retrying.
+    recovery: Any = None
     # mesh axis naming (sharded)
     nodes_axis: str | tuple[str, ...] = "nodes"
     feat_axis: str = "feat"
@@ -206,6 +223,12 @@ class SolverOptions:
         if self.x_update not in X_UPDATE_MODES:
             raise ValueError(f"unknown x_update mode {self.x_update!r}; "
                              f"expected one of {X_UPDATE_MODES}")
+        if self.divergence_tol <= 0:
+            raise ValueError("divergence_tol must be positive")
+        if self.recovery is not None and not isinstance(self.recovery,
+                                                        RecoveryPolicy):
+            raise TypeError("recovery must be a RecoveryPolicy or None, "
+                            f"got {type(self.recovery).__name__}")
         if self.mesh is not None:
             names = set(self.mesh.axis_names)
             nodes = (self.nodes_axis if isinstance(self.nodes_axis, tuple)
@@ -238,7 +261,8 @@ def build_config(problem: SparseProblem, options: SolverOptions
         force_feature_split=options.force_feature_split,
         projection=options.projection, x_solver=options.x_solver,
         cg_iters=options.cg_iters, cg_tol=options.cg_tol,
-        precision=options.precision)
+        precision=options.precision,
+        divergence_tol=options.divergence_tol)
 
 
 # --------------------------------------------------------------------------
@@ -368,15 +392,42 @@ def _check_serve(caps: Capabilities) -> None:
 # --------------------------------------------------------------------------
 # engine adapters — one uniform surface over the two engines
 # --------------------------------------------------------------------------
+def validate_data(X, y) -> None:
+    """One clear ``ValueError`` for data the solvers cannot fit — empty or
+    mismatched shapes, non-finite entries — raised at the api boundary
+    (``solve`` / the estimators / ``submit_fit``) before anything is
+    traced or compiled. Inside an enclosing trace the finiteness check is
+    skipped (values are abstract there); shapes are still checked."""
+    if X.size == 0:
+        raise ValueError(f"X is empty (shape {tuple(X.shape)}); there is "
+                         "nothing to fit")
+    n_rows = X.shape[0] if X.ndim == 2 else X.shape[0] * X.shape[1]
+    if y.size != n_rows:
+        raise ValueError(
+            f"y has {y.size} targets but X has {n_rows} sample rows "
+            f"(X shape {tuple(X.shape)}, y shape {tuple(y.shape)})")
+    if _is_traced(X, y):
+        return
+    if jnp.issubdtype(X.dtype, jnp.inexact) and not bool(
+            jnp.all(jnp.isfinite(X))):
+        raise ValueError("X contains non-finite entries (NaN or Inf); "
+                         "clean or impute the data before fitting")
+    if jnp.issubdtype(y.dtype, jnp.inexact) and not bool(
+            jnp.all(jnp.isfinite(y))):
+        raise ValueError("y contains non-finite entries (NaN or Inf); "
+                         "clean or impute the targets before fitting")
+
+
 def _stack(X, y):
     """Accept (samples, n) flat or (N, m, n) node-stacked data; return the
-    paper's stacked layout."""
+    paper's stacked layout (validated — see :func:`validate_data`)."""
     X, y = jnp.asarray(X), jnp.asarray(y)
-    if X.ndim == 2:
-        X, y = X[None], y.reshape(1, -1)
-    if X.ndim != 3:
+    if X.ndim not in (2, 3):
         raise ValueError(f"X must be (samples, n) or (N, m, n); "
                          f"got shape {X.shape}")
+    validate_data(X, y)
+    if X.ndim == 2:
+        X, y = X[None], y.reshape(1, -1)
     return X, y.reshape(X.shape[0], X.shape[1])
 
 
@@ -517,10 +568,135 @@ def _negotiate(problem, options, As):
 
 def solve(problem: SparseProblem, X, y, *,
           options: SolverOptions | None = None, state=None) -> FitResult:
-    """Solve one :class:`SparseProblem` instance on ``(X, y)``."""
+    """Solve one :class:`SparseProblem` instance on ``(X, y)``.
+
+    With ``SolverOptions(recovery=RecoveryPolicy(...))`` a solve that
+    ends ``SolveStatus.DIVERGED`` is automatically rerun through the
+    escalation ladder (see :func:`recover`); every attempt is logged in
+    the returned ``FitResult.recovery``.
+    """
     options = options if options is not None else SolverOptions()
     As, bs = _stack(X, y)
-    return _negotiate(problem, options, As).fit(As, bs, state=state)
+    res = _negotiate(problem, options, As).fit(As, bs, state=state)
+    if (options.recovery is not None and res.status is not None
+            and int(res.status) == int(SolveStatus.DIVERGED)):
+        res = _run_ladder(problem, options, As, bs, failed=res,
+                          policy=options.recovery)
+    return res
+
+
+# --------------------------------------------------------------------------
+# divergence recovery — the escalation ladder
+# --------------------------------------------------------------------------
+def _ladder_plan(problem: SparseProblem, options: SolverOptions,
+                 policy: RecoveryPolicy, n: int, overrides: dict):
+    """The rungs to try, in order: ``(stage, detail, problem, options)``
+    tuples, truncated to ``policy.max_attempts``. Each rung bakes its fix
+    into the problem/options pair so the rung's solver genuinely runs the
+    changed configuration (and the fault-injection harness can target it
+    by config)."""
+    plan = []
+    if policy.retry:
+        plan.append(("retry", "same configuration", problem, options))
+    if policy.rho_restart:
+        base = overrides.get("rho_c") or problem.rho_c
+        rho = base * policy.rho_scale
+        plan.append(("rho_restart", f"rho_c={rho:g}",
+                     dataclasses.replace(problem, rho_c=rho), options))
+    if policy.precision_escalation:
+        for preset in runtime.escalation_ladder(options.precision):
+            plan.append(("precision", preset, problem,
+                         dataclasses.replace(options, precision=preset)))
+    if policy.solver_fallback and problem.resolve_loss().name == "squared":
+        fallback = "dense" if n <= DENSE_MAX_N else "woodbury"
+        if fallback != options.x_solver:
+            plan.append(("x_solver", fallback, problem,
+                         dataclasses.replace(options, x_solver=fallback)))
+    return plan[:policy.max_attempts]
+
+
+def _ladder_adapter(problem: SparseProblem, options: SolverOptions,
+                    cache: dict | None):
+    """A reference-engine adapter for one ladder rung, optionally memoized
+    (the serve plane passes a per-service cache so quarantined-lane
+    retries never pay a second trace for the same rung)."""
+    if cache is None:
+        return make_adapter(problem, options, engine="reference")
+    key = (problem.kappa, problem.gamma, problem.rho_c, problem.alpha,
+           problem.rho_b, problem.n_classes,
+           getattr(problem.loss, "name", problem.loss), options.x_solver,
+           runtime.precision_name(options.precision), options.max_iter,
+           options.tol, options.divergence_tol)
+    if key not in cache:
+        cache[key] = make_adapter(problem, options, engine="reference")
+    return cache[key]
+
+
+def _run_ladder(problem: SparseProblem, options: SolverOptions, As, bs, *,
+                failed: FitResult | None, policy: RecoveryPolicy,
+                overrides: dict | None = None,
+                adapter_cache: dict | None = None) -> FitResult:
+    """Execute the recovery ladder on stacked data. Returns the first
+    non-DIVERGED attempt's result (with the attempt log in ``.recovery``),
+    or the last attempt's result — still DIVERGED — when every rung
+    failed. ``overrides`` are per-solve kappa/gamma/rho_c values (the
+    serve plane's per-request hyperparameters)."""
+    overrides = {k: v for k, v in (overrides or {}).items() if v is not None}
+    attempts: list[RecoveryAttempt] = []
+    state = None
+    result = failed
+    if failed is not None:
+        attempts = list(failed.recovery or ())
+        state = failed.state
+        if not isinstance(state, BiCADMMState):
+            state = None      # e.g. a sharded-engine state: cold-restart
+        state = sanitize_state(state)
+    plan = _ladder_plan(problem, options, policy, As.shape[2], overrides)
+    for idx, (stage, detail, prob, opts) in enumerate(plan):
+        if policy.backoff_s > 0:
+            time.sleep(policy.backoff_s * (2 ** idx))
+        over = dict(overrides)
+        if stage == "rho_restart":
+            over.pop("rho_c", None)   # the restarted rho is baked in
+        adapter = _ladder_adapter(prob, opts, adapter_cache)
+        res = adapter.fit(As, bs, state=state, **over)
+        attempts.append(RecoveryAttempt(stage, detail, int(res.status),
+                                        int(res.iters)))
+        result = res._replace(recovery=tuple(attempts))
+        if int(res.status) != int(SolveStatus.DIVERGED):
+            return result
+        state = sanitize_state(res.state)
+    return result
+
+
+def recover(problem: SparseProblem, X, y, *,
+            options: SolverOptions | None = None,
+            failed: FitResult | None = None,
+            policy: RecoveryPolicy | None = None,
+            kappa=None, gamma=None, rho_c=None) -> FitResult:
+    """Run the divergence-recovery escalation ladder for ``problem``.
+
+    Rungs, in order (each enabled by the corresponding
+    :class:`~repro.core.recovery.RecoveryPolicy` flag): a plain **retry**
+    from the sanitized last-finite state of ``failed``; a **rho restart**
+    with ``rho_c`` scaled into the provably convergent regime; a
+    **precision escalation** (bf16/fp16 → fp32 → fp64 polish when x64 is
+    on); and an **x-solver fallback** from iterative pcg to a direct
+    woodbury/dense factorization. Execution is on the reference engine.
+
+    Returns the first attempt that does not end DIVERGED (or the last,
+    still-DIVERGED, attempt). The attempt log rides
+    ``FitResult.recovery``; callers that must not ship garbage raise
+    :class:`~repro.core.recovery.SolveDiverged` on a still-DIVERGED
+    result (the serve plane does).
+    """
+    options = options if options is not None else SolverOptions()
+    policy = (policy if policy is not None
+              else options.recovery or RecoveryPolicy())
+    As, bs = _stack(X, y)
+    return _run_ladder(problem, options, As, bs, failed=failed,
+                       policy=policy,
+                       overrides=dict(kappa=kappa, gamma=gamma, rho_c=rho_c))
 
 
 def solve_path(problem: SparseProblem, X, y, kappas, *,
@@ -542,6 +718,7 @@ def _stack_many(Xs, ys):
     if Xs.ndim != 4:
         raise ValueError(f"stacked fleet data must be (B, samples, n) or "
                          f"(B, N, m, n); got shape {Xs.shape}")
+    validate_data(Xs.reshape(-1, Xs.shape[-1]), ys)
     return Xs, ys.reshape(Xs.shape[0], Xs.shape[1], Xs.shape[2])
 
 
@@ -686,10 +863,17 @@ class SparseEstimator:
     # ``engine_capabilities`` / ``select_engine``)
     def fit(self, X, y, *, state=None) -> "SparseEstimator":
         """Fit on ``(X, y)``; ``state=`` warm-starts from a previous
-        result's ``.state``. Returns ``self`` (sklearn convention)."""
+        result's ``.state``. Returns ``self`` (sklearn convention). With
+        ``options=SolverOptions(recovery=...)`` a DIVERGED fit reruns
+        through the recovery ladder, like :func:`solve`."""
         As, bs = _stack(X, y)
         adapter = self._adapter(As)
-        self._set_fitted(adapter, adapter.fit(As, bs, state=state))
+        res = adapter.fit(As, bs, state=state)
+        if (self.options.recovery is not None and res.status is not None
+                and int(res.status) == int(SolveStatus.DIVERGED)):
+            res = _run_ladder(self.problem, self.options, As, bs,
+                              failed=res, policy=self.options.recovery)
+        self._set_fitted(adapter, res)
         return self
 
     def fit_path(self, X, y, kappas, *, gammas=None, rho_cs=None,
@@ -716,9 +900,10 @@ class SparseEstimator:
 
     @staticmethod
     def _last_point(path: SparsePath) -> FitResult:
+        status = None if path.status is None else path.status[-1]
         return FitResult(path.coef[-1], path.z[-1], path.support[-1],
                          path.iters[-1], path.p_r[-1], path.d_r[-1],
-                         path.b_r[-1], state=path.state)
+                         path.b_r[-1], state=path.state, status=status)
 
     def _set_fitted(self, adapter, res: FitResult) -> None:
         self.result_ = res

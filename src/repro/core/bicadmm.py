@@ -60,11 +60,11 @@ import jax.numpy as jnp
 
 from . import bilinear, prox
 from .losses import Loss, get_loss
-from .results import FitResult
+from .results import FitResult, classify_status, divergence_probe
 from .prox import (NodeProxEngine, newton_cg_prox, x_solve)
 from .subsolver import (SubsolverFactors, SubsolverState, node_prox_feature_split,
                         subsolver_init, subsolver_setup)
-from .. import runtime
+from .. import faults, runtime
 from ..kernels.ops import (gram_auto, matvec_auto, normal_matvec_auto,
                            rmatvec_auto)
 
@@ -80,6 +80,9 @@ class BiCADMMConfig:
     rho_b: float | None = None
     max_iter: int = 300
     tol: float = 1e-4               # applied to p_r / d_r / b_r
+    # residual level past which a run is declared DIVERGED in-loop (the
+    # isfinite probe fires regardless); see repro.core.results.
+    divergence_tol: float = 1e12
     zt_iters: int = 120             # FISTA iterations for step (7b)
     n_feature_blocks: int = 1       # M (Algorithm 2) ; 1 => direct prox
     inner_iters: int = 15           # inner ADMM iterations per x-update
@@ -104,6 +107,8 @@ class BiCADMMConfig:
     def __post_init__(self):
         object.__setattr__(self, "precision",
                            runtime.resolve_precision(self.precision))
+        if self.divergence_tol <= 0:
+            raise ValueError("divergence_tol must be positive")
 
     @property
     def rho_b_eff(self) -> float:
@@ -226,6 +231,11 @@ class BiCADMM:
                              f"one of {prox.XSOLVERS}")
         runtime.check_x64(cfg.precision)
         self.cfg = cfg
+        # fault-injection hook (repro.faults): None outside an inject()
+        # context — the compiled programs are then exactly the healthy
+        # ones. Captured once at construction so a hook stays pinned to
+        # this instance's jit caches and never leaks across solvers.
+        self._fault_hook = faults.active_hook(self)
         # memoized policy data casts keyed on the incoming array ids, so
         # repeated calls hand back the SAME cast arrays and the id-keyed
         # setup cache below still hits across warm-started run_from calls.
@@ -413,10 +423,20 @@ class BiCADMM:
         def cond(st: BiCADMMState):
             converged = ((st.p_r < cfg.tol) & (st.d_r < cfg.tol)
                          & (st.b_r < cfg.tol))
-            return (~converged) & (st.k < cfg.max_iter)
+            diverged = divergence_probe(st, cfg.divergence_tol)
+            return (~converged) & (~diverged) & (st.k < cfg.max_iter)
 
         step = partial(self._step, factors, As, bs, params)
+        step = self._with_fault_hook(step)
         return jax.lax.while_loop(cond, step, st0)
+
+    def _with_fault_hook(self, step):
+        """``step`` composed with the instance's fault hook (identity when
+        no injection was active at construction — the common case)."""
+        if self._fault_hook is None:
+            return step
+        hook = self._fault_hook
+        return lambda st: hook(step(st))
 
     # -- fleet (batched-problem) driver ------------------------------------
     def _fleet_active(self, st: BiCADMMState, iter_caps=None) -> Array:
@@ -428,9 +448,10 @@ class BiCADMM:
         cfg = self.cfg
         converged = ((st.p_r < cfg.tol) & (st.d_r < cfg.tol)
                      & (st.b_r < cfg.tol))
+        diverged = divergence_probe(st, cfg.divergence_tol)
         budget = (cfg.max_iter if iter_caps is None
                   else jnp.minimum(iter_caps, cfg.max_iter))
-        return (~converged) & (st.k < budget)
+        return (~converged) & (~diverged) & (st.k < budget)
 
     def _run_while_fleet(self, factors, As, bs, params: SolveParams,
                          st0: BiCADMMState, iter_caps=None) -> BiCADMMState:
@@ -450,6 +471,7 @@ class BiCADMM:
         the batch axis to a cached compile shape at zero solver cost.
         """
         step = jax.vmap(self._step, in_axes=(0, 0, 0, 0, 0))
+        hook = self._fault_hook
 
         def cond(st: BiCADMMState):
             return jnp.any(self._fleet_active(st, iter_caps))
@@ -457,6 +479,8 @@ class BiCADMM:
         def body(st: BiCADMMState):
             active = self._fleet_active(st, iter_caps)
             new = step(factors, As, bs, params, st)
+            if hook is not None:
+                new = hook(new)
 
             def freeze(n, o):
                 mask = active.reshape(active.shape + (1,) * (n.ndim - 1))
@@ -508,7 +532,8 @@ class BiCADMM:
         params = self._make_params(N)
         iters = iters or self.cfg.max_iter
         st0 = self._init_state(As, bs, n, K)
-        step = partial(self._step, factors, As, bs, params)
+        step = self._with_fault_hook(partial(self._step, factors, As, bs,
+                                             params))
 
         def body(st, _):
             st = step(st)
@@ -527,8 +552,12 @@ class BiCADMM:
         else:
             x_final = z_sparse
         coef = x_final.reshape(As.shape[2], self.loss.n_classes)
+        status = classify_status(st.k, st.p_r, st.d_r, st.b_r,
+                                 tol=cfg.tol,
+                                 divergence_tol=cfg.divergence_tol)
         return FitResult(coef, st.z, support, st.k,
-                         st.p_r, st.d_r, st.b_r, history, st)
+                         st.p_r, st.d_r, st.b_r, history, st,
+                         status=status)
 
     def _polish(self, As, bs, support: Array, z0: Array,
                 params: SolveParams) -> Array:

@@ -56,7 +56,7 @@ import jax.numpy as jnp
 
 from .bicadmm import (BiCADMM, BiCADMMState, SolveParams, _is_traced)
 from .path import _point_outputs
-from .results import FitResult, FleetResult
+from .results import FitResult, FleetResult, mark_aborted
 
 Array = jax.Array
 
@@ -242,11 +242,19 @@ def fit_many_stacked(solver: BiCADMM, As: Array, bs: Array, *,
     run = _fleet_run if _is_traced(As, bs, st0) else _fleet_run_donated
     st, outs = run(solver, N, dyn, As, bs, params, factors, st0, iter_caps)
     coef = outs["x"].reshape(B, n, solver.loss.n_classes)
+    status = outs["status"]
+    if iter_caps is not None:
+        # Lanes the external per-lane budget stopped (deadline caps, inert
+        # cap-0 padding) exhausted a budget the *caller* set, not the
+        # config's: reclassify their MAX_ITER as ABORTED. Eager
+        # elementwise fixup — no extra sync.
+        status = mark_aborted(status, outs["iters"], iter_caps,
+                              solver.cfg.max_iter)
     return FleetResult(coef, outs["z"], outs["support"], outs["iters"],
                        outs["p_r"], outs["d_r"], outs["b_r"],
                        outs["cardinality"], kaps, gams, rhos,
                        train_loss=outs["train_loss"], state=st,
-                       strategy="fleet-vmap")
+                       strategy="fleet-vmap", status=status)
 
 
 # --------------------------------------------------------------------------

@@ -81,7 +81,7 @@ def _point_outputs(solver: BiCADMM, As, bs, st: BiCADMMState,
     pred = pred[:, 0] if K == 1 else pred
     return dict(x=res.x, z=res.z, support=res.support, iters=st.k,
                 p_r=st.p_r, d_r=st.d_r, b_r=st.b_r,
-                cardinality=jnp.sum(res.support),
+                cardinality=jnp.sum(res.support), status=res.status,
                 train_loss=solver.loss.value(pred, bs.reshape(-1)))
 
 
@@ -93,7 +93,7 @@ def _pack(solver: BiCADMM, outs: dict, kaps, gams, rhos, *, state=None,
                       outs["p_r"], outs["d_r"], outs["b_r"],
                       outs["cardinality"], kaps, gams, rhos,
                       train_loss=outs["train_loss"], state=state,
-                      strategy=strategy)
+                      strategy=strategy, status=outs.get("status"))
 
 
 def fit_path(solver: BiCADMM, As: Array, bs: Array, kappas, *,

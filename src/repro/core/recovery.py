@@ -1,0 +1,104 @@
+"""Divergence-recovery policy for the solve plane.
+
+Bi-cADMM is a non-convex scheme: on hostile data, under reduced
+precision, or with an unlucky penalty, the x-update can go non-finite or
+the residuals can blow up. The engines now *detect* that in-loop
+(``SolveStatus.DIVERGED`` — see :mod:`repro.core.results`); this module
+describes what to do about it. The ladder executor itself lives in
+:mod:`repro.api` (it needs the engine adapters); the serve plane reuses
+the same executor for per-lane quarantine retries.
+
+The escalation ladder, in order, each rung a principled fix:
+
+1. **retry** — re-solve from the sanitized last-finite state: transient
+   blow-ups (an exploding dual step) often vanish on a clean restart.
+2. **rho_restart** — scale the consensus penalty ``rho_c`` up: Deng &
+   Yin's convergence conditions for bi-linear ADMM hold for sufficiently
+   large penalties, so a diverging run is re-solved inside the provably
+   convergent regime.
+3. **precision** — escalate bf16/fp16 data to fp32, then fp32 to the
+   fp64 KKT polish (when x64 mode is on): rules out round-off as the
+   driver.
+4. **x_solver** — swap an iterative x-update (pcg) for a direct
+   factorization (woodbury / dense): rules out inner-solver
+   non-convergence.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "RecoveryPolicy",
+    "RecoveryAttempt",
+    "SolveDiverged",
+    "sanitize_state",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryPolicy:
+    """What to try, and in what order, when a solve ends DIVERGED.
+
+    Set on ``SolverOptions(recovery=...)`` to make ``api.solve``
+    auto-recover, and on ``ServeOptions(recovery=...)`` for the serve
+    plane's quarantined-lane retries. Every attempt is logged in
+    ``FitResult.recovery``.
+    """
+
+    max_attempts: int = 4          # total ladder rungs to run
+    retry: bool = True             # rung: plain re-solve, last-finite state
+    rho_restart: bool = True       # rung: scale rho_c by rho_scale
+    rho_scale: float = 10.0
+    precision_escalation: bool = True   # rung(s): bf16/fp16→fp32→fp64_polish
+    solver_fallback: bool = True   # rung: pcg/auto → woodbury/dense
+    backoff_s: float = 0.0         # sleep backoff_s * 2**i before rung i
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError("RecoveryPolicy.max_attempts must be >= 1")
+        if self.rho_scale <= 1.0:
+            raise ValueError("RecoveryPolicy.rho_scale must be > 1")
+        if self.backoff_s < 0:
+            raise ValueError("RecoveryPolicy.backoff_s must be >= 0")
+
+
+class RecoveryAttempt(NamedTuple):
+    """One recovery-ladder rung, as logged in ``FitResult.recovery``."""
+
+    stage: str    # "retry" | "rho_restart" | "precision" | "x_solver"
+    detail: str   # the knob change, e.g. "rho_c=10" or "fp32"
+    status: int   # SolveStatus code the attempt ended with
+    iters: int    # outer iterations the attempt spent
+
+
+class SolveDiverged(RuntimeError):
+    """A solve ended DIVERGED and the recovery ladder (if any) could not
+    bring it back. ``.result`` carries the last attempt's FitResult."""
+
+    def __init__(self, message: str, result: Any = None):
+        super().__init__(message)
+        self.result = result
+
+
+def sanitize_state(state):
+    """The checkpointed *last-finite* restart point: every non-finite
+    entry of every floating leaf is zeroed (a zero coordinate re-enters
+    the solve as a cold coordinate; the finite ones keep their warm
+    values). Counters and residuals are left to ``reset_for_resume``,
+    which the warm-start path already applies."""
+    if state is None:
+        return None
+
+    def clean(leaf):
+        if leaf is None:
+            return leaf
+        arr = jnp.asarray(leaf)
+        if not jnp.issubdtype(arr.dtype, jnp.inexact):
+            return leaf
+        return jnp.where(jnp.isfinite(arr), arr, jnp.zeros_like(arr))
+
+    return jax.tree.map(clean, state)

@@ -23,11 +23,72 @@ working unchanged; new code should read ``coef``.
 """
 from __future__ import annotations
 
+import enum
 from typing import Any, NamedTuple
 
 import jax
+import jax.numpy as jnp
 
 Array = jax.Array
+
+
+class SolveStatus(enum.IntEnum):
+    """How a solve ended, per lane. Stored on results as an int32 device
+    array (vector-valued on fleet/path results) so classification costs
+    no device sync; compare with the enum members directly
+    (``int(res.status) == SolveStatus.CONVERGED``)."""
+
+    CONVERGED = 0   # all three residuals under tol, iterates finite
+    MAX_ITER = 1    # iteration budget exhausted before the tolerance
+    DIVERGED = 2    # non-finite iterates or residual blow-up; loop exited
+    ABORTED = 3     # stopped early by an external cap (deadline iter_caps)
+
+
+def divergence_probe(state, divergence_tol) -> Array:
+    """Per-lane ``True`` once a solve has demonstrably gone bad: any
+    residual is non-finite, or the primal/dual residuals blew past
+    ``divergence_tol``. Runs inside the while-loop predicates of both
+    engines — a handful of scalar ops per lane, no device sync.
+
+    The ``k > 0`` guard matters: fresh and resumed states carry ``inf``
+    residuals *by construction* (they are maxed into the first real
+    residuals), so the probe only speaks after at least one step.
+    """
+    finite = (jnp.isfinite(state.p_r) & jnp.isfinite(state.d_r)
+              & jnp.isfinite(state.b_r))
+    blown = (state.p_r > divergence_tol) | (state.d_r > divergence_tol)
+    return (state.k > 0) & (~finite | blown)
+
+
+def classify_status(iters, p_r, d_r, b_r, *, tol,
+                    divergence_tol) -> Array:
+    """Elementwise :class:`SolveStatus` codes from final residuals —
+    int32 device array, same shape as ``iters``, no sync. ``ABORTED``
+    is applied afterwards by the callers that know about external caps
+    (:func:`mark_aborted`)."""
+    finite = jnp.isfinite(p_r) & jnp.isfinite(d_r) & jnp.isfinite(b_r)
+    converged = finite & (p_r < tol) & (d_r < tol) & (b_r < tol)
+    diverged = (iters > 0) & (~finite | (p_r > divergence_tol)
+                              | (d_r > divergence_tol))
+    return jnp.where(
+        converged, jnp.int32(SolveStatus.CONVERGED),
+        jnp.where(diverged, jnp.int32(SolveStatus.DIVERGED),
+                  jnp.int32(SolveStatus.MAX_ITER)))
+
+
+def mark_aborted(status, iters, iter_caps, max_iter) -> Array:
+    """Reclassify ``MAX_ITER`` lanes that were actually stopped by a
+    per-lane external iteration cap (deadline enforcement, inert padding
+    lanes) as ``ABORTED``. Eager elementwise ops, no sync."""
+    budget = jnp.minimum(jnp.asarray(iter_caps), max_iter)
+    hit = ((status == jnp.int32(SolveStatus.MAX_ITER))
+           & (budget < max_iter) & (iters >= budget))
+    return jnp.where(hit, jnp.int32(SolveStatus.ABORTED), status)
+
+
+def status_name(status) -> str:
+    """Human-readable name of a scalar status code (syncs the scalar)."""
+    return SolveStatus(int(status)).name
 
 
 class FitResult(NamedTuple):
@@ -42,6 +103,8 @@ class FitResult(NamedTuple):
     b_r: Array        # bi-linear constraint residual
     history: Any = None   # residual traces (fit_with_history) or None
     state: Any = None     # resumable solver state — warm-start the next solve
+    status: Any = None    # () int32 SolveStatus code (None on legacy paths)
+    recovery: Any = None  # tuple[RecoveryAttempt, ...] when the ladder ran
 
     @property
     def x(self) -> Array:
@@ -52,6 +115,21 @@ class FitResult(NamedTuple):
     def x_sparse(self) -> Array:
         """Flat ``(n*K,)`` view of ``coef`` (legacy sharded-engine name)."""
         return self.coef.reshape(-1)
+
+    @property
+    def converged(self) -> bool:
+        """Whether this solve ended :data:`SolveStatus.CONVERGED` (syncs
+        the status scalar; results that carry no status fall back to a
+        residual-finiteness test)."""
+        if self.status is None:
+            return bool(jnp.isfinite(self.p_r) & jnp.isfinite(self.d_r)
+                        & jnp.isfinite(self.b_r))
+        return int(self.status) == int(SolveStatus.CONVERGED)
+
+    @property
+    def status_name(self) -> str | None:
+        """Name of the status code (``"CONVERGED"`` …), or ``None``."""
+        return None if self.status is None else status_name(self.status)
 
 
 class FleetResult(NamedTuple):
@@ -80,6 +158,7 @@ class FleetResult(NamedTuple):
     train_loss: Any = None  # (B,) per-problem training loss
     state: Any = None       # batched solver state — warm-start the refit
     strategy: str | None = None  # "fleet-vmap"
+    status: Any = None      # (B,) int32 SolveStatus codes
 
     def __len__(self) -> int:
         return int(self.coef.shape[0])
@@ -88,9 +167,11 @@ class FleetResult(NamedTuple):
         """The i-th problem's solo-shaped :class:`FitResult` view."""
         state = (None if self.state is None
                  else jax.tree.map(lambda a: a[i], self.state))
+        status = None if self.status is None else self.status[i]
         return FitResult(self.coef[i], self.z[i], self.support[i],
                          self.iters[i], self.p_r[i], self.d_r[i],
-                         self.b_r[i], history=None, state=state)
+                         self.b_r[i], history=None, state=state,
+                         status=status)
 
     @property
     def x(self) -> Array:
@@ -116,6 +197,7 @@ class SparsePath(NamedTuple):
     #                         not materialize global predictions)
     state: Any = None       # final solver state of the last point (warm scans)
     strategy: str | None = None  # "warm-scan" | "cold-scan" | "vmap"
+    status: Any = None      # (P,) int32 SolveStatus codes
 
     @property
     def x(self) -> Array:

@@ -102,9 +102,10 @@ from jax.experimental.shard_map import shard_map
 
 from . import bilinear, prox
 from .bicadmm import BiCADMMConfig, _zt_update
-from .. import runtime
+from .. import faults, runtime
 from .losses import Loss, get_loss
-from .results import FitResult, SparsePath
+from .results import (FitResult, SparsePath, classify_status,
+                      divergence_probe)
 from ..kernels.ops import (block_matvec, block_rmatvec, gram_auto,
                            ladder_stats_auto)
 
@@ -288,6 +289,10 @@ class ShardedBiCADMM:
                              "equations; other losses use the feature-split "
                              'sub-solver (x_update="subsolver")')
         runtime.check_x64(self.cfg.precision)
+        # fault-injection hook (repro.faults): None outside an inject()
+        # context; baked into this instance's shard_map programs at trace
+        # time (the _jit_cache is per instance, so it never leaks).
+        self._fault_hook = faults.active_hook(self)
         # memoized policy data casts (see BiCADMM._cast): stable array ids
         # keep the id-keyed factor cache below hitting across repeat fits.
         self._cast_cache: dict = {}
@@ -781,6 +786,10 @@ class ShardedBiCADMM:
             kappa = jnp.asarray(float(cfg.kappa), sdt)
             step = lambda st: outer_step(st, kappa)
 
+            if self._fault_hook is not None:
+                inner_step = step
+                step = lambda st: self._fault_hook(inner_step(st))
+
             if record_history:
                 def body(st, _):
                     st = step(st)
@@ -790,7 +799,8 @@ class ShardedBiCADMM:
                 def cond(st):
                     done = ((st.p_r < cfg.tol) & (st.d_r < cfg.tol)
                             & (st.b_r < cfg.tol))
-                    return (~done) & (st.k < iters)
+                    diverged = divergence_probe(st, cfg.divergence_tol)
+                    return (~done) & (~diverged) & (st.k < iters)
                 st = jax.lax.while_loop(cond, step, st0)
                 hist = jnp.zeros((iters, 3), sdt)
             return ((st.z, st.k, st.p_r, st.d_r, st.b_r, st.t), hist,
@@ -810,8 +820,11 @@ class ShardedBiCADMM:
         zf = self._unpad_flat(z, n, n_pad)
         z_sparse = bilinear.hard_threshold(zf, cfg.kappa)
         support = jnp.abs(z_sparse) > 0
+        status = classify_status(k, p_r, d_r, b_r, tol=cfg.tol,
+                                 divergence_tol=cfg.divergence_tol)
         return FitResult(z_sparse.reshape(n, K), zf, support, k, p_r, d_r,
-                         b_r, hist if record_history else None, gs)
+                         b_r, hist if record_history else None, gs,
+                         status=status)
 
     def fit_path(self, A_global: Array, b_global: Array, kappas, *,
                  state: ShardedGlobalState | None = None,
@@ -851,11 +864,17 @@ class ShardedBiCADMM:
             def cond(st):
                 done = ((st.p_r < cfg.tol) & (st.d_r < cfg.tol)
                         & (st.b_r < cfg.tol))
-                return (~done) & (st.k < cfg.max_iter)
+                diverged = divergence_probe(st, cfg.divergence_tol)
+                return (~done) & (~diverged) & (st.k < cfg.max_iter)
+
+            def step_pt(kappa):
+                if self._fault_hook is None:
+                    return lambda s: outer_step(s, kappa)
+                return lambda s: self._fault_hook(outer_step(s, kappa))
 
             def solve_one(carry, kappa):
                 st = jax.lax.while_loop(
-                    cond, lambda s: outer_step(s, kappa), reset(carry))
+                    cond, step_pt(kappa), reset(carry))
                 out = (st.z, st.k, st.p_r, st.d_r, st.b_r)
                 return (st if warm_start else st_init), out
 
@@ -876,7 +895,10 @@ class ShardedBiCADMM:
         support = jnp.abs(x_sparse) > 0
         npts = kaps.shape[0]
         fill = lambda v: jnp.full((npts,), v, kaps.dtype)
+        status = classify_status(k, p_r, d_r, b_r, tol=cfg.tol,
+                                 divergence_tol=cfg.divergence_tol)
         return SparsePath(x_sparse.reshape(npts, n, K), zf, support, k,
                           p_r, d_r, b_r, jnp.sum(support, axis=1), kaps,
                           fill(cfg.gamma), fill(cfg.rho_c), state=gs,
-                          strategy="warm-scan" if warm_start else "cold-scan")
+                          strategy="warm-scan" if warm_start else "cold-scan",
+                          status=status)

@@ -12,15 +12,25 @@ pool hit rate, compiled driver shapes. CPU-scale demo:
 The open-loop latency *benchmark* (Poisson arrivals, committed p50/p99
 rows) lives in ``benchmarks/serve_bench.py``; this driver is the smallest
 real end-to-end run of the serving plane.
+
+Set ``REPRO_FAULTS=1`` to run the same workload as a **fault drill**: a
+NaN fault is injected into the batch driver's compiled loop
+(``repro.faults``), and the run asserts the plane quarantined the
+poisoned lane, recovered it through the escalation ladder, and returned
+finite coefficients everywhere — the CI smoke for the fault-tolerant
+solve plane.
 """
 from __future__ import annotations
 
 import argparse
 import asyncio
+import contextlib
+import os
 
 import numpy as np
 
 import repro.api as api
+from repro import faults
 
 
 def make_request_data(rng, n: int, m: int, kappa: int):
@@ -77,20 +87,39 @@ def main(argv=None) -> None:
     if args.smoke:
         args.requests, args.clients, args.widths = 8, 4, [8, 12]
 
-    problem = api.SparseProblem(loss="squared", kappa=args.kappa, gamma=5.0)
-    service = api.serve(
-        problem, options=api.SolverOptions(max_iter=200, tol=1e-3),
-        serve_options=api.ServeOptions(max_batch=args.max_batch,
-                                       max_wait_s=args.max_wait_ms / 1e3))
+    drill = os.environ.get("REPRO_FAULTS", "") not in ("", "0")
+    injection = (faults.inject(faults.nan_x(3, lane=0), limit=1)
+                 if drill else contextlib.nullcontext())
 
-    async def _run():
-        async with service:
-            return await run_demo(service, requests=args.requests,
-                                  clients=args.clients, widths=args.widths)
+    with injection:
+        problem = api.SparseProblem(loss="squared", kappa=args.kappa,
+                                    gamma=5.0)
+        service = api.serve(
+            problem, options=api.SolverOptions(max_iter=200, tol=1e-3),
+            serve_options=api.ServeOptions(max_batch=args.max_batch,
+                                           max_wait_s=args.max_wait_ms / 1e3))
 
-    results = asyncio.run(_run())
+        async def _run():
+            async with service:
+                return await run_demo(service, requests=args.requests,
+                                      clients=args.clients,
+                                      widths=args.widths)
+
+        results = asyncio.run(_run())
     warm = sum(r.warm for r in results)
     snap = service.snapshot()
+    if drill:
+        coefs_finite = all(
+            bool(np.isfinite(np.asarray(r.result.coef)).all())
+            for r in results)
+        assert snap["diverged_lanes"] > 0, "fault drill: nothing diverged"
+        assert snap["failed_lanes"] == 0, (
+            f"fault drill: {snap['failed_lanes']} lanes unrecovered")
+        assert coefs_finite, "fault drill: non-finite coefficients served"
+        print(f"fault drill: {snap['diverged_lanes']} lanes quarantined, "
+              f"{snap['recovered_lanes']} recovered in "
+              f"{snap['lane_retries']} ladder attempts, 0 failed; "
+              f"all served coefficients finite")
     lat = snap["latency_s"]
     print(f"served {len(results)} fits over {len(args.widths)} signatures: "
           f"{warm} warm-pool resumes, {snap['batches']} micro-batches, "

@@ -35,10 +35,11 @@ import jax.numpy as jnp
 
 __all__ = [
     "PRECISION_PRESETS", "PrecisionPolicy", "backend", "check_x64",
-    "force_interpret", "interpret_default", "jax_enable_x64", "kernel",
-    "kernel_table", "ladder_rounds", "precision_name", "register_kernel",
-    "resolve_interpret", "resolve_precision", "set_cpu_devices",
-    "set_platform", "use_backend", "x64_enabled",
+    "escalation_ladder", "force_interpret", "interpret_default",
+    "jax_enable_x64", "kernel", "kernel_table", "ladder_rounds",
+    "precision_name", "register_kernel", "resolve_interpret",
+    "resolve_precision", "set_cpu_devices", "set_platform", "use_backend",
+    "x64_enabled",
 ]
 
 
@@ -271,6 +272,24 @@ def precision_name(policy: PrecisionPolicy) -> str:
             return name
     return (f"custom(data={policy.data},accum={policy.accum},"
             f"state={policy.state},kkt_polish={policy.kkt_polish})")
+
+
+def escalation_ladder(policy) -> list[str]:
+    """Preset names strictly more numerically conservative than
+    ``policy``, in escalation order — the recovery ladder's precision
+    rungs. Reduced-precision data escalates to fp32 first; fp64 polish is
+    offered only when x64 mode is actually on (:func:`x64_enabled`), so
+    the ladder never constructs a policy :func:`check_x64` would refuse.
+    Returns ``[]`` when nothing stricter is available."""
+    pol = resolve_precision(policy)
+    names: list[str] = []
+    if pol.data in ("bfloat16", "float16"):
+        names.append("fp32")
+        if x64_enabled():
+            names.append("fp64_polish")
+    elif pol.kkt_polish is None and x64_enabled():
+        names.append("fp64_polish")
+    return names
 
 
 def check_x64(policy: PrecisionPolicy) -> None:

@@ -17,13 +17,20 @@ names. Four pieces, one per module:
 Entry points: :func:`repro.api.serve` (capability-checked construction) or
 :class:`FittingService` directly; ``python -m repro.launch.serve`` runs a
 synthetic demo workload and ``benchmarks/serve_bench.py`` the open-loop
-latency benchmark. Operator runbook: ``docs/serving.md``.
+latency benchmark. Operator runbook: ``docs/serving.md`` (see its
+"Failure modes & recovery" section for the quarantine / circuit-breaker /
+load-shed behavior surfaced by :class:`ServiceOverloaded`,
+:class:`UnknownClient`, and the re-exported
+:class:`~repro.core.recovery.RecoveryPolicy` /
+:class:`~repro.core.recovery.SolveDiverged`).
 """
+from ..core.recovery import RecoveryPolicy, SolveDiverged
 from .batcher import (DeadlineExceeded, DriverCache, FitRequest,
                       IterRateEstimator, MicroBatcher, ServeResult,
                       Signature, next_pow2, solve_batch)
 from .metrics import GLOSSARY, LatencyRecorder, ServeMetrics
-from .plane import FittingService, ServeOptions, ServiceStopped
+from .plane import (FittingService, ServeOptions, ServiceOverloaded,
+                    ServiceStopped, UnknownClient)
 from .store import WarmEntry, WarmPool, pytree_nbytes
 
 __all__ = [
@@ -35,11 +42,15 @@ __all__ = [
     "IterRateEstimator",
     "LatencyRecorder",
     "MicroBatcher",
+    "RecoveryPolicy",
     "ServeMetrics",
     "ServeOptions",
     "ServeResult",
+    "ServiceOverloaded",
     "ServiceStopped",
     "Signature",
+    "SolveDiverged",
+    "UnknownClient",
     "WarmEntry",
     "WarmPool",
     "next_pow2",

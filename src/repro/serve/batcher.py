@@ -37,7 +37,8 @@ import jax.numpy as jnp
 
 from .. import runtime
 from ..core.fleet import (_pad_loss_unit, stack_states, zero_lane_state)
-from ..core.results import FitResult
+from ..core.recovery import SolveDiverged
+from ..core.results import FitResult, SolveStatus
 from .metrics import ServeMetrics
 from .store import WarmEntry, WarmPool
 
@@ -112,6 +113,8 @@ class ServeResult(NamedTuple):
     signature: Signature
     queue_s: float          # pending time, submit -> batch close
     solve_s: float          # batch solve wall time (shared by the batch)
+    status: Any = None      # SolveStatus code of the lane (int)
+    recovery: Any = None    # RecoveryAttempt log when the lane was retried
 
 
 class PendingBatch:
@@ -222,22 +225,43 @@ class DriverCache:
         # fp32 adapter at the same model key are distinct compiled programs
         self.precision = runtime.precision_name(options.precision)
         self._adapters: dict[tuple, Any] = {}
+        # quarantine retries memoize their ladder-rung adapters here, so a
+        # recurring divergence mode never pays a second trace per rung
+        self._retry_adapters: dict[tuple, Any] = {}
         self.seen: set[tuple] = set()
+
+    def problem_for(self, sig: Signature):
+        """The service's default problem specialized to ``sig``'s model."""
+        problem = self._problem
+        if (sig.loss, sig.n_classes) != (
+                problem.resolve_loss().name, problem.n_classes):
+            problem = dataclasses.replace(
+                problem, loss=sig.loss, n_classes=sig.n_classes)
+        return problem
 
     def adapter(self, sig: Signature):
         """The (cached) reference-engine adapter solving ``sig``'s model."""
         key = (sig.loss, sig.n_classes, self.precision)
         ad = self._adapters.get(key)
         if ad is None:
-            problem = self._problem
-            if (sig.loss, sig.n_classes) != (
-                    problem.resolve_loss().name, problem.n_classes):
-                problem = dataclasses.replace(
-                    problem, loss=sig.loss, n_classes=sig.n_classes)
-            ad = self._api.make_adapter(problem, self._options,
-                                        engine="reference")
+            ad = self._api.make_adapter(self.problem_for(sig),
+                                        self._options, engine="reference")
             self._adapters[key] = ad
         return ad
+
+    def retry_lane(self, sig: Signature, req: FitRequest, X, y,
+                   failed: FitResult, policy) -> FitResult:
+        """Run the recovery ladder for one quarantined lane on its own
+        *unpadded* data (``X``/``y`` in the stacked ``(N, m, n)`` layout),
+        off-batch — batch-mates are never re-solved. Rung adapters are
+        memoized on the cache so a recurring divergence mode compiles each
+        rung once per service."""
+        return self._api._run_ladder(
+            self.problem_for(sig), self._options, X, y,
+            failed=failed, policy=policy,
+            overrides=dict(kappa=req.kappa, gamma=req.gamma,
+                           rho_c=req.rho_c),
+            adapter_cache=self._retry_adapters)
 
     def note_dispatch(self, shape_sig: tuple) -> None:
         """Record one dispatch at ``shape_sig`` and count hit vs compile."""
@@ -305,7 +329,7 @@ class IterRateEstimator:
 def solve_batch(batch: PendingBatch, drivers: DriverCache, pool: WarmPool,
                 metrics: ServeMetrics, *, iter_rate: float | None = None,
                 rate_estimator: IterRateEstimator | None = None,
-                pad_shapes: bool = True,
+                pad_shapes: bool = True, recovery=None,
                 clock=time.monotonic) -> list[tuple[FitRequest, Any]]:
     """Solve one closed batch through the fleet driver; returns
     ``(request, ServeResult | Exception)`` pairs for the plane to resolve.
@@ -317,7 +341,16 @@ def solve_batch(batch: PendingBatch, drivers: DriverCache, pool: WarmPool,
     calibrated per-signature rate when ``rate_estimator`` has one, the
     manual ``iter_rate`` otherwise), run ``fit_many_stacked`` via the
     cached adapter, then scatter results, feed the observed rate back to
-    the estimator, and refresh the pool."""
+    the estimator, and refresh the pool.
+
+    Lanes the in-loop divergence probe flags are **quarantined**: their
+    poisoned state never enters the warm pool, and — when ``recovery`` is
+    a :class:`~repro.core.recovery.RecoveryPolicy` — each is retried
+    off-batch through the escalation ladder on its own unpadded data.
+    Batch-mates are untouched (fleet lanes are independent under vmap, so
+    their results are bit-identical to an all-healthy batch). A lane still
+    DIVERGED after the ladder fails with
+    :class:`~repro.core.recovery.SolveDiverged`."""
     now = clock()
     sig = batch.signature
     live, outcomes = [], []
@@ -416,17 +449,53 @@ def solve_batch(batch: PendingBatch, drivers: DriverCache, pool: WarmPool,
 
     pad_unit = _pad_loss_unit(solver)
     tol = cfg.tol
+    diverged_code = int(SolveStatus.DIVERGED)
     for i, r in enumerate(live):
         lane = fleet[i]
         m_i = data[i][0].shape[1]
-        aborted = bool(
-            capped[i] and int(fleet.iters[i]) >= int(iter_caps[i])
-            and (float(fleet.p_r[i]) >= tol or float(fleet.d_r[i]) >= tol
-                 or float(fleet.b_r[i]) >= tol))
+        status = None if fleet.status is None else int(fleet.status[i])
+        lane_recovery = None
+        if status == diverged_code:
+            # quarantine: the poisoned state never reaches the pool, and
+            # the lane is retried off-batch on its own unpadded data
+            metrics.bump("diverged_lanes")
+            if recovery is not None:
+                X_i, y_i = data[i]
+                res = drivers.retry_lane(sig, r, X_i.astype(dt),
+                                         y_i.astype(dt), lane, recovery)
+                metrics.bump("lane_retries", len(res.recovery or ()))
+                status = int(res.status)
+                lane = res          # carries the attempt log either way
+                if status != diverged_code:
+                    metrics.bump("recovered_lanes")
+                    lane_recovery = res.recovery
+            if status == diverged_code:
+                metrics.bump("failed_lanes")
+                why = ("the recovery ladder could not bring it back"
+                       if recovery is not None
+                       else "no recovery policy is set")
+                outcomes.append((r, SolveDiverged(
+                    f"lane diverged and {why} (client {r.client_id!r})",
+                    result=lane)))
+                continue
+        if lane_recovery is not None:
+            # the recovered result came from an unpadded off-batch solve:
+            # its train loss needs no padding correction, and the retry
+            # ignored the deadline cap
+            aborted = False
+            X_i, y_i = data[i]
+            pred = X_i.reshape(-1, sig.n) @ lane.coef
+            pred = pred[:, 0] if sig.n_classes == 1 else pred
+            train_loss = float(solver.loss.value(pred, y_i.reshape(-1)))
+        else:
+            aborted = bool(
+                capped[i] and int(fleet.iters[i]) >= int(iter_caps[i])
+                and (float(fleet.p_r[i]) >= tol or float(fleet.d_r[i]) >= tol
+                     or float(fleet.b_r[i]) >= tol))
+            train_loss = (float(fleet.train_loss[i])
+                          - sig.N * (m_pad - m_i) * pad_unit)
         if aborted:
             metrics.bump("deadline_aborted")
-        train_loss = (float(fleet.train_loss[i])
-                      - sig.N * (m_pad - m_i) * pad_unit)
         if r.client_id is not None:
             pool.put((r.client_id, sig),
                      WarmEntry(state=lane.state, coef=lane.coef,
@@ -434,5 +503,6 @@ def solve_batch(batch: PendingBatch, drivers: DriverCache, pool: WarmPool,
         outcomes.append((r, ServeResult(
             result=lane, train_loss=train_loss, warm=warm[i],
             deadline_aborted=aborted, batch_lanes=B_real, signature=sig,
-            queue_s=t0 - r.submitted_at, solve_s=solve_s)))
+            queue_s=t0 - r.submitted_at, solve_s=solve_s,
+            status=status, recovery=lane_recovery)))
     return outcomes

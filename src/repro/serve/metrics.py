@@ -15,7 +15,10 @@ GLOSSARY = {
     "requests": "fit requests submitted to the plane (admitted or not)",
     "admitted": "requests that entered the micro-batcher queue",
     "rejected": "requests refused at admission (already past deadline, "
-                "or the service is stopped)",
+                "invalid data, or the service is stopped)",
+    "rejected_overload": "requests refused at admission by the load-shed "
+                         "bound (max_pending) or an open circuit breaker "
+                         "— failed with ServiceOverloaded, never queued",
     "expired": "queued requests whose deadline passed before their batch "
                "closed — failed with DeadlineExceeded, never solved",
     "cancelled": "requests whose future was cancelled while queued; "
@@ -34,6 +37,18 @@ GLOSSARY = {
     "driver_hits": "batches dispatched at an already-compiled shape "
                    "signature (no retrace)",
     "driver_compiles": "batches that compiled a new shape signature",
+    "diverged_lanes": "batch lanes the in-loop divergence probe flagged "
+                      "(non-finite or blown-up residuals); each is "
+                      "quarantined and retried off-batch",
+    "recovered_lanes": "quarantined lanes the recovery ladder brought back "
+                       "to a finite result (resolved normally, with the "
+                       "attempt log on the result)",
+    "failed_lanes": "quarantined lanes still diverged after the ladder — "
+                    "failed with SolveDiverged",
+    "lane_retries": "total recovery-ladder attempts spent on quarantined "
+                    "lanes (rungs tried, not lanes)",
+    "solver_errors": "solver-thread batch dispatches that raised; the "
+                     "batch's requests fail, the loop survives",
     "latency_s": "request wall time, submit to future resolution",
     "queue_s": "request wall time spent pending in the micro-batcher",
     "solve_s": "batch wall time inside the fleet driver (per batch)",
@@ -87,10 +102,12 @@ class LatencyRecorder:
 class ServeMetrics:
     """All counters and latency series of one :class:`FittingService`."""
 
-    COUNTERS = ("requests", "admitted", "rejected", "expired", "cancelled",
-                "completed", "deadline_aborted", "batches", "batch_lanes",
-                "pad_lanes", "warm_hits", "warm_misses", "evictions",
-                "driver_hits", "driver_compiles")
+    COUNTERS = ("requests", "admitted", "rejected", "rejected_overload",
+                "expired", "cancelled", "completed", "deadline_aborted",
+                "batches", "batch_lanes", "pad_lanes", "warm_hits",
+                "warm_misses", "evictions", "driver_hits", "driver_compiles",
+                "diverged_lanes", "recovered_lanes", "failed_lanes",
+                "lane_retries", "solver_errors")
 
     def __init__(self) -> None:
         for name in self.COUNTERS:

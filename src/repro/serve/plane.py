@@ -46,6 +46,7 @@ from concurrent.futures import ThreadPoolExecutor
 
 import jax.numpy as jnp
 
+from ..core.recovery import RecoveryPolicy
 from .batcher import (DeadlineExceeded, DriverCache, FitRequest,
                       IterRateEstimator, MicroBatcher, ServeResult,
                       Signature, solve_batch)
@@ -57,6 +58,20 @@ _STOP = object()
 
 class ServiceStopped(RuntimeError):
     """The service is not running (never started, or already stopped)."""
+
+
+class ServiceOverloaded(RuntimeError):
+    """The plane refused the request at admission: the pending backlog is
+    at ``max_pending``, or the divergence circuit breaker is open (counted
+    as ``rejected_overload``). Load-shedding, not failure — resubmit after
+    backing off."""
+
+
+class UnknownClient(KeyError):
+    """``predict`` found no warm model for the client — it never fitted
+    with this feature count, or its pool entry was LRU-evicted. A
+    ``KeyError`` subclass (and so a ``LookupError``); refit to repopulate
+    the pool."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,7 +92,20 @@ class ServeOptions:
     once a signature has ``iter_rate_min_samples`` batches; until then the
     manual rate (or no capping) applies. ``pad_shapes`` quantizes dispatch
     shapes (``m``, batch axis) to powers of two so live traffic compiles a
-    handful of driver programs instead of one per batch size."""
+    handful of driver programs instead of one per batch size.
+
+    The resilience knobs: ``recovery`` is the
+    :class:`~repro.core.recovery.RecoveryPolicy` applied to quarantined
+    (DIVERGED) lanes — None disables the per-lane retry and such lanes
+    fail immediately with ``SolveDiverged``. ``max_pending`` bounds the
+    admitted-but-unsolved backlog; past it, ``submit_fit`` sheds load with
+    :class:`ServiceOverloaded` instead of queueing without bound.
+    ``breaker_threshold`` / ``breaker_cooldown_s`` are the divergence
+    circuit breaker: when one batch quarantines at least
+    ``breaker_threshold`` lanes (a systemic blow-up, not a stray bad
+    problem), admission is refused for ``breaker_cooldown_s`` seconds
+    rather than feeding more work to a diverging configuration
+    (``breaker_threshold=None`` disables the breaker)."""
     max_batch: int = 32
     max_wait_s: float = 0.005
     warm_pool_entries: int = 512
@@ -87,6 +115,10 @@ class ServeOptions:
     iter_rate_ewma: float = 0.3
     iter_rate_min_samples: int = 3
     pad_shapes: bool = True
+    recovery: RecoveryPolicy | None = RecoveryPolicy()
+    max_pending: int | None = None
+    breaker_threshold: int | None = 8
+    breaker_cooldown_s: float = 1.0
 
 
 class FittingService:
@@ -108,6 +140,7 @@ class FittingService:
     def __init__(self, problem, options=None, serve_options=None, *,
                  clock=time.monotonic):
         from .. import api as _api
+        self._api = _api
         self.problem = problem
         self.options = options if options is not None else _api.SolverOptions()
         self.serve_options = (serve_options if serve_options is not None
@@ -125,6 +158,7 @@ class FittingService:
         self._batcher = MicroBatcher(self.serve_options.max_batch,
                                      self.serve_options.max_wait_s)
         self._running = False
+        self._breaker_open_until: float | None = None
         self._queue: asyncio.Queue | None = None
         self._solve_queue: asyncio.Queue | None = None
         self._intake_task = None
@@ -193,7 +227,14 @@ class FittingService:
         """Admit one fit request; returns the future resolving to its
         :class:`~repro.serve.batcher.ServeResult`. ``deadline`` is
         seconds from now; cancel the future to withdraw a queued
-        request."""
+        request.
+
+        Admission can refuse: ``ServiceStopped`` (plane down), a
+        ``ValueError`` for data the solvers cannot fit (empty, mismatched,
+        non-finite — checked *here*, before anything reaches the solver
+        thread), ``DeadlineExceeded`` (already expired), and
+        :class:`ServiceOverloaded` (backlog at ``max_pending``, or the
+        divergence circuit breaker is open)."""
         self.metrics.bump("requests")
         loop = asyncio.get_running_loop()
         future = loop.create_future()
@@ -202,10 +243,37 @@ class FittingService:
             self.metrics.bump("rejected")
             future.set_exception(ServiceStopped("service is not running"))
             return future
+        try:
+            Xa, ya = jnp.asarray(X), jnp.asarray(y)
+            if Xa.ndim not in (2, 3):
+                raise ValueError(f"X must be (samples, n) or (N, m, n); "
+                                 f"got shape {Xa.shape}")
+            self._api.validate_data(Xa, ya)
+            if kappa is not None and int(kappa) < 1:
+                raise ValueError(f"kappa must be >= 1; got {kappa!r}")
+        except ValueError as exc:
+            self.metrics.bump("rejected")
+            future.set_exception(exc)
+            return future
         if deadline is not None and deadline <= 0:
             self.metrics.bump("rejected")
             future.set_exception(DeadlineExceeded(
                 f"deadline {deadline!r}s is already in the past"))
+            return future
+        so = self.serve_options
+        if (self._breaker_open_until is not None
+                and now < self._breaker_open_until):
+            self.metrics.bump("rejected_overload")
+            future.set_exception(ServiceOverloaded(
+                "divergence circuit breaker is open for another "
+                f"{self._breaker_open_until - now:.3f}s"))
+            return future
+        backlog = self._batcher.pending_requests + self._queue.qsize()
+        if so.max_pending is not None and backlog >= so.max_pending:
+            self.metrics.bump("rejected_overload")
+            future.set_exception(ServiceOverloaded(
+                f"{backlog} requests already pending (max_pending="
+                f"{so.max_pending}); shedding load"))
             return future
         req = FitRequest(
             X=X, y=y, signature=self._signature(X, loss, n_classes),
@@ -223,8 +291,9 @@ class FittingService:
 
     async def predict(self, X, *, client_id, loss=None):
         """Predict from the client's last fitted model in the warm pool
-        (no solver work, not batched); raises LookupError when the client
-        has no resident model for this feature count."""
+        (no solver work, not batched); raises :class:`UnknownClient` (a
+        ``LookupError``) when the client has no resident model for this
+        feature count — never fitted, or LRU-evicted."""
         X = jnp.asarray(X)
         if X.ndim == 3:
             X = X.reshape(-1, X.shape[-1])
@@ -236,7 +305,7 @@ class FittingService:
                 scores = X @ entry.coef
                 scores = scores[:, 0] if sig.n_classes == 1 else scores
                 return get_loss(sig.loss, sig.n_classes).predict(scores)
-        raise LookupError(
+        raise UnknownClient(
             f"no warm model for client {client_id!r} with n={n} "
             f"(cold client, or evicted from the pool)")
 
@@ -288,8 +357,26 @@ class FittingService:
             batch = await self._solve_queue.get()
             if batch is _STOP:
                 return
-            outcomes = await loop.run_in_executor(
-                self._executor, self._solve, batch)
+            quarantined_before = self.metrics.diverged_lanes
+            try:
+                outcomes = await loop.run_in_executor(
+                    self._executor, self._solve, batch)
+            except Exception as exc:
+                # a solver-thread crash fails this batch's requests but
+                # never kills the loop — the plane stays up
+                self.metrics.bump("solver_errors")
+                for req in batch.requests:
+                    if not req.future.done():
+                        req.future.set_exception(exc)
+                continue
+            so = self.serve_options
+            newly_quarantined = (self.metrics.diverged_lanes
+                                 - quarantined_before)
+            if (so.breaker_threshold is not None
+                    and newly_quarantined >= so.breaker_threshold):
+                # systemic divergence: stop admitting for the cooldown
+                self._breaker_open_until = (self._clock()
+                                            + so.breaker_cooldown_s)
             now = self._clock()
             for req, out in outcomes:
                 if req.future.done():
@@ -308,4 +395,5 @@ class FittingService:
             batch, self.drivers, self.pool, self.metrics,
             iter_rate=self.serve_options.deadline_iter_rate,
             rate_estimator=self.rate_estimator,
-            pad_shapes=self.serve_options.pad_shapes, clock=self._clock)
+            pad_shapes=self.serve_options.pad_shapes,
+            recovery=self.serve_options.recovery, clock=self._clock)

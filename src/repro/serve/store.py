@@ -118,6 +118,8 @@ class WarmPool:
     def client_entries(self, client_id) -> list[tuple[tuple, WarmEntry]]:
         """Every resident ``(key, entry)`` belonging to ``client_id`` —
         the predict path's lookup when only the client is known (linear in
-        pool size; the pool is bounded)."""
-        return [(k, e) for k, e in self._entries.items()
+        pool size; the pool is bounded). Snapshots the entries first: the
+        solver thread may evict concurrently, and iterating the live dict
+        would crash mid-predict."""
+        return [(k, e) for k, e in list(self._entries.items())
                 if k[0] == client_id]

@@ -18,7 +18,10 @@ API_SURFACE = {
     "FitResult",
     "FittingService",
     "FleetResult",
+    "RecoveryPolicy",
     "ServeOptions",
+    "SolveDiverged",
+    "SolveStatus",
     "SolverOptions",
     "SparseEstimator",
     "SparseLinearRegression",
@@ -31,10 +34,12 @@ API_SURFACE = {
     "fit_many",
     "select_engine",
     "serve",
+    "recover",
     "solve",
     "solve_grid",
     "solve_path",
     "split_legacy_config",
+    "validate_data",
 }
 
 CORE_SURFACE = {

@@ -1,0 +1,505 @@
+"""The fault-tolerant solve plane, certified by injection.
+
+The contract under test, layer by layer:
+
+* **detection** — the in-loop divergence probe stops the compiled while
+  loop within a few iterations of an injected NaN / Inf / exploding
+  dual, and the lane reports ``SolveStatus.DIVERGED`` (never a silent
+  max_iter crawl over non-finite iterates);
+* **recovery** — the escalation ladder (retry -> rho restart ->
+  precision -> x-solver) brings an injected divergence back to
+  CONVERGED, logs every attempt, and each rung is the *genuine* fix when
+  the fault is keyed to the config it changes;
+* **quarantine** — a poisoned serve-plane lane is retried off-batch;
+  batch-mates are bit-identical to an all-healthy batch and the poisoned
+  state never enters the warm pool;
+* **the plane survives** — load shed, circuit breaker, solver-thread
+  exceptions, deadline storms, warm-pool eviction races: the service
+  stays up and the counters add up;
+* **honesty on hostile inputs** — denormals, zero-variance columns,
+  kappa >= n: a result is never CONVERGED with non-finite coefficients
+  (property-tested when hypothesis is installed).
+"""
+import asyncio
+import sys
+from concurrent.futures import Future as ThreadFuture
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(__import__("pathlib").Path(__file__).parent))
+from hypothesis_compat import given, settings, st  # noqa: E402
+
+import repro.api as api  # noqa: E402
+from repro import faults  # noqa: E402
+from repro.core.bilinear import ladder_refine  # noqa: E402
+from repro.core.results import (SolveStatus, classify_status,  # noqa: E402
+                                divergence_probe, mark_aborted)
+from repro.serve import (DriverCache, FitRequest, MicroBatcher,  # noqa: E402
+                         RecoveryPolicy, ServeMetrics, ServeOptions,
+                         ServiceOverloaded, Signature, SolveDiverged,
+                         UnknownClient, WarmPool, solve_batch)
+
+PROBLEM = api.SparseProblem(loss="squared", kappa=3, gamma=5.0)
+OPTIONS = api.SolverOptions(max_iter=300, tol=1e-3)
+SIG = Signature(N=1, n=10, loss="squared", n_classes=1)
+DIVERGED = int(SolveStatus.DIVERGED)
+CONVERGED = int(SolveStatus.CONVERGED)
+
+
+def _data(seed, n=10, m=24, kappa=3):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((m, n)).astype(np.float32)
+    w = np.zeros(n)
+    w[rng.choice(n, kappa, replace=False)] = 1.0 + rng.random(kappa)
+    y = (X @ w + 0.01 * rng.standard_normal(m)).astype(np.float32)
+    return X, y
+
+
+def _req(X, y, sig=SIG, **kw):
+    kw.setdefault("future", ThreadFuture())
+    return FitRequest(X=X, y=y, signature=sig, **kw)
+
+
+def _dispatch(reqs, drivers, pool=None, now=10.0, **kw):
+    batcher = MicroBatcher(max_batch=64)
+    for r in reqs:
+        batcher.add(r, now)
+    (batch,) = batcher.flush()
+    return solve_batch(batch, drivers,
+                       pool if pool is not None else WarmPool(),
+                       drivers.metrics, clock=lambda: now, **kw)
+
+
+# --------------------------------------------------------------------------
+# status classification: pure-function units
+# --------------------------------------------------------------------------
+def test_classify_and_mark_aborted_units():
+    assert int(classify_status(
+        jnp.int32(40), jnp.float32(1e-4), jnp.float32(1e-4),
+        jnp.float32(1e-4), tol=1e-3, divergence_tol=1e12)) == CONVERGED
+    assert int(classify_status(
+        jnp.int32(300), jnp.float32(1.0), jnp.float32(1e-4),
+        jnp.float32(1e-4), tol=1e-3, divergence_tol=1e12)) == int(
+            SolveStatus.MAX_ITER)
+    assert int(classify_status(
+        jnp.int32(5), jnp.float32(jnp.nan), jnp.float32(1e-4),
+        jnp.float32(1e-4), tol=1e-3, divergence_tol=1e12)) == DIVERGED
+    # deadline-capped lanes flip MAX_ITER -> ABORTED; cap-0 padding too
+    status = mark_aborted(jnp.asarray([1, 1, 0], jnp.int32),
+                          jnp.asarray([0, 3, 50]),
+                          jnp.asarray([0, 3, 500]), 300)
+    assert status.tolist() == [int(SolveStatus.ABORTED),
+                               int(SolveStatus.ABORTED), CONVERGED]
+
+
+def test_divergence_probe_ignores_the_inf_init():
+    """Reset residuals are inf by construction; the probe must not fire
+    before the first real step."""
+    class St:
+        k = jnp.int32(0)
+        p_r = jnp.float32(jnp.inf)
+        d_r = jnp.float32(jnp.inf)
+        b_r = jnp.float32(jnp.inf)
+    assert not bool(divergence_probe(St, 1e12))
+    St.k = jnp.int32(1)
+    assert bool(divergence_probe(St, 1e12))
+
+
+# --------------------------------------------------------------------------
+# in-loop detection, both engines
+# --------------------------------------------------------------------------
+def test_healthy_solve_is_converged_and_unrecovered():
+    X, y = _data(0)
+    res = api.solve(PROBLEM, X, y, options=OPTIONS)
+    assert int(res.status) == CONVERGED and res.status_name == "CONVERGED"
+    assert res.converged and res.recovery is None
+
+
+def test_nan_fault_exits_the_loop_early():
+    X, y = _data(0)
+    with faults.inject(faults.nan_x(3)) as inj:
+        res = api.solve(PROBLEM, X, y, options=OPTIONS)
+    assert len(inj.hooked) == 1
+    assert int(res.status) == DIVERGED
+    assert int(res.iters) < 10, "probe must abort, not crawl to max_iter"
+
+
+def test_exploding_dual_trips_the_blowup_probe():
+    X, y = _data(0)
+    with faults.inject(faults.scale_dual(2, scale=1e30)):
+        res = api.solve(PROBLEM, X, y, options=OPTIONS)
+    assert int(res.status) == DIVERGED and int(res.iters) < 10
+
+
+def test_sharded_engine_detects_the_same_fault():
+    X, y = _data(0)
+    mesh = jax.make_mesh((1, 1), ("nodes", "feat"))
+    opts = api.SolverOptions(engine="sharded", mesh=mesh, max_iter=300,
+                             tol=1e-3)
+    assert int(api.solve(PROBLEM, X, y, options=opts).status) == CONVERGED
+    with faults.inject(faults.nan_x(3)):
+        res = api.solve(PROBLEM, X, y, options=opts)
+    assert int(res.status) == DIVERGED and int(res.iters) < 10
+
+
+def test_divergence_tol_must_be_positive():
+    with pytest.raises(ValueError):
+        api.SolverOptions(divergence_tol=0.0)
+
+
+# --------------------------------------------------------------------------
+# the recovery ladder
+# --------------------------------------------------------------------------
+def test_ladder_retry_rung_recovers_a_one_shot_fault():
+    X, y = _data(1)
+    opts = api.SolverOptions(max_iter=300, tol=1e-3,
+                             recovery=RecoveryPolicy())
+    with faults.inject(faults.nan_x(3), limit=1):
+        res = api.solve(PROBLEM, X, y, options=opts)
+    assert int(res.status) == CONVERGED
+    (attempt,) = res.recovery
+    assert attempt.stage == "retry" and attempt.status == CONVERGED
+
+
+def test_rho_restart_rung_is_the_genuine_fix():
+    """Fault keyed on rho_c < 5: the batch solver AND the retry rung are
+    both poisoned; only the rho-restarted solver (rho_c scaled to 10)
+    escapes the predicate — the log must show retry failing first."""
+    X, y = _data(1)
+    prob = api.SparseProblem(loss="squared", kappa=3, gamma=5.0, rho_c=1.0)
+    opts = api.SolverOptions(max_iter=300, tol=1e-3,
+                             recovery=RecoveryPolicy(rho_scale=10.0))
+    with faults.inject(faults.nan_x(2),
+                       where=lambda s: float(s.cfg.rho_c) < 5.0):
+        res = api.solve(prob, X, y, options=opts)
+    assert int(res.status) == CONVERGED
+    stages = [a.stage for a in res.recovery]
+    assert stages == ["retry", "rho_restart"]
+    assert res.recovery[0].status == DIVERGED
+
+
+def test_ladder_exhaustion_stays_diverged_with_full_log():
+    X, y = _data(1)
+    opts = api.SolverOptions(
+        max_iter=300, tol=1e-3,
+        recovery=RecoveryPolicy(max_attempts=2))
+    with faults.inject(faults.nan_x(2)):     # every solver poisoned
+        res = api.solve(PROBLEM, X, y, options=opts)
+    assert int(res.status) == DIVERGED
+    assert len(res.recovery) == 2
+    assert all(a.status == DIVERGED for a in res.recovery)
+
+
+def test_public_recover_entry_point():
+    X, y = _data(1)
+    with faults.inject(faults.nan_x(3), limit=1):
+        failed = api.solve(PROBLEM, X, y, options=OPTIONS)
+        assert int(failed.status) == DIVERGED
+        res = api.recover(PROBLEM, X, y, options=OPTIONS, failed=failed)
+    assert int(res.status) == CONVERGED and len(res.recovery) == 1
+
+
+def test_recovery_policy_validation():
+    with pytest.raises(ValueError):
+        RecoveryPolicy(max_attempts=0)
+    with pytest.raises(ValueError):
+        RecoveryPolicy(rho_scale=1.0)
+
+
+# --------------------------------------------------------------------------
+# boundary validation
+# --------------------------------------------------------------------------
+def test_solve_rejects_bad_data_before_tracing():
+    X, y = _data(2)
+    bad = np.array(X)
+    bad[0, 0] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        api.solve(PROBLEM, bad, y)
+    with pytest.raises(ValueError, match="non-finite"):
+        api.solve(PROBLEM, X, np.where(np.arange(len(y)) == 0, np.inf, y))
+    with pytest.raises(ValueError, match="targets"):
+        api.solve(PROBLEM, X, y[:-3])
+    with pytest.raises(ValueError, match="empty"):
+        api.solve(PROBLEM, X[:0], y[:0])
+    with pytest.raises(ValueError, match="non-finite"):
+        api.SparseLinearRegression(kappa=3).fit(bad, y)
+
+
+# --------------------------------------------------------------------------
+# serve-plane quarantine (components level, no event loop)
+# --------------------------------------------------------------------------
+def test_quarantined_lane_recovers_and_batch_mates_are_bit_identical():
+    reqs_data = [_data(s) for s in (3, 4, 5)]
+    clean = DriverCache(PROBLEM, OPTIONS, ServeMetrics())
+    clean_out = _dispatch([_req(X, y) for X, y in reqs_data], clean)
+
+    with faults.inject(faults.nan_x(3, lane=0), limit=1) as inj:
+        drivers = DriverCache(PROBLEM, OPTIONS, ServeMetrics())
+        pool = WarmPool()
+        out = _dispatch([_req(X, y, client_id=f"c{i}")
+                         for i, (X, y) in enumerate(reqs_data)],
+                        drivers, pool, recovery=RecoveryPolicy())
+    assert len(inj.hooked) == 1      # the batch driver, not the retry rungs
+    m = drivers.metrics
+    assert (m.diverged_lanes, m.recovered_lanes, m.failed_lanes) == (1, 1, 0)
+    assert m.lane_retries >= 1
+
+    (_, r0), (_, r1), (_, r2) = out
+    assert r0.status == CONVERGED and r0.recovery is not None
+    assert bool(np.isfinite(np.asarray(r0.result.coef)).all())
+    # the recovered state re-enters the pool and is finite
+    entry = pool.peek(("c0", SIG))
+    assert entry is not None
+    assert all(bool(jnp.isfinite(leaf).all())
+               for leaf in jax.tree.leaves(entry.state)
+               if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.inexact))
+    # batch-mates: bit-identical to the all-healthy dispatch
+    for (rf, rc) in [(r1, clean_out[1][1]), (r2, clean_out[2][1])]:
+        assert rf.recovery is None
+        assert bool(jnp.array_equal(rf.result.coef, rc.result.coef))
+        assert bool(jnp.array_equal(rf.result.z, rc.result.z))
+
+
+def test_unrecovered_lane_fails_closed_and_pool_stays_clean():
+    X, y = _data(6)
+    with faults.inject(faults.nan_x(3)):     # every solver poisoned
+        drivers = DriverCache(PROBLEM, OPTIONS, ServeMetrics())
+        pool = WarmPool()
+        (_, out), = _dispatch(
+            [_req(X, y, client_id="victim")], drivers, pool,
+            recovery=RecoveryPolicy(max_attempts=1))
+    assert isinstance(out, SolveDiverged)
+    assert int(out.result.status) == DIVERGED
+    assert ("victim", SIG) not in pool, "poisoned state must never be pooled"
+    m = drivers.metrics
+    assert (m.diverged_lanes, m.recovered_lanes, m.failed_lanes) == (1, 0, 1)
+
+
+def test_no_recovery_policy_fails_immediately():
+    X, y = _data(6)
+    with faults.inject(faults.nan_x(3), limit=1):
+        drivers = DriverCache(PROBLEM, OPTIONS, ServeMetrics())
+        (_, out), = _dispatch([_req(X, y)], drivers, recovery=None)
+    assert isinstance(out, SolveDiverged)
+    assert drivers.metrics.lane_retries == 0
+
+
+# --------------------------------------------------------------------------
+# the async plane under faults
+# --------------------------------------------------------------------------
+def _service(clock=None, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_wait_s", 0.02)
+    return api.serve(PROBLEM, options=OPTIONS,
+                     serve_options=ServeOptions(**kw),
+                     **({} if clock is None else {"clock": clock}))
+
+
+def test_submit_fit_validates_at_admission():
+    async def scenario():
+        service = _service()
+        async with service:
+            X, y = _data(7)
+            bad = np.array(X)
+            bad[0, 0] = np.inf
+            with pytest.raises(ValueError, match="non-finite"):
+                await service.fit(bad, y)
+            with pytest.raises(ValueError, match="targets"):
+                await service.fit(X, y[:-1])
+            with pytest.raises(ValueError, match="kappa"):
+                await service.fit(X, y, kappa=0)
+        return service
+
+    service = asyncio.run(scenario())
+    assert service.snapshot()["rejected"] == 3
+
+
+def test_max_pending_sheds_load():
+    async def scenario():
+        service = _service(max_pending=1, max_wait_s=5.0, max_batch=64)
+        async with service:
+            X, y = _data(8)
+            ok = service.submit_fit(X, y)
+            with pytest.raises(ServiceOverloaded):
+                await service.fit(X, y)
+            await ok
+        return service
+
+    service = asyncio.run(scenario())
+    snap = service.snapshot()
+    assert snap["rejected_overload"] == 1 and snap["completed"] == 1
+
+
+def test_circuit_breaker_opens_on_systemic_divergence_and_cools_down():
+    t = [0.0]
+
+    async def scenario():
+        with faults.inject(faults.nan_x(3), limit=1):
+            service = _service(clock=lambda: t[0], breaker_threshold=1,
+                               breaker_cooldown_s=5.0, recovery=None,
+                               max_wait_s=0.0)
+            async with service:
+                X, y = _data(9)
+                with pytest.raises(SolveDiverged):
+                    await service.fit(X, y)
+                with pytest.raises(ServiceOverloaded):
+                    await service.fit(X, y)       # breaker open
+                t[0] = 10.0                       # past the cooldown
+                with pytest.raises(SolveDiverged):
+                    await service.fit(X, y)       # admitted again
+        return service
+
+    service = asyncio.run(scenario())
+    snap = service.snapshot()
+    assert snap["rejected_overload"] == 1
+    assert snap["diverged_lanes"] == 2 and snap["failed_lanes"] == 2
+
+
+def test_solver_thread_exception_fails_batch_but_not_the_plane():
+    async def scenario():
+        service = _service()
+        async with service:
+            X, y = _data(10)
+            with faults.failing(service.drivers, "adapter",
+                                RuntimeError("driver lost"), times=1):
+                with pytest.raises(RuntimeError, match="driver lost"):
+                    await service.fit(X, y)
+            return service, await service.fit(X, y)   # loop survived
+
+    service, res = asyncio.run(scenario())
+    assert res.status == CONVERGED
+    snap = service.snapshot()
+    assert snap["solver_errors"] == 1 and snap["completed"] == 1
+
+
+def test_deadline_storm_fails_every_request_cleanly():
+    async def scenario():
+        service = _service(max_wait_s=0.05)
+        async with service:
+            X, y = _data(11)
+            outs = await faults.deadline_storm(service, X, y, count=12,
+                                               deadline=1e-4)
+            healthy = await service.fit(X, y)
+        return service, outs, healthy
+
+    service, outs, healthy = asyncio.run(scenario())
+    assert all(isinstance(o, Exception) for o in outs)
+    assert healthy.status == CONVERGED
+    snap = service.snapshot()
+    assert snap["expired"] == 12 and snap["completed"] == 1
+    assert snap["requests"] == 13
+
+
+def test_predict_unknown_client_is_a_lookup_error_after_eviction():
+    async def scenario():
+        service = _service(warm_pool_entries=1)
+        async with service:
+            X, y = _data(12)
+            await service.fit(X, y, client_id="old")
+            await service.fit(X, y, client_id="new")   # LRU-evicts "old"
+            got = await service.predict(X, client_id="new")
+            with pytest.raises(UnknownClient):
+                await service.predict(X, client_id="old")
+            with pytest.raises(LookupError):           # the old contract
+                await service.predict(X, client_id="old")
+        return service, got
+
+    service, got = asyncio.run(scenario())
+    assert got.shape == (24,)
+    assert service.snapshot()["evictions"] == 1
+    assert issubclass(UnknownClient, KeyError)
+
+
+def test_warm_pool_iteration_survives_concurrent_eviction():
+    """client_entries snapshots the dict: evicting mid-iteration (the
+    solver thread's put racing a predict) must not blow up."""
+    pool = WarmPool(max_entries=4)
+    state = jnp.zeros(3)
+    for i in range(4):
+        pool.put((f"c{i}", SIG),
+                 __import__("repro.serve", fromlist=["WarmEntry"]).WarmEntry(
+                     state=state, coef=state[:, None], support=state > 0))
+    rows = pool.client_entries("c0")
+    for key, _ in rows:      # evict while holding the snapshot
+        pool.put(("fresh", SIG), pool.peek(key) or rows[0][1])
+    assert len(rows) == 1
+
+
+# --------------------------------------------------------------------------
+# hostile inputs: the result is honest or the boundary rejects
+# --------------------------------------------------------------------------
+def _assert_honest(res):
+    coef_finite = bool(np.isfinite(np.asarray(res.coef)).all())
+    if int(res.status) == CONVERGED:
+        assert coef_finite, "CONVERGED with non-finite coefficients"
+
+
+@pytest.mark.parametrize("engine", ["reference", "sharded"])
+@pytest.mark.parametrize("case", ["zero_variance", "kappa_ge_n",
+                                  "denormal", "huge_scale"])
+def test_extreme_inputs_never_lie(engine, case):
+    rng = np.random.default_rng(13)
+    X, y = _data(13)
+    if case == "zero_variance":
+        X[:, 0] = 1.0                       # constant column
+        kappa = 3
+    elif case == "kappa_ge_n":
+        kappa = X.shape[1]                  # support = everything
+    elif case == "denormal":
+        X = (X * 1e-38).astype(np.float32)  # subnormal magnitudes
+        y = (y * 1e-38).astype(np.float32)
+        kappa = 3
+    else:
+        X = (X * 1e18).astype(np.float32)
+        y = (y * 1e18).astype(np.float32)
+        kappa = 3
+    del rng
+    prob = api.SparseProblem(loss="squared", kappa=kappa, gamma=5.0)
+    if engine == "sharded":
+        mesh = jax.make_mesh((1, 1), ("nodes", "feat"))
+        opts = api.SolverOptions(engine="sharded", mesh=mesh,
+                                 max_iter=100, tol=1e-3)
+    else:
+        opts = api.SolverOptions(max_iter=100, tol=1e-3)
+    res = api.solve(prob, X, y, options=opts)
+    assert res.status is not None
+    _assert_honest(res)
+
+
+def test_ladder_refine_degenerate_inputs_stay_finite():
+    for az in (np.zeros(8), np.full(8, 1e-38), np.full(8, 1e18),
+               np.array([0.0] * 7 + [1.0])):
+        theta = ladder_refine(jnp.asarray(az, jnp.float32),
+                              jnp.float32(0.5))
+        assert bool(jnp.isfinite(theta)), f"non-finite root for az={az}"
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(min_value=0.0, max_value=1e6,
+                          allow_nan=False, allow_infinity=False,
+                          width=32),
+                min_size=2, max_size=32),
+       st.floats(min_value=1e-6, max_value=1e3, allow_nan=False,
+                 width=32))
+def test_ladder_refine_property_finite_nonnegative_root(az, h_target):
+    theta = ladder_refine(jnp.asarray(az, jnp.float32),
+                          jnp.float32(h_target))
+    assert bool(jnp.isfinite(theta))
+    assert float(theta) >= -1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+       st.sampled_from(["unit", "denormal", "large"]))
+def test_solve_property_status_is_honest(seed, scale):
+    X, y = _data(seed % 1000)
+    factor = {"unit": 1.0, "denormal": 1e-38, "large": 1e12}[scale]
+    X = (X * factor).astype(np.float32)
+    y = (y * factor).astype(np.float32)
+    res = api.solve(PROBLEM, X, y,
+                    options=api.SolverOptions(max_iter=60, tol=1e-3))
+    assert res.status is not None
+    _assert_honest(res)
