@@ -17,7 +17,7 @@ import time
 
 from . import (fig1_convergence, fig23_scaling, fig4_transfer, fleet_bench,
                gpu_bench, path_sweep, proj_bench, roofline, serve_bench,
-               table1_compare, xupdate_bench)
+               stream_bench, table1_compare, xupdate_bench)
 
 
 def main() -> None:
@@ -38,6 +38,8 @@ def main() -> None:
         fleet_bench.main(smoke=True)
         print("# Fitting service — open-loop latency, cold vs warm (smoke)")
         serve_bench.main(smoke=True)
+        print("# Streaming — partial_fit vs batch refit at T chunks (smoke)")
+        stream_bench.main(smoke=True)
         print("# Backend x precision — proj/xupdate/path (smoke)")
         gpu_bench.main(smoke=True)
         print(f"# total {time.time() - t0:.1f}s")
@@ -60,6 +62,8 @@ def main() -> None:
     fleet_bench.main(full=args.full)
     print("# Fitting service — open-loop latency, cold vs warm")
     serve_bench.main(full=args.full)
+    print("# Streaming — partial_fit vs batch refit at T chunks")
+    stream_bench.main(full=args.full)
     print("# Backend x precision — proj/xupdate/path")
     gpu_bench.main(full=args.full)
     print("# Roofline — from dry-run records")

@@ -1,0 +1,138 @@
+"""Streaming-fit benchmark — ``StreamingBiCADMM.partial_fit`` over T row
+chunks vs a batch refit from scratch at every chunk arrival.
+
+The workload this measures is the online-serving shape: rows trickle in
+and the model must stay fresh after every chunk. A batch engine pays, at
+chunk t, the full setup over all ``t * m`` rows seen so far (the Gram
+``A^T A``, its factorization, a cold solve) — total factor work O(T^2/2
+m n^2) over the stream. The streaming engine folds each chunk into the
+maintained factor with one rank-k Cholesky update — O(m n^2) once per
+chunk, O(T m n^2) total — then refits *data-free* from the warm previous
+state, so its per-chunk cost is flat in the rows already absorbed.
+
+Both sides are fully warmed (every dispatch shape pre-compiled) before
+timing, so the recorded gap is solver work, not XLA compiles — the shape
+churn a batch engine also pays under growth is deliberately excluded to
+keep the claim conservative. ``coef_maxdiff`` records the final-model
+parity between the two paths (the streamed fit must match the batch fit
+on the concatenated rows; certified exactly in ``tests/test_stream.py``).
+
+Results land in ``benchmarks/results/stream_bench.json``:
+
+    PYTHONPATH=src python -m benchmarks.stream_bench           # CPU-scaled
+    PYTHONPATH=src python -m benchmarks.stream_bench --full    # bigger T
+    PYTHONPATH=src python -m benchmarks.stream_bench --smoke   # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BiCADMM, BiCADMMConfig
+from repro.core.streaming import StreamingBiCADMM
+
+from .common import emit, save_json
+
+CFG = dict(kappa=8, gamma=20.0, rho_c=2.0, max_iter=2000, tol=1e-3)
+
+
+def _chunk_data(n: int, m: int, T: int, kappa: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    w = np.zeros(n)
+    w[rng.choice(n, kappa, replace=False)] = 1.0 + rng.random(kappa)
+    chunks = []
+    for _ in range(T):
+        X = rng.standard_normal((m, n)).astype(np.float32)
+        y = (X @ w + 0.01 * rng.standard_normal(m)).astype(np.float32)
+        chunks.append((jnp.asarray(X), jnp.asarray(y)))
+    return chunks
+
+
+def _stream_pass(cfg: BiCADMMConfig, chunks):
+    """One full pass of the stream; returns (seconds, final result)."""
+    eng = StreamingBiCADMM("squared", cfg)
+    res = None
+    t0 = time.perf_counter()
+    for X, y in chunks:
+        res = eng.partial_fit(X, y)
+    jax.block_until_ready(res.coef)
+    return time.perf_counter() - t0, res
+
+
+def _batch_pass(solver: BiCADMM, chunks):
+    """Refit from scratch on all rows seen so far, once per chunk."""
+    res = None
+    t0 = time.perf_counter()
+    for t in range(1, len(chunks) + 1):
+        X = jnp.concatenate([c[0] for c in chunks[:t]])
+        y = jnp.concatenate([c[1] for c in chunks[:t]])
+        res = solver.fit(X[None], y[None])
+    jax.block_until_ready(res.coef)
+    return time.perf_counter() - t0, res
+
+
+def _bench_one(n: int, m: int, T: int) -> dict:
+    cfg = BiCADMMConfig(**CFG)
+    solver = BiCADMM("squared", cfg)
+    chunks = _chunk_data(n, m, T, CFG["kappa"])
+
+    # warm every dispatch shape on both sides, then time a clean pass
+    _stream_pass(cfg, chunks)
+    _batch_pass(solver, chunks)
+    t_stream, res_s = _stream_pass(cfg, chunks)
+    t_batch, res_b = _batch_pass(solver, chunks)
+
+    maxdiff = float(jnp.abs(res_s.coef - res_b.coef).max())
+    speedup = t_batch / t_stream
+    row = dict(n=n, m_chunk=m, T=T, rows_total=m * T,
+               stream_s=t_stream, batch_refit_s=t_batch, speedup=speedup,
+               stream_per_chunk_s=t_stream / T,
+               batch_per_chunk_s=t_batch / T,
+               stream_iters_last=int(res_s.iters),
+               batch_iters_last=int(res_b.iters),
+               stream_status_last=res_s.status_name,
+               batch_status_last=res_b.status_name,
+               coef_maxdiff=maxdiff)
+    emit(f"stream_n{n}_m{m}_T{T}", t_stream,
+         f"{speedup:.1f}x vs batch refit (coef maxdiff {maxdiff:.1e})")
+    return row
+
+
+def main(full: bool = False, smoke: bool = False) -> None:
+    if smoke:
+        shapes = [(16, 32, 4)]
+    elif full:
+        shapes = [(128, 64, 32), (256, 128, 32), (512, 256, 32)]
+    else:
+        shapes = [(64, 64, 24), (128, 64, 32), (256, 128, 32)]
+
+    rows = [_bench_one(n, m, T) for n, m, T in shapes]
+    if not smoke:
+        payload = dict(config=CFG, device=jax.devices()[0].device_kind,
+                       backend=jax.default_backend(), rows=rows,
+                       note=(
+          "Both passes fully warmed: the gap is solver work only. The "
+          "batch side re-runs setup over all rows seen so far at every "
+          "chunk (O(T^2) total factor work) and solves cold; the stream "
+          "side folds each chunk with a rank-k Cholesky update (O(T) "
+          "total) and refits data-free from the warm state, so its "
+          "per-chunk cost stays flat as the stream grows. Early prefix "
+          "fits on the batch side may cap at max_iter — capping only "
+          "UNDERSTATES the batch cost, so the recorded speedup is a "
+          "lower bound. A warm batch refit would shrink the iteration "
+          "gap but still pays the growing Gram + factorization, which "
+          "dominates at scale."))
+        path = save_json("stream_bench.json", payload)
+        print(f"# wrote {path}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    main(full=args.full, smoke=args.smoke)

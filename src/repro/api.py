@@ -60,6 +60,7 @@ from .core.recovery import (RecoveryAttempt, RecoveryPolicy, SolveDiverged,
                             sanitize_state)
 from .core.results import FitResult, FleetResult, SolveStatus, SparsePath
 from .core.sharded import X_UPDATE_MODES, ShardedBiCADMM
+from .core.streaming import StreamingBiCADMM
 
 __all__ = [
     "CapabilityError",
@@ -79,6 +80,7 @@ __all__ = [
     "SparseProblem",
     "SparseSVM",
     "SparseSoftmaxRegression",
+    "StreamingSolver",
     "engine_capabilities",
     "fit_many",
     "recover",
@@ -88,6 +90,7 @@ __all__ = [
     "solve_grid",
     "solve_path",
     "split_legacy_config",
+    "stream",
     "validate_data",
 ]
 
@@ -291,6 +294,7 @@ class Capabilities:
     warm_start: bool = True    # resumable state / warm-started paths
     fleet: bool = False        # fit_many: vmapped batch of B problems
     serve: bool = False        # FittingService micro-batching (needs fleet)
+    stream: bool = False       # partial_fit: incremental setup-state updates
     # reduced-precision data dtypes the engine certifies (fp64-oracle
     # differential suite); "float32" (no cast) is always supported
     precisions: tuple = ("float32", "bfloat16", "float16")
@@ -308,7 +312,8 @@ def engine_capabilities(engine: str, options: SolverOptions | None = None
         return Capabilities(engine="reference", distributed=False,
                             dynamic_penalties=dyn, per_solve_overrides=True,
                             penalty_grids=dyn, grid_strategy="vmap",
-                            gather_free=False, fleet=dyn, serve=dyn)
+                            gather_free=False, fleet=dyn, serve=dyn,
+                            stream=dyn)
     if engine == "sharded":
         # fp16's narrow exponent underflows the psum'd ladder statistics on
         # badly scaled shards; only bf16 is certified for the sharded engine
@@ -387,6 +392,15 @@ def _check_serve(caps: Capabilities) -> None:
             "fitting service (Capabilities.serve=False): micro-batching "
             "dispatches through the vmapped fleet driver — use the "
             "reference engine with n_feature_blocks=1")
+
+
+def _check_stream(caps: Capabilities) -> None:
+    if not caps.stream:
+        raise CapabilityError(
+            f"the {caps.engine!r} engine (as configured) cannot stream "
+            "(Capabilities.stream=False): partial_fit maintains the "
+            "x-update factors incrementally, which needs the reference "
+            "engine with n_feature_blocks=1")
 
 
 # --------------------------------------------------------------------------
@@ -798,6 +812,104 @@ def serve(problem: SparseProblem, *, options: SolverOptions | None = None,
     return FittingService(problem, options, serve_options, **kw)
 
 
+# --------------------------------------------------------------------------
+# streaming — minibatch partial_fit over incrementally maintained factors
+# --------------------------------------------------------------------------
+class StreamingSolver:
+    """Stateful streaming front-end over :class:`~repro.core.streaming.
+    StreamingBiCADMM`: one growing (or sliding-window) dataset, fitted
+    chunk by chunk through :meth:`partial_fit`.
+
+    Each call absorbs the chunk into the regime's incremental accumulators
+    (rank-k Cholesky up/downdates — never a refactorization from data),
+    warm-starts the refit from the previous state, and returns a standard
+    :class:`FitResult`. ``window`` bounds the replay window in chunks
+    (``None`` = keep everything, ``0`` = keep no rows, dense regime only);
+    ``drift_tol`` tunes the support-drift re-projection probe.
+
+    With ``SolverOptions(recovery=...)``, a refit that stays DIVERGED
+    after the engine's own full-refactorization rung escalates through
+    the standard recovery ladder on the replay-window data.
+    """
+
+    name = "streaming"
+
+    def __init__(self, problem: SparseProblem,
+                 options: SolverOptions | None = None, *,
+                 window: int | None = None, drift_tol: float = 0.5):
+        options = options if options is not None else SolverOptions()
+        engine = "reference" if options.engine == "auto" else options.engine
+        self.caps = engine_capabilities(engine, options)
+        _check_stream(self.caps)
+        _check_precision(self.caps, options)
+        self.problem = problem
+        self.options = options
+        self.engine = StreamingBiCADMM(
+            problem.resolve_loss(), build_config(problem, options),
+            window=window, drift_tol=drift_tol)
+
+    @property
+    def result(self) -> FitResult | None:
+        """The latest refit's result (None before the first chunk)."""
+        return self.engine.result
+
+    @property
+    def m_seen(self) -> int:
+        """Total rows absorbed over the stream's lifetime."""
+        return self.engine.m_seen
+
+    @property
+    def mode(self) -> str | None:
+        """The resolved incremental regime (dense/woodbury/pcg/direct)."""
+        return self.engine.mode
+
+    def partial_fit(self, X, y, *, kappa=None, gamma=None,
+                    rho_c=None) -> FitResult:
+        """Absorb one ``(rows, n)`` chunk and refit warm-started.
+
+        Per-call ``kappa`` / ``gamma`` / ``rho_c`` override the problem for
+        this refit only (penalty overrides run the maintained-Gram eigh
+        fallback — still no recompute from data).
+        """
+        X, y = jnp.asarray(X), jnp.asarray(y)
+        if X.ndim != 2:
+            raise ValueError(f"streaming chunks must be (rows, n); "
+                             f"got shape {tuple(X.shape)}")
+        validate_data(X, y)
+        res = self.engine.partial_fit(X, y, kappa=kappa, gamma=gamma,
+                                      rho_c=rho_c)
+        if (self.options.recovery is not None and res.status is not None
+                and int(res.status) == int(SolveStatus.DIVERGED)
+                and self.engine._chunks):
+            A_win, y_win = self.engine._window_data()
+            res = _run_ladder(self.problem, self.options,
+                              A_win[None], y_win.reshape(1, -1),
+                              failed=res, policy=self.options.recovery,
+                              overrides=dict(kappa=kappa, gamma=gamma,
+                                             rho_c=rho_c))
+            self.engine.adopt(res)
+        return res
+
+
+def stream(problem: SparseProblem, *,
+           options: SolverOptions | None = None,
+           window: int | None = None,
+           drift_tol: float = 0.5) -> StreamingSolver:
+    """Open a :class:`StreamingSolver` for ``problem`` — the minibatch
+    entry point (``Capabilities.stream``).
+
+    >>> s = stream(SparseProblem(loss="squared", kappa=10, gamma=10.0))
+    >>> for X_t, y_t in chunks:
+    ...     res = s.partial_fit(X_t, y_t)     # incremental factor updates
+
+    Streaming is capability-negotiated: it maintains the x-update factors
+    across chunks, so the reference engine backs it and ``engine="sharded"``
+    (or the feature-split sub-solver) raises :class:`CapabilityError` here.
+    """
+    return StreamingSolver(problem, options, window=window,
+                           drift_tol=drift_tol)
+
+
 def solve_grid(problem: SparseProblem, X, y, kappas, *,
                options: SolverOptions | None = None, gammas=None,
                rho_cs=None) -> SparsePath:
@@ -843,6 +955,7 @@ class SparseEstimator:
             # explicit engine: build (and validate) it at construction
             self._adapter_named(self.options.engine)
         self.result_: FitResult | None = None
+        self._stream: StreamingSolver | None = None
 
     # -- engine negotiation --------------------------------------------------
     def _adapter_named(self, name: str):
@@ -873,7 +986,27 @@ class SparseEstimator:
                 and int(res.status) == int(SolveStatus.DIVERGED)):
             res = _run_ladder(self.problem, self.options, As, bs,
                               failed=res, policy=self.options.recovery)
+        self._stream = None       # a full fit resets any open stream
         self._set_fitted(adapter, res)
+        return self
+
+    def partial_fit(self, X, y, *, window: int | None = None
+                    ) -> "SparseEstimator":
+        """Absorb one ``(rows, n)`` chunk and refit incrementally.
+
+        The first call opens a :class:`StreamingSolver` (``window=``
+        bounds its replay window in chunks and is honored on that call
+        only); subsequent calls stream into it — rank-k factor updates
+        plus a warm-started refit, never a from-scratch factorization. A
+        later full :meth:`fit` resets the stream. Returns ``self``.
+        """
+        stream_ = getattr(self, "_stream", None)
+        if stream_ is None:
+            stream_ = StreamingSolver(self.problem, self.options,
+                                      window=window)
+            self._stream = stream_
+        res = stream_.partial_fit(X, y)
+        self._set_fitted(stream_, res)
         return self
 
     def fit_path(self, X, y, kappas, *, gammas=None, rho_cs=None,

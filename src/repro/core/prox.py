@@ -359,6 +359,107 @@ def x_solve(factors, q: Array, rho_c: Array | float, sigma: Array | float,
     raise TypeError(f"unknown x-update factor pytree {type(factors)!r}")
 
 
+# ------------------------------------------- incremental factor updates ----
+# The streaming engine (repro.core.streaming) maintains the squared-loss
+# factors under row arrival without refactorizing: appending k rows to the
+# data is a rank-k UPDATE of the n x n ridge factor (chol of A^T A + c I),
+# evicting rows from a sliding window is a rank-k DOWNDATE, and growing the
+# m x m Woodbury dual factor (chol of A A^T + c I) is a bordered APPEND.
+# All three are exact: the refreshed factor equals a from-scratch Cholesky
+# of the refreshed matrix up to fp round-off (tests/test_stream.py).
+
+
+def _chol_rank1(L: Array, v: Array, sign: float) -> tuple[Array, Array]:
+    """One rank-1 Cholesky update (sign=+1) or downdate (sign=-1) of the
+    lower factor ``L``: returns ``(L', ok)`` with L' L'^T = L L^T +- v v^T.
+
+    The LINPACK column recurrence (Givens rotations for the update,
+    hyperbolic rotations for the downdate), O(n^2) whole-column work per
+    column under ``lax.fori_loop`` — no O(n^3) refactorization. A downdate
+    of energy the factor does not hold drives a pivot non-positive;
+    ``ok`` goes False and the caller must refactorize (the matrix is no
+    longer numerically positive definite along that direction).
+    """
+    n = L.shape[0]
+    idx = jnp.arange(n)
+    tiny = jnp.asarray(jnp.finfo(L.dtype).tiny, L.dtype)
+
+    def body(j, carry):
+        L, v, ok = carry
+        Ljj = L[j, j]
+        vj = v[j]
+        r2 = Ljj * Ljj + sign * vj * vj
+        ok = ok & (r2 > 0) & (Ljj > 0)
+        r = jnp.sqrt(jnp.maximum(r2, tiny))
+        c = r / jnp.maximum(Ljj, tiny)
+        s = vj / jnp.maximum(Ljj, tiny)
+        below = idx > j
+        col = jnp.where(below, (L[:, j] + sign * s * v) / c, L[:, j])
+        col = col.at[j].set(r)
+        v = jnp.where(below, c * v - s * col, v)
+        return L.at[:, j].set(col), v, ok
+
+    L, _, ok = jax.lax.fori_loop(0, n, body,
+                                 (L, v, jnp.asarray(True)))
+    return L, ok
+
+
+def _as_rank_k(V: Array) -> Array:
+    return V if V.ndim == 2 else V[:, None]
+
+
+def chol_update(L: Array, V: Array) -> Array:
+    """Rank-k update of a lower Cholesky factor: the factor of
+    ``L L^T + V V^T`` for ``V`` of shape (n, k) (or (n,) for rank one).
+
+    Appending k data rows ``X_t`` to a dataset turns the ridge factor
+    ``chol(A^T A + c I)`` into ``chol_update(L, X_t.T)`` — O(k n^2)
+    against the O(m n^2 + n^3) from-scratch setup. An update cannot fail
+    (the matrix only gains energy), so no status is returned."""
+    def one(L, v):
+        L, _ = _chol_rank1(L, v, 1.0)
+        return L, None
+    L, _ = jax.lax.scan(one, L, _as_rank_k(V).T)
+    return L
+
+
+def chol_downdate(L: Array, V: Array) -> tuple[Array, Array]:
+    """Rank-k downdate: ``(L', ok)`` with L' L'^T = L L^T - V V^T.
+
+    Evicting k rows from a sliding data window downdates the ridge factor
+    by ``X_evicted.T``. Unlike the update this can fail: removing energy
+    the (rounded) factor does not hold drives a pivot non-positive.
+    ``ok`` is a scalar bool — on False the returned factor is garbage and
+    the caller must refactorize from the raw accumulators (the streaming
+    engine's full-refactorization recovery rung)."""
+    def one(carry, v):
+        L, ok = carry
+        L, ok1 = _chol_rank1(L, v, -1.0)
+        return (L, ok & ok1), None
+    (L, ok), _ = jax.lax.scan(one, (L, jnp.asarray(True)),
+                              _as_rank_k(V).T)
+    return L, ok
+
+
+def chol_append(L: Array, M12: Array, M22: Array) -> Array:
+    """Bordered extension: the (p+q, p+q) lower factor of
+    ``[[M11, M12], [M12^T, M22]]`` given ``L = chol(M11)``.
+
+    This is how the m x m Woodbury dual factor grows when k new rows
+    arrive: M12 = A_window @ X_t^T, M22 = X_t X_t^T + c I. Cost is one
+    (p, q) triangular solve plus a q x q factorization — O(p^2 q + q^3)
+    instead of the O(p^3) refactorization. Evicting the window's LEADING
+    p rows is the reverse move and needs no new primitive: drop the
+    leading block and ``chol_update(L22, L21)`` (since
+    M22 = L21 L21^T + L22 L22^T)."""
+    L21 = jax.scipy.linalg.solve_triangular(L, M12, lower=True).T
+    L22 = jnp.linalg.cholesky(M22 - L21 @ L21.T)
+    p, q = L.shape[0], M22.shape[0]
+    top = jnp.concatenate([L, jnp.zeros((p, q), L.dtype)], axis=1)
+    bot = jnp.concatenate([L21, L22], axis=1)
+    return jnp.concatenate([top, bot], axis=0)
+
+
 # --------------------------------------------------------- newton-cg ----
 def _cg(matvec: Callable[[Array], Array], rhs: Array, iters: int,
         tol: float = 1e-10) -> Array:

@@ -67,9 +67,15 @@ class RecoveryPolicy:
 
 
 class RecoveryAttempt(NamedTuple):
-    """One recovery-ladder rung, as logged in ``FitResult.recovery``."""
+    """One recovery-ladder rung, as logged in ``FitResult.recovery``.
+
+    ``stage="refactorize"`` is the streaming engine's rung
+    (:mod:`repro.core.streaming`): a failed Cholesky downdate, a
+    non-finite accumulator, or a post-divergence rebuild triggered a full
+    refactorization from the replay window."""
 
     stage: str    # "retry" | "rho_restart" | "precision" | "x_solver"
+                  # | "refactorize"
     detail: str   # the knob change, e.g. "rho_c=10" or "fp32"
     status: int   # SolveStatus code the attempt ended with
     iters: int    # outer iterations the attempt spent

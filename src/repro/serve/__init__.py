@@ -10,7 +10,10 @@ names. Four pieces, one per module:
   bounded-staleness close policy, compile-shape quantization, and the
   per-batch fleet dispatch.
 * :mod:`repro.serve.store`   — the warm pool: per-client resumable ADMM
-  state with LRU eviction, so returning clients refit warm.
+  state with LRU eviction, so returning clients refit warm. Update-path
+  clients also keep their :class:`~repro.core.streaming.StreamingBiCADMM`
+  stream here (``FittingService.update`` appends rows and refits
+  incrementally; see ``docs/serving.md``, "Online updates").
 * :mod:`repro.serve.metrics` — counters and latency percentiles, with the
   operator glossary that ``docs/serving.md`` renders.
 
@@ -27,7 +30,8 @@ load-shed behavior surfaced by :class:`ServiceOverloaded`,
 from ..core.recovery import RecoveryPolicy, SolveDiverged
 from .batcher import (DeadlineExceeded, DriverCache, FitRequest,
                       IterRateEstimator, MicroBatcher, ServeResult,
-                      Signature, next_pow2, solve_batch)
+                      Signature, next_pow2, solve_batch,
+                      solve_update_batch)
 from .metrics import GLOSSARY, LatencyRecorder, ServeMetrics
 from .plane import (FittingService, ServeOptions, ServiceOverloaded,
                     ServiceStopped, UnknownClient)
@@ -56,4 +60,5 @@ __all__ = [
     "next_pow2",
     "pytree_nbytes",
     "solve_batch",
+    "solve_update_batch",
 ]

@@ -36,9 +36,13 @@ import jax
 import jax.numpy as jnp
 
 from .. import runtime
-from ..core.fleet import (_pad_loss_unit, stack_states, zero_lane_state)
-from ..core.recovery import SolveDiverged
+from ..core import prox
+from ..core.bicadmm import SolveParams, reset_for_resume
+from ..core.fleet import (_pad_loss_unit, reset_fleet_for_resume,
+                          stack_states, zero_lane_state)
+from ..core.recovery import RecoveryAttempt, SolveDiverged, sanitize_state
 from ..core.results import FitResult, SolveStatus
+from ..core.streaming import StreamingBiCADMM
 from .metrics import ServeMetrics
 from .store import WarmEntry, WarmPool
 
@@ -95,6 +99,8 @@ class FitRequest:
     deadline: float | None = None   # absolute monotonic seconds
     submitted_at: float = 0.0
     dispatched_at: float = 0.0
+    update: bool = False            # streaming update (appends rows to the
+                                    # client's warm-pool stream) vs full fit
 
     def alive(self) -> bool:
         """False once the caller cancelled the future (the batcher then
@@ -115,19 +121,28 @@ class ServeResult(NamedTuple):
     solve_s: float          # batch solve wall time (shared by the batch)
     status: Any = None      # SolveStatus code of the lane (int)
     recovery: Any = None    # RecoveryAttempt log when the lane was retried
+    streamed: bool = False  # lane ran the incremental update path
+    m_window: int = 0       # rows inside the stream's replay window (0 when
+                            # not streamed)
 
 
 class PendingBatch:
-    """The open (not yet closed) batch of one signature."""
+    """The open (not yet closed) batch of one signature. Update requests
+    and plain fits never share a batch (``update`` is part of the pending
+    key): an update batch dispatches through the factor-stacked streaming
+    path, a plain batch through the data-stacked fleet driver."""
 
-    def __init__(self, signature: Signature, opened_at: float):
+    def __init__(self, signature: Signature, opened_at: float,
+                 update: bool = False):
         self.signature = signature
         self.opened_at = opened_at
+        self.update = update
         self.requests: list[FitRequest] = []
 
 
 class MicroBatcher:
-    """Accumulate requests per signature; close on size or age.
+    """Accumulate requests per ``(signature, update)``; close on size or
+    age.
 
     The batcher is clock-explicit (``now`` flows in from the plane's event
     loop) so the close policy is deterministic under test."""
@@ -137,7 +152,7 @@ class MicroBatcher:
             raise ValueError("max_batch must be >= 1")
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
-        self._pending: dict[Signature, PendingBatch] = {}
+        self._pending: dict[tuple, PendingBatch] = {}
 
     # -- state ---------------------------------------------------------------
     @property
@@ -149,13 +164,14 @@ class MicroBatcher:
     def add(self, req: FitRequest, now: float) -> PendingBatch | None:
         """Queue ``req``; returns the closed batch when this request
         filled it to ``max_batch``, else None."""
-        batch = self._pending.get(req.signature)
+        key = (req.signature, req.update)
+        batch = self._pending.get(key)
         if batch is None:
-            batch = PendingBatch(req.signature, now)
-            self._pending[req.signature] = batch
+            batch = PendingBatch(req.signature, now, update=req.update)
+            self._pending[key] = batch
         batch.requests.append(req)
         if len(batch.requests) >= self.max_batch:
-            del self._pending[req.signature]
+            del self._pending[key]
             return batch
         return None
 
@@ -163,11 +179,11 @@ class MicroBatcher:
         """Close and return every batch open longer than ``max_wait_s``
         (the bounded-staleness close)."""
         out = []
-        for sig in list(self._pending):
-            batch = self._pending[sig]
+        for key in list(self._pending):
+            batch = self._pending[key]
             if now - batch.opened_at >= self.max_wait_s:
                 out.append(batch)
-                del self._pending[sig]
+                del self._pending[key]
         return out
 
     def flush(self) -> list[PendingBatch]:
@@ -181,8 +197,8 @@ class MicroBatcher:
         (they get a clean DeadlineExceeded, never a solve); empty batches
         left behind are dropped."""
         expired = []
-        for sig in list(self._pending):
-            batch = self._pending[sig]
+        for key in list(self._pending):
+            batch = self._pending[key]
             keep = []
             for r in batch.requests:
                 if r.deadline is not None and now >= r.deadline:
@@ -191,7 +207,7 @@ class MicroBatcher:
                     keep.append(r)
             batch.requests = keep
             if not keep:
-                del self._pending[sig]
+                del self._pending[key]
         return expired
 
     def next_event(self, now: float) -> float | None:
@@ -275,13 +291,18 @@ class DriverCache:
 class IterRateEstimator:
     """Per-signature EWMA of the observed solve rate (iterations/second).
 
-    Every dispatched batch yields one sample — the slowest real lane's
-    iteration count over the batch's solve wall time (lanes run in
-    lockstep, so the slowest lane sets the wall time). The EWMA smooths
-    compile-first-batch spikes; a signature reports no rate until it has
-    ``min_samples`` observations, during which the service falls back to
-    the operator-supplied ``deadline_iter_rate`` (or no capping at all).
-    Plain Python, written only from the solver thread."""
+    Every dispatched *full-solve* batch yields one sample — the slowest
+    real lane's iteration count over the batch's solve wall time (lanes
+    run in lockstep, so the slowest lane sets the wall time). Batches
+    whose lanes were all warm-started (and streaming update batches) are
+    tagged ``full_solve=False`` and skipped: their few-iteration refits
+    measure resume cost, not the cold-solve rate the deadline caps need —
+    folding them in would inflate the rate and over-promise iteration
+    budgets. The EWMA smooths compile-first-batch spikes; a signature
+    reports no rate until it has ``min_samples`` observations, during
+    which the service falls back to the operator-supplied
+    ``deadline_iter_rate`` (or no capping at all). Plain Python, written
+    only from the solver thread."""
 
     def __init__(self, alpha: float = 0.3, min_samples: int = 3):
         if not 0.0 < alpha <= 1.0:
@@ -293,8 +314,13 @@ class IterRateEstimator:
         self._ewma: dict[Signature, float] = {}
         self._count: dict[Signature, int] = {}
 
-    def observe(self, sig: Signature, iters: int, solve_s: float) -> None:
-        """Fold one batch's (iterations, wall seconds) into the EWMA."""
+    def observe(self, sig: Signature, iters: int, solve_s: float,
+                full_solve: bool = True) -> None:
+        """Fold one batch's (iterations, wall seconds) into the EWMA.
+        ``full_solve=False`` marks an all-warm (or streaming-update)
+        batch; such samples are dropped, not folded."""
+        if not full_solve:
+            return                      # resume-cost sample, not a rate
         if iters <= 0 or solve_s <= 0.0:
             return                      # cap-0 or clock-degenerate batch
         sample = iters / solve_s
@@ -441,8 +467,10 @@ def solve_batch(batch: PendingBatch, drivers: DriverCache, pool: WarmPool,
     solve_s = clock() - t0
     metrics.solve_s.record(solve_s)
     if rate_estimator is not None:
+        # an all-warm batch measures resume cost, not the cold-solve rate
         rate_estimator.observe(
-            sig, max(int(fleet.iters[i]) for i in range(B_real)), solve_s)
+            sig, max(int(fleet.iters[i]) for i in range(B_real)), solve_s,
+            full_solve=not all(warm))
     metrics.bump("batches")
     metrics.bump("batch_lanes", B_real)
     metrics.bump("pad_lanes", B_pad - B_real)
@@ -497,12 +525,204 @@ def solve_batch(batch: PendingBatch, drivers: DriverCache, pool: WarmPool,
         if aborted:
             metrics.bump("deadline_aborted")
         if r.client_id is not None:
+            # a full fit refreshes the model but neither feeds nor drops
+            # the client's update stream (which holds exactly the rows
+            # sent through the update path) — carry it over
+            prev = pool.peek((r.client_id, sig))
             pool.put((r.client_id, sig),
                      WarmEntry(state=lane.state, coef=lane.coef,
-                               support=lane.support))
+                               support=lane.support,
+                               stream=prev.stream if prev is not None
+                               else None))
         outcomes.append((r, ServeResult(
             result=lane, train_loss=train_loss, warm=warm[i],
             deadline_aborted=aborted, batch_lanes=B_real, signature=sig,
             queue_s=t0 - r.submitted_at, solve_s=solve_s,
             status=status, recovery=lane_recovery)))
+    return outcomes
+
+
+# --------------------------------------------------------------------------
+# the streaming update path
+# --------------------------------------------------------------------------
+def _update_run_impl(solver, As, bs, params, factors, st0, iter_caps):
+    """The update batch's fleet dispatch: the masked batched while-loop
+    over pre-stacked incremental factors and EMPTY data (the dense-regime
+    x-update reads only ``chol``/``Atb``; zero-row ``As`` keeps the step's
+    data terms inert). Module-level jit: the compile cache persists across
+    batches, keyed on solver instance + shapes, like ``_fleet_run``."""
+    return solver._run_while_fleet(factors, As, bs, params, st0, iter_caps)
+
+
+_update_run = jax.jit(_update_run_impl, static_argnums=(0,),
+                      donate_argnums=(5,))
+
+
+def solve_update_batch(batch: PendingBatch, drivers: DriverCache,
+                       pool: WarmPool, metrics: ServeMetrics, *,
+                       stream_window: int | None = None,
+                       pad_shapes: bool = True,
+                       clock=time.monotonic) -> list[tuple[FitRequest, Any]]:
+    """Solve one closed batch of streaming *update* requests: each lane
+    appends its rows to the client's warm-pool stream
+    (:class:`~repro.core.streaming.StreamingBiCADMM`), then every lane's
+    incrementally maintained dense factors are stacked into ONE fleet
+    while-loop dispatch on empty data — no lane ever re-factorizes, which
+    is the entire point of the streaming subsystem.
+
+    Runs on the service's solver thread. Per lane: fetch (or cold-start)
+    the client's stream, ``absorb`` the chunk (rank-k Cholesky update +
+    accumulator folds; a failed downdate or non-finite accumulator routes
+    through the full-refactorization recovery rung and is counted as
+    ``stream_refactorizations``), stack ``solo_factors()`` / warm states
+    across lanes, dispatch, then finalize each lane data-free from its
+    maintained Gram (``finalize_dense``) and refresh the pool entry —
+    state, coefficients, support, and the stream itself, all inside the
+    pool's byte ceiling.
+
+    A lane whose refit ends DIVERGED is retried once off-batch through the
+    refactorize rung (accumulators rebuilt from the replay window, state
+    sanitized); a lane still diverged after that fails with
+    :class:`~repro.core.recovery.SolveDiverged`. Update batches never feed
+    the :class:`IterRateEstimator` — they are warm incremental refits, not
+    full solves."""
+    now = clock()
+    sig = batch.signature
+    live, outcomes = [], []
+    for r in batch.requests:
+        if not r.alive():
+            metrics.bump("cancelled")
+        elif r.deadline is not None and now >= r.deadline:
+            metrics.bump("expired")
+            outcomes.append((r, DeadlineExceeded(
+                f"deadline passed {now - r.deadline:.3f}s before the "
+                f"batch closed")))
+        else:
+            live.append(r)
+    if not live:
+        return outcomes
+
+    adapter = drivers.adapter(sig)
+    solver = adapter.solver
+    cfg = solver.cfg
+    dt = cfg.precision.data_dtype(jnp.asarray(live[0].X).dtype)
+    sdt = cfg.precision.state_dtype(dt)
+    n = sig.n
+
+    # per-lane absorb: fold each chunk into its client's stream (admission
+    # already guaranteed 2-D chunks, squared loss, dense-regime n)
+    lanes = []          # (request, engine, was_warm, rung_reasons)
+    for r in live:
+        key = (r.client_id, sig)
+        entry = pool.get(key)
+        engine = entry.stream if entry is not None else None
+        if engine is None:
+            engine = StreamingBiCADMM(solver.loss, cfg,
+                                      n_classes=sig.n_classes,
+                                      window=stream_window, solver=solver)
+            if entry is not None:
+                # previous plain fits seed the warm state; the stream's
+                # data starts from this chunk
+                engine.seed_state(entry.state)
+        try:
+            rungs = engine.absorb(r.X, r.y)
+        except (SolveDiverged, ValueError) as exc:
+            metrics.bump("failed_lanes")
+            outcomes.append((r, exc))
+            continue
+        if engine.mode != "dense":
+            # x_solver override forced a non-dense regime past the n-gate
+            metrics.bump("failed_lanes")
+            outcomes.append((r, ValueError(
+                f"the update path requires the dense x-update regime; "
+                f"this stream resolved to {engine.mode!r} "
+                f"(x_solver={cfg.x_solver!r})")))
+            continue
+        if rungs:
+            metrics.bump("stream_refactorizations", len(rungs))
+        lanes.append((r, engine, entry is not None, rungs))
+    if not lanes:
+        return outcomes
+
+    # stack the maintained factors + warm states into one fleet dispatch
+    B_real = len(lanes)
+    B_pad = next_pow2(B_real) if pad_shapes else B_real
+    pad = B_pad - B_real
+    facs = [eng.solo_factors(False) for _, eng, _, _ in lanes]
+    c = facs[0].c
+    fdt = facs[0].chol.dtype
+    pad_chol = jnp.sqrt(jnp.asarray(c, fdt)) * jnp.eye(n, dtype=fdt)
+    chol = jnp.stack([f.chol for f in facs]
+                     + [pad_chol] * pad)[:, None]        # (B, N=1, n, n)
+    Atb = jnp.stack([f.Atb for f in facs]
+                    + [jnp.zeros((n,), fdt)] * pad)[:, None]
+    factors = prox.RidgeFactors(chol, Atb, c)
+
+    kap_default = drivers._problem.kappa
+    kaps = jnp.asarray([r.kappa if r.kappa is not None else kap_default
+                        for r, _, _, _ in lanes] + [kap_default] * pad)
+    params = SolveParams(
+        kappa=kaps,
+        rho_c=jnp.full((B_pad,), cfg.rho_c, sdt),
+        rho_b=jnp.full((B_pad,), cfg.rho_b_eff, sdt),
+        sigma=jnp.full((B_pad,), 1.0 / cfg.gamma, sdt))
+    states = stack_states([eng.warm_state() for _, eng, _, _ in lanes]
+                          + [zero_lane_state(solver, 1, n, sdt)] * pad)
+    st0 = reset_fleet_for_resume(states)
+    iter_caps = jnp.asarray([cfg.max_iter] * B_real + [0] * pad, jnp.int32)
+    As = jnp.zeros((B_pad, 1, 0, n), dt)
+    bs = jnp.zeros((B_pad, 1, 0), dt)
+
+    drivers.note_dispatch((sig, B_pad, "update", drivers.precision))
+    t0 = clock()
+    st = _update_run(solver, As, bs, params, factors, st0, iter_caps)
+    jax.block_until_ready(st.z)
+    solve_s = clock() - t0
+    metrics.solve_s.record(solve_s)
+    metrics.bump("batches")
+    metrics.bump("batch_lanes", B_real)
+    metrics.bump("update_lanes", B_real)
+    metrics.bump("pad_lanes", pad)
+
+    diverged_code = int(SolveStatus.DIVERGED)
+    for i, (r, engine, was_warm, rungs) in enumerate(lanes):
+        lane_st = jax.tree.map(lambda a, _i=i: a[_i], st)
+        params_i = SolveParams(kappa=int(kaps[i]), rho_c=float(cfg.rho_c),
+                               rho_b=float(cfg.rho_b_eff),
+                               sigma=1.0 / cfg.gamma)
+        res = engine.finalize_dense(lane_st, params_i)
+        if int(res.status) == diverged_code:
+            # quarantine + the refactorize rung: rebuild the accumulators
+            # from the replay window, sanitize the state, re-solve solo
+            metrics.bump("diverged_lanes")
+            rungs = rungs + ["post-divergence rebuild"]
+            engine.refactorizations += 1
+            engine._rebuild()
+            metrics.bump("stream_refactorizations")
+            res = engine._refit(
+                sanitize_state(reset_for_resume(res.state)),
+                kappa=r.kappa, gamma=None, rho_c=None, dyn=False)
+            if int(res.status) != diverged_code:
+                metrics.bump("recovered_lanes")
+            else:
+                metrics.bump("failed_lanes")
+                outcomes.append((r, SolveDiverged(
+                    f"streamed lane diverged and the refactorize rung "
+                    f"could not bring it back (client {r.client_id!r})",
+                    result=res)))
+                continue
+        if rungs:
+            att = tuple(RecoveryAttempt("refactorize", why, int(res.status),
+                                        int(res.iters)) for why in rungs)
+            res = res._replace(recovery=(res.recovery or ()) + att)
+        engine.adopt(res)
+        pool.put((r.client_id, sig),
+                 WarmEntry(state=res.state, coef=res.coef,
+                           support=res.support, stream=engine))
+        outcomes.append((r, ServeResult(
+            result=res, train_loss=engine.train_loss(res.coef),
+            warm=was_warm, deadline_aborted=False, batch_lanes=B_real,
+            signature=sig, queue_s=t0 - r.submitted_at, solve_s=solve_s,
+            status=int(res.status), recovery=res.recovery, streamed=True,
+            m_window=engine.m_window)))
     return outcomes

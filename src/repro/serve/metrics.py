@@ -49,6 +49,13 @@ GLOSSARY = {
                     "lanes (rungs tried, not lanes)",
     "solver_errors": "solver-thread batch dispatches that raised; the "
                      "batch's requests fail, the loop survives",
+    "updates": "streaming update requests submitted (rows appended to a "
+               "client's warm-pool stream, refit incrementally)",
+    "update_lanes": "real lanes across all dispatched update batches",
+    "stream_refactorizations": "streaming-lane full refactorizations: a "
+                               "failed downdate or non-finite accumulator "
+                               "rebuilt from the replay window (the "
+                               "recovery rung)",
     "latency_s": "request wall time, submit to future resolution",
     "queue_s": "request wall time spent pending in the micro-batcher",
     "solve_s": "batch wall time inside the fleet driver (per batch)",
@@ -107,7 +114,8 @@ class ServeMetrics:
                 "batches", "batch_lanes", "pad_lanes", "warm_hits",
                 "warm_misses", "evictions", "driver_hits", "driver_compiles",
                 "diverged_lanes", "recovered_lanes", "failed_lanes",
-                "lane_retries", "solver_errors")
+                "lane_retries", "solver_errors", "updates", "update_lanes",
+                "stream_refactorizations")
 
     def __init__(self) -> None:
         for name in self.COUNTERS:

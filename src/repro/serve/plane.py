@@ -36,6 +36,13 @@ previous ADMM state is stacked into the batch from the
 :class:`~repro.serve.store.WarmPool` (LRU-bounded), so a returning
 client's refit resumes instead of cold-starting; ``ServeResult.warm``
 reports which happened.
+
+Online updates: ``submit_update`` / ``update`` append rows to a client's
+warm-pool *stream* (:class:`~repro.core.streaming.StreamingBiCADMM`) and
+resolve with refreshed coefficients. Update requests ride the same
+micro-batcher (batched separately from plain fits) but dispatch through
+the factor-stacked streaming path: every lane's x-update factors are
+maintained by rank-k Cholesky updates, so no lane ever re-factorizes.
 """
 from __future__ import annotations
 
@@ -46,10 +53,11 @@ from concurrent.futures import ThreadPoolExecutor
 
 import jax.numpy as jnp
 
+from ..core.prox import DENSE_MAX_N
 from ..core.recovery import RecoveryPolicy
 from .batcher import (DeadlineExceeded, DriverCache, FitRequest,
                       IterRateEstimator, MicroBatcher, ServeResult,
-                      Signature, solve_batch)
+                      Signature, solve_batch, solve_update_batch)
 from .metrics import ServeMetrics
 from .store import WarmPool
 
@@ -105,7 +113,16 @@ class ServeOptions:
     ``breaker_threshold`` lanes (a systemic blow-up, not a stray bad
     problem), admission is refused for ``breaker_cooldown_s`` seconds
     rather than feeding more work to a diverging configuration
-    (``breaker_threshold=None`` disables the breaker)."""
+    (``breaker_threshold=None`` disables the breaker).
+
+    ``stream_window`` bounds each client's update-path replay window in
+    *chunks* (see :class:`~repro.core.streaming.StreamingBiCADMM`): None
+    keeps every updated row resident (exact append semantics; memory is
+    bounded by ``warm_pool_bytes`` — streamed entries count their factor
+    and window bytes), an int ``w >= 1`` fits a sliding window of the
+    last ``w`` update chunks, and ``0`` keeps no replay rows (minimum
+    memory, but the refactorize recovery rung then rebuilds from an empty
+    window)."""
     max_batch: int = 32
     max_wait_s: float = 0.005
     warm_pool_entries: int = 512
@@ -119,6 +136,7 @@ class ServeOptions:
     max_pending: int | None = None
     breaker_threshold: int | None = 8
     breaker_cooldown_s: float = 1.0
+    stream_window: int | None = None
 
 
 class FittingService:
@@ -289,6 +307,100 @@ class FittingService:
         """Submit one fit request and await its result."""
         return await self.submit_fit(X, y, **kw)
 
+    def submit_update(self, X, y, *, client_id, kappa=None,
+                      deadline=None) -> asyncio.Future:
+        """Admit one streaming *update* request: append the rows
+        ``X (rows, n)`` / ``y (rows,)`` to ``client_id``'s warm-pool
+        stream and refit incrementally — the lane rides an update
+        micro-batch whose x-update factors are rank-k Cholesky updates,
+        never a re-factorization (see
+        :class:`~repro.core.streaming.StreamingBiCADMM`). Resolves to a
+        :class:`~repro.serve.batcher.ServeResult` with ``streamed=True``
+        and the refreshed coefficients.
+
+        The update path is gated: squared loss only (the incremental
+        factors are the ridge normal equations), the dense x-update regime
+        only (``n <= DENSE_MAX_N``; the per-client n x n factors must be
+        poolable), single-node chunks only (2-D ``X``), and a
+        ``client_id`` is required — the stream lives in that client's pool
+        entry. A client's stream holds exactly the rows sent through this
+        path: a cold update starts the stream from this chunk
+        (warm-starting from any previous full fit's state), and a full
+        ``fit`` refreshes the model without feeding or dropping the
+        stream. Per-request ``gamma`` / ``rho_c`` overrides are not
+        supported here (the penalty shift is baked into the maintained
+        factor); ``kappa`` rides the per-lane vector as usual."""
+        self.metrics.bump("requests")
+        loop = asyncio.get_running_loop()
+        future = loop.create_future()
+        now = self._clock()
+        if not self._running:
+            self.metrics.bump("rejected")
+            future.set_exception(ServiceStopped("service is not running"))
+            return future
+        try:
+            Xa, ya = jnp.asarray(X), jnp.asarray(y)
+            if Xa.ndim != 2:
+                raise ValueError(
+                    f"update chunks must be 2-D (rows, n) — streams are "
+                    f"single-node; got shape {Xa.shape}")
+            self._api.validate_data(Xa, ya)
+            if kappa is not None and int(kappa) < 1:
+                raise ValueError(f"kappa must be >= 1; got {kappa!r}")
+            loss_name = self.problem.resolve_loss().name
+            if loss_name != "squared":
+                raise ValueError(
+                    f"the update path maintains squared-loss (ridge) "
+                    f"factors incrementally; loss {loss_name!r} must use "
+                    f"full fits")
+            if Xa.shape[1] > DENSE_MAX_N:
+                raise ValueError(
+                    f"the update path is dense-regime only "
+                    f"(n <= {DENSE_MAX_N}); got n={Xa.shape[1]}")
+            if client_id is None:
+                raise ValueError(
+                    "update requests need a client_id: the appended rows "
+                    "live in that client's warm-pool stream")
+        except ValueError as exc:
+            self.metrics.bump("rejected")
+            future.set_exception(exc)
+            return future
+        if deadline is not None and deadline <= 0:
+            self.metrics.bump("rejected")
+            future.set_exception(DeadlineExceeded(
+                f"deadline {deadline!r}s is already in the past"))
+            return future
+        so = self.serve_options
+        if (self._breaker_open_until is not None
+                and now < self._breaker_open_until):
+            self.metrics.bump("rejected_overload")
+            future.set_exception(ServiceOverloaded(
+                "divergence circuit breaker is open for another "
+                f"{self._breaker_open_until - now:.3f}s"))
+            return future
+        backlog = self._batcher.pending_requests + self._queue.qsize()
+        if so.max_pending is not None and backlog >= so.max_pending:
+            self.metrics.bump("rejected_overload")
+            future.set_exception(ServiceOverloaded(
+                f"{backlog} requests already pending (max_pending="
+                f"{so.max_pending}); shedding load"))
+            return future
+        req = FitRequest(
+            X=Xa, y=ya,
+            signature=Signature(N=1, n=int(Xa.shape[1]), loss="squared",
+                                n_classes=1),
+            future=future, kappa=kappa, client_id=client_id,
+            deadline=None if deadline is None else now + deadline,
+            submitted_at=now, update=True)
+        self.metrics.bump("admitted")
+        self.metrics.bump("updates")
+        self._queue.put_nowait(req)
+        return future
+
+    async def update(self, X, y, **kw) -> ServeResult:
+        """Submit one streaming update request and await its result."""
+        return await self.submit_update(X, y, **kw)
+
     async def predict(self, X, *, client_id, loss=None):
         """Predict from the client's last fitted model in the warm pool
         (no solver work, not batched); raises :class:`UnknownClient` (a
@@ -390,7 +502,14 @@ class FittingService:
                     req.future.set_result(out)
 
     def _solve(self, batch):
-        """Runs on the solver thread: one fleet-driver call per batch."""
+        """Runs on the solver thread: one fleet-driver call per batch
+        (the factor-stacked streaming dispatch for update batches)."""
+        if batch.update:
+            return solve_update_batch(
+                batch, self.drivers, self.pool, self.metrics,
+                stream_window=self.serve_options.stream_window,
+                pad_shapes=self.serve_options.pad_shapes,
+                clock=self._clock)
         return solve_batch(
             batch, self.drivers, self.pool, self.metrics,
             iter_rate=self.serve_options.deadline_iter_rate,

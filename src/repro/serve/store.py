@@ -40,12 +40,20 @@ class WarmEntry:
     state: Any          # solo-shaped BiCADMMState (warm-start iterates)
     coef: Any           # (n, K) last fitted coefficients (serves predict)
     support: Any        # (n*K,) bool support mask of the last fit
-    nbytes: int = 0     # state + coef bytes, for the pool's byte ceiling
+    nbytes: int = 0     # all per-entry device bytes (byte-ceiling account)
     fits: int = 0       # how many times this client has been fitted
+    stream: Any = None  # StreamingBiCADMM for clients on the update path
 
     def __post_init__(self):
         if self.nbytes == 0:
-            self.nbytes = pytree_nbytes((self.state, self.coef))
+            # Everything the entry pins on-device counts toward the pool's
+            # byte ceiling: iterate state, coefficients, support mask, AND
+            # the streaming engine's factor/accumulator buffers + replay
+            # window — streamed entries must not evade the cap.
+            self.nbytes = pytree_nbytes((self.state, self.coef,
+                                         self.support))
+            if self.stream is not None:
+                self.nbytes += int(self.stream.nbytes)
 
 
 class WarmPool:

@@ -1,0 +1,45 @@
+"""repro.stream — the streaming solve subsystem, one import surface.
+
+Minibatch Bi-cADMM: feed data in row chunks through ``partial_fit`` and
+the engine maintains the (7a) x-update factors *incrementally* — rank-k
+Cholesky up/downdates of the dense or Woodbury factor, accumulated
+``A^T b`` / preconditioner diagonals in the precision policy's
+accumulation dtype, a bounded replay window with row eviction for
+sliding-window fits, and warm-started refits guarded by a support-drift
+probe. See :mod:`repro.core.streaming` for the per-regime update algebra
+and ``docs/serving.md`` for the online-update serving runbook.
+
+Three entry levels, lowest to highest:
+
+* :func:`chol_update` / :func:`chol_downdate` / :func:`chol_append` — the
+  incremental Cholesky primitives (exact to factor-recompute parity,
+  certified in ``tests/test_stream.py``).
+* :class:`StreamingBiCADMM` — the core engine
+  (:meth:`~StreamingBiCADMM.partial_fit` on raw chunk arrays).
+* :func:`stream` / :class:`StreamingSolver` — the capability-negotiated
+  API front-end (``Capabilities.stream``); estimators expose the same
+  path as ``model.partial_fit(X_t, y_t)``, and the serving plane as the
+  ``update`` request type.
+
+>>> from repro.stream import stream
+>>> from repro.api import SparseProblem
+>>> s = stream(SparseProblem(loss="squared", kappa=10, gamma=10.0))
+>>> for X_t, y_t in chunks:
+...     res = s.partial_fit(X_t, y_t)
+"""
+from .api import StreamingSolver, stream
+from .core.prox import chol_append, chol_downdate, chol_update
+from .core.streaming import (CGStreamAccum, DenseStreamAccum,
+                             StreamingBiCADMM, WoodburyStreamAccum)
+
+__all__ = [
+    "CGStreamAccum",
+    "DenseStreamAccum",
+    "StreamingBiCADMM",
+    "StreamingSolver",
+    "WoodburyStreamAccum",
+    "chol_append",
+    "chol_downdate",
+    "chol_update",
+    "stream",
+]

@@ -18,9 +18,14 @@ The contract under test, layer by layer:
   stays up and the counters add up;
 * **honesty on hostile inputs** — denormals, zero-variance columns,
   kappa >= n: a result is never CONVERGED with non-finite coefficients
-  (property-tested when hypothesis is installed).
+  (property-tested when hypothesis is installed);
+* **streaming updates recover** — a non-finite accumulator poisoning a
+  warm-pool stream routes the next update through the full
+  -refactorization rung (rebuilt from the replay window, logged,
+  converged); a poisoned chunk fails closed without entering the pool.
 """
 import asyncio
+import dataclasses
 import sys
 from concurrent.futures import Future as ThreadFuture
 
@@ -40,7 +45,8 @@ from repro.core.results import (SolveStatus, classify_status,  # noqa: E402
 from repro.serve import (DriverCache, FitRequest, MicroBatcher,  # noqa: E402
                          RecoveryPolicy, ServeMetrics, ServeOptions,
                          ServiceOverloaded, Signature, SolveDiverged,
-                         UnknownClient, WarmPool, solve_batch)
+                         UnknownClient, WarmPool, solve_batch,
+                         solve_update_batch)
 
 PROBLEM = api.SparseProblem(loss="squared", kappa=3, gamma=5.0)
 OPTIONS = api.SolverOptions(max_iter=300, tol=1e-3)
@@ -285,6 +291,68 @@ def test_no_recovery_policy_fails_immediately():
         (_, out), = _dispatch([_req(X, y)], drivers, recovery=None)
     assert isinstance(out, SolveDiverged)
     assert drivers.metrics.lane_retries == 0
+
+
+# --------------------------------------------------------------------------
+# the streaming update path under faults
+# --------------------------------------------------------------------------
+def _dispatch_update(Xc, yc, drivers, pool, client="s0"):
+    batcher = MicroBatcher(max_batch=64)
+    batcher.add(_req(Xc, yc, client_id=client, update=True), 10.0)
+    (batch,) = batcher.flush()
+    (outcome,) = solve_update_batch(batch, drivers, pool, drivers.metrics,
+                                    clock=lambda: 10.0)
+    return outcome
+
+
+def test_poisoned_stream_accumulator_recovers_via_refactorize_rung():
+    """A non-finite accumulator poisoning a warm-pool stream entry routes
+    the next update through the full-refactorization recovery rung:
+    factors rebuilt from the replay window, the attempt logged, and the
+    refit converged to the same model as a clean batch solve."""
+    X, y = _data(14, m=48)
+    drivers = DriverCache(PROBLEM, OPTIONS, ServeMetrics())
+    pool = WarmPool()
+    (_, out1) = _dispatch_update(X[:24], y[:24], drivers, pool)
+    assert not isinstance(out1, Exception) and out1.streamed
+
+    eng = pool.peek(("s0", SIG)).stream
+    eng._acc = dataclasses.replace(
+        eng._acc, Atb=eng._acc.Atb.at[0].set(jnp.nan))
+    eng._fcache = None
+
+    (_, out2) = _dispatch_update(X[24:], y[24:], drivers, pool)
+    assert not isinstance(out2, Exception)
+    assert out2.status == CONVERGED and out2.m_window == 48
+    stages = [a.stage for a in out2.recovery]
+    assert "refactorize" in stages
+    assert any("non-finite" in a.detail for a in out2.recovery)
+    assert drivers.metrics.stream_refactorizations == 1
+    assert eng.refactorizations == 1
+    # the rebuilt stream still matches the clean batch fit exactly
+    solo = api.solve(PROBLEM, X, y, options=OPTIONS)
+    np.testing.assert_allclose(out2.result.coef, solo.coef,
+                               rtol=0.0, atol=5e-5)
+    # and the pooled entry is finite again
+    entry = pool.peek(("s0", SIG))
+    assert all(bool(jnp.isfinite(leaf).all())
+               for leaf in jax.tree.leaves(entry.state)
+               if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.inexact))
+
+
+def test_poisoned_update_chunk_fails_closed_at_the_lane():
+    """NaN rows in the chunk itself poison the replay window — nothing to
+    rebuild from, so the lane fails with SolveDiverged and no state (or
+    stream) enters the pool."""
+    X, y = _data(15)
+    bad = np.array(X)
+    bad[0, 0] = np.nan
+    drivers = DriverCache(PROBLEM, OPTIONS, ServeMetrics())
+    pool = WarmPool()
+    (_, out) = _dispatch_update(bad, y, drivers, pool, client="victim")
+    assert isinstance(out, SolveDiverged)
+    assert ("victim", SIG) not in pool
+    assert drivers.metrics.failed_lanes == 1
 
 
 # --------------------------------------------------------------------------

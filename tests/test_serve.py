@@ -12,9 +12,14 @@ The contract under test:
   fewer iterations than its cold fit;
 * the warm pool's LRU eviction bounds entries and bytes;
 * per-lane iteration caps clamp the fleet driver exactly (cap 0 lanes
-  are inert), and the driver cache never recompiles a seen shape.
+  are inert), and the driver cache never recompiles a seen shape;
+* streaming ``update`` requests ride their own micro-batches, resolve to
+  the SAME fit as a batch solve of the concatenated rows, and keep the
+  client's stream in the (byte-accounted) warm pool — while the iteration
+  -rate estimator sees only full cold solves, never warm/update refits.
 """
 import asyncio
+import time
 from concurrent.futures import Future as ThreadFuture
 
 import jax.numpy as jnp
@@ -26,7 +31,8 @@ from repro.core import fleet as fleet_mod
 from repro.serve import (DeadlineExceeded, DriverCache, FitRequest,
                          IterRateEstimator, MicroBatcher, ServeMetrics,
                          ServeOptions, ServiceStopped, Signature, WarmEntry,
-                         WarmPool, next_pow2, pytree_nbytes, solve_batch)
+                         WarmPool, next_pow2, pytree_nbytes, solve_batch,
+                         solve_update_batch)
 
 Z_TOL = dict(rtol=0.0, atol=5e-5)   # fp round-off band for f32 iterates
 
@@ -336,6 +342,143 @@ def test_manual_rate_fallback_until_calibrated(drivers):
 
 
 # --------------------------------------------------------------------------
+# the streaming update path (online partial_fit over the serve plane)
+# --------------------------------------------------------------------------
+def _update_req(X, y, client, **kw):
+    kw.setdefault("future", ThreadFuture())
+    return FitRequest(X=X, y=y, signature=SIG, client_id=client,
+                      update=True, **kw)
+
+
+def _dispatch_updates(reqs, drivers, pool, metrics=None, now=10.0, **kw):
+    batcher = MicroBatcher(max_batch=64)
+    for r in reqs:
+        batcher.add(r, now)
+    (batch,) = batcher.flush()
+    return solve_update_batch(batch, drivers, pool,
+                              metrics if metrics is not None
+                              else drivers.metrics,
+                              clock=lambda: now, **kw)
+
+
+def test_update_and_fit_requests_never_share_a_batch():
+    b = MicroBatcher(max_batch=2, max_wait_s=1.0)
+    X, y = _request_data(0)
+    assert b.add(_req(X, y), now=0.0) is None
+    # same signature, but an update request: it must open its OWN batch,
+    # never close (or ride) the plain-fit one
+    assert b.add(_update_req(X, y, "c0"), now=0.0) is None
+    assert b.pending_requests == 2
+    full = b.add(_update_req(X, y, "c1"), now=0.0)
+    assert full is not None and all(r.update for r in full.requests)
+    full = b.add(_req(X, y), now=0.0)
+    assert full is not None and not any(r.update for r in full.requests)
+
+
+def test_update_lanes_match_batch_fit_and_reuse_pool(drivers):
+    """Differential core of the update path: two streamed chunks produce
+    the same fit as one batch solve of the concatenated rows, with the
+    second update resuming warm from the pooled stream."""
+    X, y = _request_data(30, m=48)
+    pool = WarmPool()
+    (r1, out1), = _dispatch_updates(
+        [_update_req(X[:24], y[:24], "c0")], drivers, pool)
+    assert not isinstance(out1, Exception)
+    assert out1.streamed and not out1.warm and out1.m_window == 24
+    entry = pool.peek(("c0", SIG))
+    assert entry is not None and entry.stream is not None
+    # satellite: pool byte accounting charges the stream's factor and
+    # accumulator buffers, not just the resumable state
+    assert entry.nbytes > pytree_nbytes(
+        (entry.state, entry.coef, entry.support))
+    (r2, out2), = _dispatch_updates(
+        [_update_req(X[24:], y[24:], "c0")], drivers, pool)
+    assert not isinstance(out2, Exception)
+    assert out2.streamed and out2.warm and out2.m_window == 48
+    solo = api.solve(PROBLEM, X, y, options=OPTIONS)
+    assert bool(jnp.array_equal(out2.result.support, solo.support))
+    np.testing.assert_allclose(out2.result.coef, solo.coef, **Z_TOL)
+
+
+def test_update_lanes_batch_together(drivers):
+    pool = WarmPool()
+    metrics = ServeMetrics()
+    reqs = [_update_req(*_request_data(40 + i), f"u{i}") for i in range(3)]
+    outcomes = _dispatch_updates(reqs, drivers, pool, metrics=metrics)
+    assert len(outcomes) == 3
+    for _, out in outcomes:
+        assert not isinstance(out, Exception)
+        assert out.streamed and out.batch_lanes == 3
+    assert metrics.update_lanes == 3 and metrics.pad_lanes == 1
+    assert len(pool) == 3
+
+
+def test_plain_fit_preserves_stream_without_feeding_it(drivers):
+    """A full fit refreshes the client's model but neither feeds nor
+    drops the stream: it holds exactly the rows sent via updates."""
+    X, y = _request_data(33, m=48)
+    pool = WarmPool()
+    _dispatch_updates([_update_req(X[:24], y[:24], "c0")], drivers, pool)
+    (_, fit_out), = _dispatch([_req(X, y, client_id="c0")], drivers,
+                              pool=pool)
+    assert not isinstance(fit_out, Exception) and not fit_out.streamed
+    entry = pool.peek(("c0", SIG))
+    assert entry.stream is not None and entry.stream.m_window == 24
+    (_, out), = _dispatch_updates(
+        [_update_req(X[24:], y[24:], "c0")], drivers, pool)
+    assert out.m_window == 48
+
+
+def test_iter_rate_skips_non_full_solve_samples():
+    est = IterRateEstimator(alpha=0.5, min_samples=1)
+    est.observe(SIG, 100, 1.0, full_solve=False)   # all-warm/update batch
+    assert est.samples(SIG) == 0 and est.rate(SIG) is None
+    est.observe(SIG, 100, 1.0)
+    assert est.samples(SIG) == 1 and est.rate(SIG) == pytest.approx(100.0)
+
+
+def test_all_warm_batch_does_not_feed_estimator(drivers):
+    X, y = _request_data(31)
+    pool = WarmPool()
+    est = IterRateEstimator(alpha=1.0, min_samples=1)
+    for _ in range(2):
+        batcher = MicroBatcher(max_batch=64)
+        batcher.add(_req(X, y, client_id="c1"), time.monotonic())
+        (batch,) = batcher.flush()
+        solve_batch(batch, drivers, pool, drivers.metrics,
+                    rate_estimator=est, clock=time.monotonic)
+    # the cold first batch observed; the all-warm refit did not
+    assert est.samples(SIG) == 1
+
+
+def test_service_online_updates_end_to_end():
+    async def scenario():
+        service = _service()
+        async with service:
+            X, y = _request_data(32, m=48)
+            out1 = await service.update(X[:24], y[:24], client_id="s0")
+            out2 = await service.update(X[24:], y[24:], client_id="s0")
+            yhat = await service.predict(X, client_id="s0")
+            with pytest.raises(ValueError, match="client_id"):
+                await service.update(X[:4], y[:4], client_id=None)
+            with pytest.raises(ValueError, match="2-D"):
+                await service.update(X[None, :4], y[:4], client_id="s0")
+        return service, X, y, out1, out2, yhat
+
+    service, X, y, out1, out2, yhat = asyncio.run(scenario())
+    assert out1.streamed and not out1.warm and out1.m_window == 24
+    assert out2.streamed and out2.warm and out2.m_window == 48
+    assert yhat.shape == (48,)
+    solo = api.solve(PROBLEM, X, y, options=OPTIONS)
+    np.testing.assert_allclose(out2.result.coef, solo.coef, **Z_TOL)
+    snap = service.snapshot()
+    assert snap["updates"] == 2 and snap["update_lanes"] == 2
+    assert snap["stream_refactorizations"] == 0
+    assert snap["rejected"] == 2
+    assert snap["pool_entries"] == 1 and snap["pool_nbytes"] > 0
+
+
+# --------------------------------------------------------------------------
 # the async plane end to end
 # --------------------------------------------------------------------------
 def _service(**kw):
@@ -366,9 +509,10 @@ def test_service_end_to_end_batches_and_warms():
     snap = service.snapshot()
     assert snap["completed"] == 5 and snap["batches"] == 2
     assert snap["warm_hits"] == 1 and snap["pool_entries"] == 4
-    # both batches fed the rate estimator for the one live signature
+    # only the cold batch fed the rate estimator: the second batch was
+    # all-warm (a resume-cost sample, not a cold-solve rate)
     (rate_row,) = snap["iter_rate"].values()
-    assert rate_row["samples"] == 2 and rate_row["rate"] > 0
+    assert rate_row["samples"] == 1 and rate_row["rate"] > 0
 
 
 def test_service_deadline_paths_fail_cleanly_and_fast():

@@ -1,0 +1,418 @@
+"""The streaming solve subsystem (``repro.stream``), certified
+differentially.
+
+The contract under test, bottom-up:
+
+* **factor primitives** — rank-k Cholesky up/downdates and the bordered
+  append agree with a recomputed factorization near machine precision,
+  and a downdate that loses positive-definiteness says so (``ok=False``)
+  instead of returning garbage;
+* **the streaming engine** — ``partial_fit`` over T chunks lands on the
+  SAME model as one batch fit on the concatenated data, in every
+  squared-loss regime (dense / woodbury / pcg), with sliding windows
+  (eviction downdates), with ``window=0`` (no replay rows at all), with
+  per-refit penalty overrides (the maintained-Gram eigh fallback), and
+  across regime transitions; the maintained factor itself stays equal to
+  a from-scratch Cholesky of the window's Gram;
+* **non-convex honesty** — direct-regime (logistic) streaming warm-starts
+  cannot promise iterate parity with a cold batch fit, so the contract is
+  recovery *quality*: converged status, planted-support F1, training
+  accuracy;
+* **fault routing** — a poisoned accumulator triggers the refactorize
+  recovery rung (rebuilt from the replay window, logged on the result);
+  a poisoned *window* fails closed with ``SolveDiverged``;
+* **precision stability** — under bf16/fp16 policies the accumulators
+  and resumable state stay pinned f32 through absorb/refit round trips;
+* **the API layer** — ``repro.api.stream`` / estimator ``partial_fit``
+  produce the batch-fit model, and the capability gate refuses engines
+  that cannot maintain factors incrementally.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.core import BiCADMM, BiCADMMConfig, prox
+from repro.core.recovery import SolveDiverged
+from repro.core.results import SolveStatus
+from repro.core.streaming import StreamingBiCADMM
+from repro.data import SyntheticSpec, make_sparse_classification
+from repro.stream import (chol_append, chol_downdate, chol_update, stream)
+
+CONVERGED = int(SolveStatus.CONVERGED)
+DIVERGED = int(SolveStatus.DIVERGED)
+
+
+def _support_f1(true_sup, got_sup):
+    tp = np.sum(true_sup & got_sup)
+    return 2 * tp / (true_sup.sum() + got_sup.sum())
+
+
+def _chunks(seed, n=24, kappa=4, T=5, m=20, noise=0.01):
+    """T row chunks from one planted-sparse linear model."""
+    rng = np.random.default_rng(seed)
+    w = np.zeros(n, np.float32)
+    idx = rng.choice(n, kappa, replace=False)
+    w[idx] = (2.0 + rng.random(kappa)).astype(np.float32)
+    out = []
+    for _ in range(T):
+        X = rng.standard_normal((m, n)).astype(np.float32)
+        y = (X @ w + noise * rng.standard_normal(m)).astype(np.float32)
+        out.append((X, y))
+    return out, w
+
+
+def _cfg(kappa=4, **kw):
+    kw.setdefault("gamma", 10.0)
+    kw.setdefault("rho_c", 1.0)
+    kw.setdefault("alpha", 0.5)
+    kw.setdefault("max_iter", 400)
+    kw.setdefault("tol", 1e-5)
+    return BiCADMMConfig(kappa=kappa, **kw)
+
+
+def _batch_fit(cfg, chunks):
+    X = np.concatenate([c[0] for c in chunks])
+    y = np.concatenate([c[1] for c in chunks])
+    return BiCADMM("squared", cfg).fit(X[None], y[None])
+
+
+def _spd(rng, n, scale=1.0):
+    A = rng.standard_normal((n + 4, n)).astype(np.float32) * scale
+    return A.T @ A + np.eye(n, dtype=np.float32)
+
+
+# --------------------------------------------------------------------------
+# the Cholesky primitives: parity vs recomputed factors
+# --------------------------------------------------------------------------
+def test_chol_update_matches_recomputed_factor():
+    rng = np.random.default_rng(0)
+    M = _spd(rng, 12)
+    V = rng.standard_normal((12, 3)).astype(np.float32)
+    L = np.linalg.cholesky(M)
+    got = np.asarray(chol_update(jnp.asarray(L), jnp.asarray(V)))
+    ref = np.linalg.cholesky(M + V @ V.T)
+    np.testing.assert_allclose(got, ref, atol=1e-4, rtol=1e-4)
+
+
+def test_chol_downdate_matches_and_flags_lost_pd():
+    rng = np.random.default_rng(1)
+    base = _spd(rng, 10)
+    V = rng.standard_normal((10, 2)).astype(np.float32)
+    L = np.linalg.cholesky(base + V @ V.T)
+    got, ok = chol_downdate(jnp.asarray(L), jnp.asarray(V))
+    assert bool(ok)
+    np.testing.assert_allclose(np.asarray(got), np.linalg.cholesky(base),
+                               atol=1e-3, rtol=1e-3)
+    # removing more mass than the factor holds must be reported, not
+    # silently returned as a garbage factor
+    _, ok_bad = chol_downdate(jnp.asarray(np.linalg.cholesky(base)),
+                              jnp.asarray(10.0 * V))
+    assert not bool(ok_bad)
+
+
+def test_chol_append_matches_bordered_factor():
+    rng = np.random.default_rng(2)
+    n1, n2 = 9, 4
+    M = _spd(rng, n1 + n2)
+    L11 = np.linalg.cholesky(M[:n1, :n1])
+    got = np.asarray(chol_append(jnp.asarray(L11),
+                                 jnp.asarray(M[:n1, n1:]),
+                                 jnp.asarray(M[n1:, n1:])))
+    ref = np.linalg.cholesky(M)
+    np.testing.assert_allclose(got, ref, atol=1e-4, rtol=1e-4)
+
+
+def test_rank1_vector_update_shape():
+    rng = np.random.default_rng(3)
+    M = _spd(rng, 6)
+    v = rng.standard_normal(6).astype(np.float32)
+    L = np.linalg.cholesky(M)
+    got = np.asarray(chol_update(jnp.asarray(L), jnp.asarray(v)))
+    ref = np.linalg.cholesky(M + np.outer(v, v))
+    np.testing.assert_allclose(got, ref, atol=1e-4, rtol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# the engine, differentially: partial_fit over T chunks == one batch fit
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("window", [None, 0])
+def test_dense_stream_equals_batch(window):
+    chunks, w = _chunks(10)
+    cfg = _cfg()
+    eng = StreamingBiCADMM("squared", cfg, window=window)
+    for X, y in chunks:
+        res = eng.partial_fit(X, y)
+    assert eng.mode == "dense"
+    assert eng.m_seen == sum(X.shape[0] for X, _ in chunks)
+    if window == 0:
+        assert eng._chunks == []       # truly no replay rows
+    batch = _batch_fit(cfg, chunks)
+    assert np.array_equal(np.asarray(res.support), np.asarray(batch.support))
+    np.testing.assert_allclose(np.asarray(res.coef).ravel(),
+                               np.asarray(batch.x), atol=5e-5)
+
+
+@pytest.mark.parametrize("x_solver,atol", [("woodbury", 5e-5),
+                                           ("pcg", 5e-4)])
+def test_woodbury_and_pcg_streams_equal_batch(x_solver, atol):
+    chunks, w = _chunks(11, n=40, m=8, T=4)
+    cfg = _cfg(x_solver=x_solver)
+    eng = StreamingBiCADMM("squared", cfg)
+    for X, y in chunks:
+        res = eng.partial_fit(X, y)
+    assert eng.mode == x_solver
+    batch = _batch_fit(cfg, chunks)
+    assert np.array_equal(np.asarray(res.support), np.asarray(batch.support))
+    np.testing.assert_allclose(np.asarray(res.coef).ravel(),
+                               np.asarray(batch.x), atol=atol)
+
+
+@pytest.mark.parametrize("x_solver", ["auto", "woodbury"])
+def test_sliding_window_equals_batch_on_window(x_solver):
+    """With window=w the fit must equal a batch fit on the last w chunks
+    only — eviction downdates remove the old rows *exactly*."""
+    n = 24 if x_solver == "auto" else 40
+    chunks, _ = _chunks(12, n=n, m=10, T=6)
+    cfg = _cfg(x_solver=x_solver)
+    eng = StreamingBiCADMM("squared", cfg, window=2)
+    for X, y in chunks:
+        res = eng.partial_fit(X, y)
+    assert eng.m_window == 20
+    batch = _batch_fit(cfg, chunks[-2:])
+    assert np.array_equal(np.asarray(res.support), np.asarray(batch.support))
+    np.testing.assert_allclose(np.asarray(res.coef).ravel(),
+                               np.asarray(batch.x), atol=1e-4)
+
+
+def test_maintained_factor_equals_recomputed_cholesky():
+    """After a mixed absorb/evict history the maintained dense factor is
+    still chol(G_window + c I) to factor-recompute parity."""
+    chunks, _ = _chunks(13, n=16, m=12, T=6)
+    cfg = _cfg()
+    eng = StreamingBiCADMM("squared", cfg, window=3)
+    for X, y in chunks:
+        eng.partial_fit(X, y)
+    A = np.concatenate([np.asarray(c[0]) for c in eng._chunks])
+    G = A.T @ A
+    ref = np.linalg.cholesky(G + eng._c * np.eye(A.shape[1],
+                                                 dtype=G.dtype))
+    np.testing.assert_allclose(np.asarray(eng._acc.L), ref,
+                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(eng._acc.G), G,
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_dynamic_penalty_refit_uses_maintained_gram(monkeypatch):
+    """Per-refit gamma/rho_c overrides run the eigh fallback over the
+    maintained Gram and still match a batch fit at those penalties."""
+    chunks, _ = _chunks(14)
+    cfg = _cfg()
+    eng = StreamingBiCADMM("squared", cfg)
+    for X, y in chunks[:-1]:
+        eng.partial_fit(X, y)
+    res = eng.partial_fit(*chunks[-1], gamma=25.0, rho_c=0.5)
+    cfg_over = _cfg(gamma=25.0, rho_c=0.5)
+    batch = _batch_fit(cfg_over, chunks)
+    assert np.array_equal(np.asarray(res.support), np.asarray(batch.support))
+    np.testing.assert_allclose(np.asarray(res.coef).ravel(),
+                               np.asarray(batch.x), atol=1e-4)
+
+
+def test_regime_transition_woodbury_to_pcg(monkeypatch):
+    """Growth past the woodbury bound rebuilds the new regime's
+    accumulators from the window and keeps the batch-fit contract."""
+    monkeypatch.setattr(prox, "DENSE_MAX_N", 4)
+    monkeypatch.setattr(prox, "WOODBURY_MAX_M", 30)
+    chunks, _ = _chunks(15, n=20, m=8, T=5)
+    cfg = _cfg()
+    eng = StreamingBiCADMM("squared", cfg)
+    modes = []
+    for X, y in chunks:
+        res = eng.partial_fit(X, y)
+        modes.append(eng.mode)
+    assert modes[0] == "woodbury" and modes[-1] == "pcg"
+    batch = _batch_fit(cfg, chunks)
+    assert np.array_equal(np.asarray(res.support), np.asarray(batch.support))
+    np.testing.assert_allclose(np.asarray(res.coef).ravel(),
+                               np.asarray(batch.x), atol=5e-4)
+
+
+def test_direct_regime_streaming_recovers_the_planted_model():
+    """Logistic (Newton-CG x-update) streams warm-start ``run_from`` on
+    the replay window. The objective is non-convex in (x, s, t), so a
+    warm-streamed trajectory need not match a cold batch fit iterate--
+    for-iterate; the contract is recovery quality on the planted model."""
+    spec = SyntheticSpec(3, 400, 40, sparsity_level=0.75, noise=0.0)
+    As, bs, x_true = make_sparse_classification(3, spec)
+    X = np.asarray(As).reshape(-1, As.shape[-1])
+    y = np.asarray(bs).reshape(-1)
+    cfg = BiCADMMConfig(kappa=spec.kappa, gamma=50.0, rho_c=0.5, alpha=0.5,
+                        max_iter=250, tol=3e-4)
+    eng = StreamingBiCADMM("logistic", cfg)
+    T = 4
+    for Xc, yc in zip(np.array_split(X, T), np.array_split(y, T)):
+        res = eng.partial_fit(Xc, yc)
+    assert eng.mode == "direct"
+    assert int(res.status) == CONVERGED
+    f1 = _support_f1(np.asarray(x_true != 0), np.asarray(res.support))
+    assert f1 >= 0.8, f1
+    pred = X @ np.asarray(res.coef).ravel()
+    acc = float(np.mean(np.sign(pred) == y))
+    assert acc > 0.9, acc
+
+
+# --------------------------------------------------------------------------
+# drift probe + fault routing
+# --------------------------------------------------------------------------
+def test_drift_probe_reprojects_on_distribution_shift():
+    rng = np.random.default_rng(16)
+    n, kap, m = 24, 4, 40
+    w1 = np.zeros(n, np.float32)
+    w1[:kap] = 3.0
+    w2 = np.zeros(n, np.float32)
+    w2[-kap:] = 3.0
+    cfg = _cfg(kappa=kap)
+    eng = StreamingBiCADMM("squared", cfg, window=1, drift_tol=0.5)
+
+    def chunk(w):
+        X = rng.standard_normal((m, n)).astype(np.float32)
+        return X, (X @ w).astype(np.float32)
+
+    eng.partial_fit(*chunk(w1))
+    assert eng.drift_reprojections == 0
+    res = eng.partial_fit(*chunk(w2))     # support moves entirely
+    assert eng.drift_reprojections == 1
+    assert np.array_equal(np.asarray(res.support), w2 != 0)
+
+
+def test_poisoned_accumulator_recovers_via_refactorize_rung():
+    chunks, _ = _chunks(17)
+    cfg = _cfg()
+    eng = StreamingBiCADMM("squared", cfg)
+    for X, y in chunks[:-1]:
+        eng.partial_fit(X, y)
+    eng._acc = dataclasses.replace(
+        eng._acc, Atb=eng._acc.Atb.at[0].set(jnp.nan))
+    eng._fcache = None
+    res = eng.partial_fit(*chunks[-1])
+    assert eng.refactorizations == 1
+    stages = [a.stage for a in res.recovery]
+    details = [a.detail for a in res.recovery]
+    assert stages == ["refactorize"]
+    assert "non-finite streaming accumulator" in details
+    batch = _batch_fit(cfg, chunks)
+    assert np.array_equal(np.asarray(res.support), np.asarray(batch.support))
+    np.testing.assert_allclose(np.asarray(res.coef).ravel(),
+                               np.asarray(batch.x), atol=5e-5)
+
+
+def test_poisoned_window_fails_closed():
+    """When the replay window itself is non-finite, refactorization cannot
+    help — the stream fails with SolveDiverged, never a silent NaN fit."""
+    chunks, _ = _chunks(18)
+    cfg = _cfg()
+    eng = StreamingBiCADMM("squared", cfg)
+    eng.partial_fit(*chunks[0])
+    X_bad = np.asarray(chunks[1][0]).copy()
+    X_bad[0, 0] = np.nan
+    with pytest.raises(SolveDiverged, match="window itself is poisoned"):
+        eng.partial_fit(X_bad, chunks[1][1])
+
+
+def test_window_zero_requires_dense():
+    cfg = _cfg(x_solver="woodbury")
+    eng = StreamingBiCADMM("squared", cfg, window=0)
+    chunks, _ = _chunks(19, n=40, m=8, T=1)
+    with pytest.raises(ValueError, match="only valid in the dense"):
+        eng.partial_fit(*chunks[0])
+
+
+def test_feature_split_is_rejected():
+    cfg = _cfg(n_feature_blocks=4)
+    with pytest.raises(ValueError, match="n_feature_blocks=1"):
+        StreamingBiCADMM("squared", cfg)
+
+
+# --------------------------------------------------------------------------
+# precision: accumulators + resumable state stay pinned f32
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("preset,data_dt", [("bf16", jnp.bfloat16),
+                                            ("fp16", jnp.float16)])
+def test_reduced_precision_state_stays_f32(preset, data_dt):
+    chunks, _ = _chunks(20, n=16, m=16, T=3)
+    cfg = _cfg(tol=1e-3, precision=preset)
+    eng = StreamingBiCADMM("squared", cfg)
+    for X, y in chunks:
+        res = eng.partial_fit(X, y)
+        # data is stored reduced, every accumulator and the resumable
+        # state stay pinned f32 — across the whole round trip
+        assert eng._chunks[0][0].dtype == jnp.dtype(data_dt)
+        assert all(leaf.dtype == jnp.float32
+                   for leaf in jax.tree.leaves(eng._acc))
+        assert res.state.z.dtype == jnp.float32
+        assert res.state.x.dtype == jnp.float32
+    # and a run_from resume on the window keeps the pin too
+    A_win, y_win = eng._window_data()
+    out = eng.solver.run_from(A_win[None], y_win[None], res.state)
+    assert out.state.z.dtype == jnp.float32
+
+
+# --------------------------------------------------------------------------
+# the API layer: stream(), estimators, capability gate
+# --------------------------------------------------------------------------
+def test_api_stream_equals_api_solve():
+    chunks, _ = _chunks(21)
+    problem = api.SparseProblem(loss="squared", kappa=4, gamma=10.0)
+    options = api.SolverOptions(max_iter=400, tol=1e-5)
+    s = stream(problem, options=options)
+    for X, y in chunks:
+        res = s.partial_fit(X, y)
+    assert s.mode == "dense"
+    assert s.m_seen == sum(X.shape[0] for X, _ in chunks)
+    X_all = np.concatenate([c[0] for c in chunks])
+    y_all = np.concatenate([c[1] for c in chunks])
+    batch = api.solve(problem, X_all, y_all, options=options)
+    assert np.array_equal(np.asarray(res.support),
+                          np.asarray(batch.support))
+    np.testing.assert_allclose(np.asarray(res.coef),
+                               np.asarray(batch.coef), atol=5e-5)
+
+
+def test_capabilities_stream_gate():
+    assert api.engine_capabilities("reference").stream
+    assert not api.engine_capabilities("sharded").stream
+    problem = api.SparseProblem(loss="squared", kappa=4, gamma=10.0)
+    mesh = jax.make_mesh((1, 1), ("nodes", "feat"))
+    sharded = api.SolverOptions(engine="sharded", mesh=mesh)
+    with pytest.raises(api.CapabilityError, match="cannot stream"):
+        api.stream(problem, options=sharded)
+
+
+def test_estimator_partial_fit_matches_fit():
+    chunks, _ = _chunks(22)
+    X_all = np.concatenate([c[0] for c in chunks])
+    y_all = np.concatenate([c[1] for c in chunks])
+    kw = dict(kappa=4, gamma=10.0, max_iter=400, tol=1e-5)
+    inc = api.SparseLinearRegression(**kw)
+    for X, y in chunks:
+        inc.partial_fit(X, y)
+    assert inc.engine_ == "streaming"
+    full = api.SparseLinearRegression(**kw).fit(X_all, y_all)
+    np.testing.assert_allclose(np.asarray(inc.coef_),
+                               np.asarray(full.coef_), atol=5e-5)
+    assert inc.score(X_all, y_all) > 0.99
+    # a full fit resets the open stream
+    inc.fit(X_all, y_all)
+    assert inc._stream is None
+
+
+def test_estimator_partial_fit_window_honored():
+    chunks, _ = _chunks(23, T=4, m=10)
+    est = api.SparseLinearRegression(kappa=4, gamma=10.0)
+    for X, y in chunks:
+        est.partial_fit(X, y, window=2)
+    assert est._stream.engine.m_window == 20
